@@ -1,0 +1,159 @@
+"""Paper Figs 5–7: tail-latency control in an LSM KVS (§6.2), scaled down.
+
+Four systems — baseline / auto-tuned / SILK-like / PAIO — run the same bursty
+client workload against MiniLSM on a 20 MiB/s disk. PAIO mode changes *zero*
+engine scheduling code: a stage intercepts the flows (context propagation)
+and the control plane runs Algorithm 1.
+
+Usage: python -m benchmarks.bench_tail_latency [--seconds 8] [--workload mixture]
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+from repro.core import (
+    BG_COMPACTION_HIGH,
+    BG_COMPACTION_L0,
+    BG_FLUSH,
+    ControlPlane,
+    DifferentiationRule,
+    FlowSpec,
+    HousekeepingRule,
+    Stage,
+    TailLatencyControl,
+)
+from .minilsm import KiB, MiB, LSMConfig, MiniLSM
+
+WORKLOADS = {"mixture": 0.5, "read_heavy": 0.9, "write_heavy": 0.1}
+
+
+def build_paio_stage(disk_bw: float) -> Tuple[Stage, ControlPlane]:
+    stage = Stage("minilsm")
+    for ch in ("fg", "flush", "l0", "ln"):
+        stage.hsk_rule(HousekeepingRule(op="create_channel", channel=ch))
+    for ch in ("flush", "l0", "ln"):
+        stage.hsk_rule(
+            HousekeepingRule(
+                op="create_object", channel=ch, object_id="0", object_kind="drl",
+                params={"rate": disk_bw * 0.2},
+            )
+        )
+    stage.dif_rule(DifferentiationRule(channel="flush", match={"request_context": BG_FLUSH}))
+    stage.dif_rule(DifferentiationRule(channel="l0", match={"request_context": BG_COMPACTION_L0}))
+    stage.dif_rule(DifferentiationRule(channel="ln", match={"request_context": BG_COMPACTION_HIGH}))
+    stage.dif_rule(DifferentiationRule(channel="fg", match={"request_context": ""}))
+    algo = TailLatencyControl(
+        fg=FlowSpec("minilsm", "fg"),
+        flush=FlowSpec("minilsm", "flush"),
+        l0=FlowSpec("minilsm", "l0"),
+        ln=[FlowSpec("minilsm", "ln")],
+        kvs_bandwidth=disk_bw,
+        min_bandwidth=disk_bw * 0.05,
+        loop_interval=0.05,
+    )
+    cp = ControlPlane(algo)
+    cp.register_stage(stage)
+    return stage, cp
+
+
+@dataclass
+class RunResult:
+    mode: str
+    workload: str
+    latencies_ms: List[float] = field(default_factory=list)
+    ops: int = 0
+    seconds: float = 0.0
+    stall_seconds: float = 0.0
+    stall_events: int = 0
+
+    def percentile(self, q: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        data = sorted(self.latencies_ms)
+        return data[min(int(q / 100 * len(data)), len(data) - 1)]
+
+    @property
+    def throughput(self) -> float:
+        return self.ops / max(self.seconds, 1e-9)
+
+
+def run_system(mode: str, workload: str = "mixture", seconds: float = 8.0, n_clients: int = 4) -> RunResult:
+    read_ratio = WORKLOADS[workload]
+    cfg = LSMConfig(mode=mode)
+    stage = cp = None
+    if mode == "paio":
+        stage, cp = build_paio_stage(cfg.disk_bandwidth)
+        cp.start()
+    lsm = MiniLSM(cfg, stage=stage).start()
+    result = RunResult(mode=mode, workload=workload)
+    lock = threading.Lock()
+    stop = threading.Event()
+    t_start = time.monotonic()
+
+    def client(cid: int) -> None:
+        import random
+
+        rng = random.Random(cid)
+        while not stop.is_set():
+            t = time.monotonic() - t_start
+            # bursty load: 1.5 s valley, then 2 s peak / 0.5 s valley cycles
+            in_peak = t > 1.5 and ((t - 1.5) % 2.5) < 2.0
+            rate = (1500 if in_peak else 300) / n_clients
+            t0 = time.monotonic()
+            if rng.random() < read_ratio:
+                lsm.get(b"k%d" % rng.randrange(100000))
+            else:
+                lsm.put(b"k%d" % rng.randrange(100000), cfg.value_bytes)
+            dt = time.monotonic() - t0
+            with lock:
+                result.latencies_ms.append(dt * 1e3)
+                result.ops += 1
+            pace = 1.0 / rate - dt
+            if pace > 0:
+                time.sleep(pace)
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True) for i in range(n_clients)]
+    for t in threads:
+        t.start()
+    time.sleep(seconds)
+    stop.set()
+    for t in threads:
+        t.join(timeout=2.0)
+    result.seconds = time.monotonic() - t_start
+    lsm.stop()
+    if cp is not None:
+        cp.stop()
+    result.stall_seconds = lsm.stall_seconds
+    result.stall_events = lsm.stall_events
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seconds", type=float, default=8.0)
+    ap.add_argument("--workload", default="mixture", choices=list(WORKLOADS))
+    ap.add_argument("--modes", default="baseline,autotuned,silk,paio")
+    args = ap.parse_args()
+
+    print(f"workload={args.workload} duration={args.seconds}s")
+    print(f"{'system':<10} {'kops/s':>8} {'p50 ms':>8} {'p99 ms':>8} {'p999 ms':>8} {'stalls':>7} {'stall s':>8}")
+    results = {}
+    for mode in args.modes.split(","):
+        r = run_system(mode, args.workload, args.seconds)
+        results[mode] = r
+        print(
+            f"{mode:<10} {r.throughput/1e3:>8.2f} {r.percentile(50):>8.2f} {r.percentile(99):>8.2f} "
+            f"{r.percentile(99.9):>8.2f} {r.stall_events:>7d} {r.stall_seconds:>8.2f}"
+        )
+    if "baseline" in results and "paio" in results:
+        b, p = results["baseline"], results["paio"]
+        if p.percentile(99) > 0:
+            print(f"\np99 improvement (baseline/paio): {b.percentile(99) / max(p.percentile(99), 1e-9):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,277 @@
+"""Mini-LSM: a threaded LSM key-value store over a bandwidth-limited disk.
+
+The laptop-scale stand-in for RocksDB in the paper's §6.2 experiment, built
+so the *same interference mechanics* emerge:
+
+* client puts go to a memtable; full memtables rotate into a flush queue;
+* a flush thread writes L0 tables (``bg_flush`` flow);
+* compaction threads merge L0→L1 (``bg_compaction_L0_L1``, latency-critical —
+  L0 overflow blocks flushes) and Lk→Lk+1 (``bg_compaction_LN``);
+* **write stalls**: when the flush queue is full (L0 full / flush starved),
+  client puts block — the latency-spike mechanism SILK §2 describes;
+* all flows share one :class:`Disk` (token-bucket bandwidth model), so
+  background traffic steals bandwidth from foreground reads and flushes.
+
+Four operating modes mirror the paper's comparisons:
+  ``baseline``  — no I/O control (RocksDB default),
+  ``autotuned`` — one global background rate limiter that loosens with
+                  backlog (RocksDB auto-tuned rate limiter),
+  ``silk``      — engine-integrated: pause LN compactions under client load,
+                  flush/L0 bypass any limiter (SILK's scheduler),
+  ``paio``      — *no engine changes*: a PAIO stage intercepts each flow via
+                  context propagation; Algorithm 1 on the control plane
+                  retunes the DRL objects (the paper's contribution).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.core import (
+    BG_COMPACTION_HIGH,
+    BG_COMPACTION_L0,
+    BG_FLUSH,
+    Instance,
+    RequestType,
+    Stage,
+    TokenBucket,
+    propagate_context,
+)
+
+KiB = 1024
+MiB = 1024 * KiB
+
+
+class Disk:
+    """Shared storage device: a token bucket at ``bandwidth`` bytes/s."""
+
+    def __init__(self, bandwidth: float) -> None:
+        self.bucket = TokenBucket(rate=bandwidth, capacity=bandwidth * 0.05)
+        self.bytes_read = 0
+        self.bytes_written = 0
+        self._lock = threading.Lock()
+
+    def read(self, n: int) -> None:
+        self.bucket.consume(n)
+        with self._lock:
+            self.bytes_read += n
+
+    def write(self, n: int) -> None:
+        self.bucket.consume(n)
+        with self._lock:
+            self.bytes_written += n
+
+
+@dataclass
+class SSTable:
+    size: int
+    seq: int
+
+
+@dataclass
+class LSMConfig:
+    memtable_bytes: int = 256 * KiB
+    value_bytes: int = 4 * KiB
+    l0_limit: int = 4
+    level_multiplier: int = 3
+    l1_bytes: int = 512 * KiB
+    n_levels: int = 5
+    compaction_threads: int = 2
+    disk_bandwidth: float = 16 * MiB
+    read_io_bytes: int = 8 * KiB
+    mode: str = "baseline"  # baseline | autotuned | silk | paio
+    stall_poll: float = 0.001
+    #: pre-existing level occupancy relative to each level's limit — models
+    #: the paper's 100M-key preload whose compaction debt is worked off
+    #: during the run
+    preload_factor: float = 1.3
+
+
+class MiniLSM:
+    def __init__(self, cfg: LSMConfig, stage: Optional[Stage] = None) -> None:
+        self.cfg = cfg
+        self.disk = Disk(cfg.disk_bandwidth)
+        self.instance = Instance(stage) if stage is not None else None
+        self._mem_bytes = 0
+        self._mem_lock = threading.Condition()
+        self._flush_q: Deque[int] = deque()
+        self._flush_q_limit = 2
+        self._levels: List[List[SSTable]] = [[] for _ in range(cfg.n_levels)]
+        self._levels_lock = threading.Condition()
+        self._seq = 0
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        # autotuned: single shared background limiter (rate tracks backlog)
+        self._bg_limiter = TokenBucket(rate=cfg.disk_bandwidth * 0.25, capacity=cfg.disk_bandwidth * 0.03)
+        # silk: high-level compactions pause while clients were recently active
+        self._last_fg = 0.0
+        self.stall_seconds = 0.0
+        self.stall_events = 0
+
+    # ------------------------------------------------------------------ #
+    # I/O path: every disk access optionally flows through PAIO           #
+    # ------------------------------------------------------------------ #
+    def _io(self, rtype: int, nbytes: int, context: str, is_write: bool) -> None:
+        if self.cfg.mode == "paio" and self.instance is not None:
+            with propagate_context(context):
+                self.instance.enforce(rtype, size=nbytes)
+        elif self.cfg.mode == "autotuned" and context in (BG_FLUSH, BG_COMPACTION_L0, BG_COMPACTION_HIGH):
+            # RocksDB auto-tuned limiter: loosen under backlog (priority-blind)
+            with self._levels_lock:
+                backlog = len(self._levels[0]) >= self.cfg.l0_limit or len(self._flush_q) >= self._flush_q_limit
+            self._bg_limiter.set_rate(self.cfg.disk_bandwidth * (0.6 if backlog else 0.25))
+            self._bg_limiter.consume(nbytes)
+        elif self.cfg.mode == "silk" and context == BG_COMPACTION_HIGH:
+            # SILK pauses high-level compactions while clients are active
+            while not self._stop.is_set() and self._fg_active():
+                time.sleep(0.005)
+        if is_write:
+            self.disk.write(nbytes)
+        else:
+            self.disk.read(nbytes)
+        if self.cfg.mode in ("baseline", "autotuned", "silk") and self.instance is not None:
+            # stage in observation-only mode still counts flows (collect())
+            with propagate_context(context):
+                self.instance.enforce(RequestType.no_op, size=nbytes)
+
+    def _fg_active(self) -> bool:
+        return (time.monotonic() - self._last_fg) < 0.2
+
+    def note_fg(self, nbytes: int) -> None:
+        self._last_fg = time.monotonic()
+
+    # ------------------------------------------------------------------ #
+    # client ops                                                          #
+    # ------------------------------------------------------------------ #
+    def put(self, key: bytes, value_bytes: int) -> float:
+        """Insert; returns seconds stalled (0 when healthy)."""
+        stalled = 0.0
+        t0 = time.monotonic()
+        with self._mem_lock:
+            while self._mem_bytes + value_bytes > self.cfg.memtable_bytes and not self._stop.is_set():
+                if len(self._flush_q) < self._flush_q_limit:
+                    self._flush_q.append(self._mem_bytes)
+                    self._mem_bytes = 0
+                    self._mem_lock.notify_all()
+                    break
+                # flush queue full → WRITE STALL (the latency spike)
+                self.stall_events += 1
+                self._mem_lock.wait(timeout=self.cfg.stall_poll)
+                stalled = time.monotonic() - t0
+            self._mem_bytes += value_bytes
+        self.stall_seconds += stalled
+        self.note_fg(value_bytes)
+        return stalled
+
+    def get(self, key: bytes) -> None:
+        """Point lookup: one disk read through the foreground flow."""
+        self.note_fg(self.cfg.read_io_bytes)
+        self._io(RequestType.read, self.cfg.read_io_bytes, "", is_write=False)
+
+    # ------------------------------------------------------------------ #
+    # background threads                                                  #
+    # ------------------------------------------------------------------ #
+    def _flush_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._mem_lock:
+                if not self._flush_q:
+                    self._mem_lock.wait(timeout=0.01)
+                    continue
+                size = self._flush_q[0]
+            # L0 gate: flushing into a full L0 must wait for L0→L1 compaction
+            with self._levels_lock:
+                while len(self._levels[0]) >= self.cfg.l0_limit and not self._stop.is_set():
+                    self._levels_lock.wait(timeout=0.01)
+            if self._stop.is_set():
+                return
+            self._io(RequestType.write, size, BG_FLUSH, is_write=True)
+            with self._levels_lock:
+                self._seq += 1
+                self._levels[0].append(SSTable(size=size, seq=self._seq))
+                self._levels_lock.notify_all()
+            with self._mem_lock:
+                if self._flush_q:
+                    self._flush_q.popleft()
+                self._mem_lock.notify_all()
+
+    def _pick_compaction(self) -> Optional[int]:
+        """Level to compact, favoring L0 (latency-critical)."""
+        with self._levels_lock:
+            if len(self._levels[0]) >= self.cfg.l0_limit:
+                return 0
+            for lvl in range(1, self.cfg.n_levels - 1):
+                limit = self.cfg.l1_bytes * (self.cfg.level_multiplier ** (lvl - 1))
+                if sum(t.size for t in self._levels[lvl]) > limit:
+                    return lvl
+            if len(self._levels[0]) >= 2:
+                return 0
+        return None
+
+    def _compact(self, lvl: int) -> None:
+        with self._levels_lock:
+            tables = self._levels[lvl]
+            if not tables:
+                return
+            moved = list(tables)
+            self._levels[lvl] = []
+        nbytes = sum(t.size for t in moved)
+        context = BG_COMPACTION_L0 if lvl == 0 else BG_COMPACTION_HIGH
+        self._io(RequestType.read, nbytes, context, is_write=False)
+        self._io(RequestType.write, nbytes, context, is_write=True)
+        with self._levels_lock:
+            dst = min(lvl + 1, self.cfg.n_levels - 1)
+            self._seq += 1
+            self._levels[dst].append(SSTable(size=nbytes, seq=self._seq))
+            self._levels_lock.notify_all()
+
+    def _compaction_loop(self) -> None:
+        while not self._stop.is_set():
+            lvl = self._pick_compaction()
+            if lvl is None:
+                time.sleep(0.005)
+                continue
+            self._compact(lvl)
+
+    def backlog(self) -> Dict[str, float]:
+        with self._levels_lock:
+            return {
+                "l0_tables": len(self._levels[0]),
+                "flush_queue": len(self._flush_q),
+                "level_bytes": sum(sum(t.size for t in lv) for lv in self._levels),
+            }
+
+    def preload(self) -> None:
+        """Fill levels to ``preload_factor``× their limits (no disk I/O) so
+        high-level compaction debt exists from t=0, as after the paper's
+        100M-key load phase."""
+        with self._levels_lock:
+            for lvl in range(1, self.cfg.n_levels - 1):
+                limit = self.cfg.l1_bytes * (self.cfg.level_multiplier ** (lvl - 1))
+                target = int(limit * self.cfg.preload_factor)
+                self._seq += 1
+                self._levels[lvl].append(SSTable(size=target, seq=self._seq))
+
+    # ------------------------------------------------------------------ #
+    def start(self) -> "MiniLSM":
+        if self.cfg.preload_factor > 0 and not any(self._levels[1:]):
+            self.preload()
+        self._threads = [threading.Thread(target=self._flush_loop, daemon=True, name="lsm-flush")]
+        for i in range(self.cfg.compaction_threads):
+            self._threads.append(
+                threading.Thread(target=self._compaction_loop, daemon=True, name=f"lsm-compact-{i}")
+            )
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        with self._mem_lock:
+            self._mem_lock.notify_all()
+        with self._levels_lock:
+            self._levels_lock.notify_all()
+        for t in self._threads:
+            t.join(timeout=2.0)

@@ -1,0 +1,64 @@
+"""Render the roofline table from experiments/dryrun/*.json (deliverable g).
+
+Usage: python -m benchmarks.roofline [--mesh pod|multipod] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ORDER = [
+    "granite_moe_1b_a400m", "deepseek_v2_lite_16b", "command_r_plus_104b", "llama3_2_1b",
+    "chatglm3_6b", "qwen3_4b", "hubert_xlarge", "hymba_1_5b", "xlstm_350m", "internvl2_76b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str):
+    rows = []
+    for arch in ORDER:
+        for shape in SHAPES:
+            path = f"experiments/dryrun/{arch}_{shape}_{mesh}.json"
+            if os.path.exists(path):
+                rows.append(json.load(open(path)))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:8.2f}s"
+    return f"{x*1e3:7.1f}ms"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if args.markdown:
+        print("| arch | shape | compute | memory | collective | dominant | useful | mem/dev |")
+        print("|---|---|---:|---:|---:|---|---:|---:|")
+        for r in rows:
+            rf = r["roofline"]
+            print(
+                f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+                f"| {fmt_s(rf['collective_s'])} | {rf['dominant']} | {rf['useful_flops_ratio']:.2f} "
+                f"| {r['memory_per_device_gib']:.1f}GiB |"
+            )
+        return
+    print(f"{'arch':<22} {'shape':<12} {'compute':>10} {'memory':>10} {'collective':>10} "
+          f"{'dominant':<11} {'useful':>6} {'mem/dev':>8}")
+    for r in rows:
+        rf = r["roofline"]
+        print(
+            f"{r['arch']:<22} {r['shape']:<12} {fmt_s(rf['compute_s']):>10} {fmt_s(rf['memory_s']):>10} "
+            f"{fmt_s(rf['collective_s']):>10} {rf['dominant']:<11} {rf['useful_flops_ratio']:>6.2f} "
+            f"{r['memory_per_device_gib']:>7.1f}G"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""The paper's Fig 8 scenario as a runnable example: four training-job
+instances with bandwidth guarantees sharing one disk, under baseline /
+static-blkio / PAIO max-min fair share.
+
+Run: PYTHONPATH=src python examples/bandwidth_fairshare.py
+"""
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_bandwidth_fairshare import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Multi-tenant serving with per-tenant token-rate policies (paper §5.2
+applied to inference).
+
+Two tenants share one model server. Each tenant's requests flow through its
+PAIO channel with a DRL object; the control plane (Algorithm 2, max-min fair
+share) guarantees tenant A 2× tenant B's token rate and redistributes the
+budget when one goes idle.
+
+Run: PYTHONPATH=src python examples/serve_multitenant.py
+"""
+import sys
+import os
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax
+
+import repro.configs as configs
+from repro.core import (
+    ControlPlane,
+    DifferentiationRule,
+    FairShareControl,
+    FlowSpec,
+    HousekeepingRule,
+    Stage,
+)
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    cfg = configs.get_reduced("llama3_2_1b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    stage = Stage("serve")
+    for tenant in ("tenant_a", "tenant_b"):
+        stage.hsk_rule(HousekeepingRule(op="create_channel", channel=tenant))
+        stage.hsk_rule(
+            HousekeepingRule(
+                op="create_object", channel=tenant, object_id="0", object_kind="drl",
+                params={"rate": 100.0},  # tokens/s placeholder; control plane retunes
+            )
+        )
+        stage.dif_rule(DifferentiationRule(channel=tenant, match={"tenant": tenant}))
+
+    algo = FairShareControl(
+        flows={t: FlowSpec("serve", t) for t in ("tenant_a", "tenant_b")},
+        demands={"tenant_a": 400.0, "tenant_b": 200.0},  # tokens/s guarantees
+        max_bandwidth=600.0,
+        loop_interval=0.1,
+    )
+    cp = ControlPlane(algo)
+    cp.register_stage(stage)
+    cp.start()
+
+    engine = ServeEngine(cfg, params, max_seq=64, stage=stage)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab, size=(2, 8)).astype(np.int32)
+
+    for tenant in ("tenant_a", "tenant_b"):
+        t0 = time.monotonic()
+        results = engine.generate(prompts, max_new_tokens=16, tenant=tenant)
+        dt = time.monotonic() - t0
+        n_tokens = sum(len(r.tokens) for r in results)
+        print(f"{tenant}: {n_tokens} tokens in {dt:.2f}s → {n_tokens/dt:.0f} tok/s "
+              f"(DRL rate {stage.channel(tenant).get_object('0').rate:.0f} tok/s)")
+
+    stats = stage.collect()
+    for name, snap in stats.per_channel.items():
+        if snap.cumulative_ops:
+            print(f"channel {name}: ops={snap.cumulative_ops} bytes(tokens)={snap.cumulative_bytes}")
+    cp.stop()
+    print("serve_multitenant OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .manager import AsyncCheckpointer, CheckpointManager, latest_step
+
+__all__ = ["AsyncCheckpointer", "CheckpointManager", "latest_step"]

@@ -1,0 +1,42 @@
+"""Assigned architecture configs (``--arch <id>``).
+
+Each module exposes ``config()`` (exact published configuration) and
+``reduced()`` (same family, shrunk for CPU smoke tests). ``get(name)``
+resolves by id; ``ALL_ARCHS`` lists the ten assigned architectures.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.models.model import ArchConfig
+
+ALL_ARCHS: List[str] = [
+    "granite_moe_1b_a400m",
+    "deepseek_v2_lite_16b",
+    "command_r_plus_104b",
+    "llama3_2_1b",
+    "chatglm3_6b",
+    "qwen3_4b",
+    "hubert_xlarge",
+    "hymba_1_5b",
+    "xlstm_350m",
+    "internvl2_76b",
+]
+
+_ALIASES = {a.replace("_", "-"): a for a in ALL_ARCHS}
+
+
+def canonical(name: str) -> str:
+    name = name.replace(".", "_")
+    return _ALIASES.get(name, name.replace("-", "_"))
+
+
+def get(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.config()
+
+
+def get_reduced(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(name)}")
+    return mod.reduced()

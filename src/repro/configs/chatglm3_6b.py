@@ -1,0 +1,33 @@
+"""chatglm3-6b [arXiv:2406.12793].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024; 2D RoPE —
+rotary applied to half of each head's dims (rope_fraction=0.5).
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="chatglm3-6b",
+        family="dense",
+        n_layers=28,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        d_ff=13696,
+        vocab=65024,
+        rope_fraction=0.5,
+        tie_embeddings=False,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="chatglm3-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=257,
+    )

@@ -1,0 +1,33 @@
+"""command-r-plus-104b [hf:CohereForAI/c4ai-command-r-v01 family].
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000, no-bias GQA.
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="command-r-plus-104b",
+        family="dense",
+        n_layers=64,
+        d_model=12288,
+        n_heads=96,
+        n_kv_heads=8,
+        d_ff=33792,
+        vocab=256000,
+        rope_theta=75_000_000.0,
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="command-r-plus-smoke",
+        n_layers=2,
+        d_model=96,
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=257,
+        rope_theta=10000.0,
+    )

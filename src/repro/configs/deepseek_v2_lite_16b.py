@@ -1,0 +1,52 @@
+"""deepseek-v2-lite-16b [arXiv:2405.04434].
+
+27L d_model=2048 16H MLA (kv_lora=512) d_ff_expert=1408 vocab=102400,
+MoE 64 routed experts top-6 + 2 shared, first layer dense.
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        n_layers=27,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=10944,  # dense first layer FFN width (V2-Lite)
+        d_ff_expert=1408,
+        n_experts=64,
+        top_k=6,
+        n_shared_experts=2,
+        first_k_dense=1,
+        vocab=102400,
+        attn_type="mla",
+        kv_lora_rank=512,
+        qk_rope_dim=64,
+        qk_nope_dim=128,
+        v_head_dim=128,
+        tie_embeddings=False,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="deepseek-v2-lite-smoke",
+        n_layers=3,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=128,
+        d_ff_expert=32,
+        n_experts=4,
+        top_k=2,
+        n_shared_experts=1,
+        first_k_dense=1,
+        vocab=257,
+        kv_lora_rank=32,
+        qk_rope_dim=8,
+        qk_nope_dim=16,
+        v_head_dim=16,
+        moe_group_size=32,
+    )

@@ -1,0 +1,38 @@
+"""granite-moe-1b-a400m [hf:ibm-granite/granite-3.0-1b-a400m-base].
+
+24L d_model=1024 16H (GQA kv=8) d_ff=512/expert, MoE 32 experts top-8.
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="granite-moe-1b-a400m",
+        family="moe",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=8,
+        d_ff=512,
+        d_ff_expert=512,
+        n_experts=32,
+        top_k=8,
+        vocab=49155,
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="granite-moe-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=32,
+        d_ff_expert=32,
+        n_experts=4,
+        top_k=2,
+        vocab=257,
+        moe_group_size=32,
+    )

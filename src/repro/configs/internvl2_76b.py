@@ -1,0 +1,36 @@
+"""internvl2-76b [arXiv:2404.16821].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256 — InternLM2-style
+LLM backbone; the InternViT frontend is a STUB (``input_specs`` provides
+256 precomputed patch embeddings spliced ahead of the token sequence).
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internvl2-76b",
+        family="vlm",
+        n_layers=80,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=28672,
+        vocab=128256,
+        frontend="vision_stub",
+        n_vision_tokens=256,
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="internvl2-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        vocab=257,
+        n_vision_tokens=8,
+    )

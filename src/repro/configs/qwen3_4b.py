@@ -1,0 +1,36 @@
+"""qwen3-4b [hf:Qwen/Qwen3-4B family].
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936, qk-norm.
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-4b",
+        family="dense",
+        n_layers=36,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=9728,
+        vocab=151936,
+        d_head=128,
+        qk_norm=True,
+        rope_theta=1000000.0,
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="qwen3-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=128,
+        d_head=16,
+        vocab=257,
+        rope_theta=10000.0,
+    )

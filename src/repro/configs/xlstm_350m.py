@@ -1,0 +1,35 @@
+"""xlstm-350m [arXiv:2405.04517].
+
+24 blocks d_model=1024 4H, mLSTM + sLSTM mix (sLSTM every 8th block —
+the paper's [7:1] ratio), d_ff=0 (projection lives inside the cells).
+"""
+from repro.models.model import ArchConfig
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-350m",
+        family="ssm",
+        n_layers=24,
+        d_model=1024,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=0,
+        vocab=50304,
+        slstm_every=8,
+        mlstm_expand=2,
+        tie_embeddings=True,
+    )
+
+
+def reduced() -> ArchConfig:
+    return config().replace(
+        name="xlstm-smoke",
+        n_layers=4,
+        d_model=64,
+        n_heads=2,
+        n_kv_heads=2,
+        vocab=257,
+        slstm_every=2,
+        mlstm_chunk=16,
+    )

@@ -1,0 +1,116 @@
+"""PAIO core: the paper's contribution as a composable library.
+
+Public surface mirrors the paper's Table 2:
+
+* data plane — :class:`Stage` (``stage_info``/``hsk_rule``/``dif_rule``/
+  ``enf_rule``/``collect``), :class:`Channel`, enforcement objects
+  (:class:`Noop`, :class:`DRL`, transformations),
+* instance interface — :class:`Instance` and layer facades
+  (``enforce(ctx, r)``),
+* control plane — :class:`ControlPlane` + :class:`ControlAlgorithm`
+  with Algorithms 1 & 2 from §5.
+"""
+from .algorithms import (
+    FairShareControl,
+    FlowSpec,
+    TailLatencyControl,
+    TrainIOControl,
+    max_min_fair_share,
+    tail_latency_allocation,
+)
+from .channel import Channel
+from .clock import Clock, MonotonicClock, VirtualClock
+from .context import (
+    BG_CHECKPOINT,
+    BG_COMPACTION,
+    BG_COMPACTION_HIGH,
+    BG_COMPACTION_L0,
+    BG_EVAL,
+    BG_FLUSH,
+    FG_FETCH,
+    FOREGROUND,
+    Context,
+    RequestType,
+    build_context,
+    current_context,
+    propagate_context,
+    propagate_tenant,
+)
+from .control import (
+    ControlAlgorithm,
+    ControlPlane,
+    LocalStageHandle,
+    RemoteStageHandle,
+    StageServer,
+)
+from .hashing import murmur3_32, token_for
+from .instance import ArrayInstance, Instance, KVInstance, PosixInstance
+from .objects import (
+    DRL,
+    Checksum,
+    Compress,
+    Decompress,
+    EnforcementObject,
+    Noop,
+    PriorityGate,
+    QuantizeInt8,
+    Result,
+    TokenBucket,
+)
+from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from .stage import Stage
+from .stats import StageStats, StatsSnapshot
+
+__all__ = [
+    "BG_CHECKPOINT",
+    "BG_COMPACTION",
+    "BG_COMPACTION_HIGH",
+    "BG_COMPACTION_L0",
+    "BG_EVAL",
+    "BG_FLUSH",
+    "FG_FETCH",
+    "FOREGROUND",
+    "ArrayInstance",
+    "Channel",
+    "Checksum",
+    "Clock",
+    "Compress",
+    "Context",
+    "ControlAlgorithm",
+    "ControlPlane",
+    "DRL",
+    "Decompress",
+    "DifferentiationRule",
+    "EnforcementObject",
+    "EnforcementRule",
+    "FairShareControl",
+    "FlowSpec",
+    "HousekeepingRule",
+    "Instance",
+    "KVInstance",
+    "LocalStageHandle",
+    "MonotonicClock",
+    "Noop",
+    "PosixInstance",
+    "PriorityGate",
+    "QuantizeInt8",
+    "RemoteStageHandle",
+    "RequestType",
+    "Result",
+    "Stage",
+    "StageServer",
+    "StageStats",
+    "StatsSnapshot",
+    "TailLatencyControl",
+    "TokenBucket",
+    "TrainIOControl",
+    "VirtualClock",
+    "build_context",
+    "current_context",
+    "max_min_fair_share",
+    "murmur3_32",
+    "propagate_context",
+    "propagate_tenant",
+    "tail_latency_allocation",
+    "token_for",
+]

@@ -1,0 +1,238 @@
+"""Control algorithms (paper §5, Algorithms 1 & 2).
+
+Both are implemented as pure allocation functions (property-tested) wrapped in
+``ControlAlgorithm`` feedback loops:
+
+* :class:`TailLatencyControl` — the SDS re-implementation of SILK's scheduler
+  (Algorithm 1): monitor foreground bandwidth, hand leftover bandwidth to
+  whichever latency-critical background flows (flushes, low-level compactions)
+  are active, starve high-level compactions down to ``min_b`` otherwise.
+* :class:`FairShareControl` — max-min fair share with redistribution of
+  leftover bandwidth (Algorithm 2), the ABCI per-application-guarantee policy.
+* :class:`TrainIOControl` — Algorithm 1's philosophy applied to a training
+  job's I/O stack: the input pipeline is the foreground flow; checkpoint/eval
+  writes are the background flows (beyond-paper integration).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .control import ControlAlgorithm, StageHandle
+from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from .stats import StageStats
+
+MiB = float(1 << 20)
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 1 — tail latency control (pure allocation)                         #
+# --------------------------------------------------------------------------- #
+def tail_latency_allocation(
+    kvs_b: float, fg: float, fl_active: bool, l0_active: bool, min_b: float
+) -> Tuple[float, float, float]:
+    """Paper Algorithm 1 lines 2–11. Returns (B_Fl, B_L0, B_LN)."""
+    left_b = max(kvs_b - fg, min_b)
+    if fl_active and l0_active:
+        return left_b / 2, left_b / 2, min_b
+    if fl_active:
+        return left_b, min_b, min_b
+    if l0_active:
+        return min_b, left_b, min_b
+    return min_b, min_b, left_b
+
+
+@dataclass
+class FlowSpec:
+    """Where a logical flow's DRL object lives: (stage, channel, object_id)."""
+
+    stage: str
+    channel: str
+    object_id: str = "0"
+
+
+class TailLatencyControl(ControlAlgorithm):
+    """Algorithm 1 over PAIO stages.
+
+    ``fg``/``flush``/``l0``/``ln`` name the channels carrying foreground,
+    flush, low-level-compaction and high-level-compaction flows. ``ln`` may be
+    a list (the paper splits B_LN across all high-level DRL objects).
+    """
+
+    def __init__(
+        self,
+        fg: FlowSpec,
+        flush: FlowSpec,
+        l0: FlowSpec,
+        ln: Sequence[FlowSpec],
+        kvs_bandwidth: float = 200 * MiB,
+        min_bandwidth: float = 10 * MiB,
+        loop_interval: float = 0.1,
+        active_threshold: float = 1.0,
+    ) -> None:
+        self.fg, self.flush, self.l0, self.ln = fg, flush, l0, list(ln)
+        self.kvs_b = float(kvs_bandwidth)
+        self.min_b = float(min_bandwidth)
+        self.loop_interval = loop_interval
+        self.active_threshold = active_threshold  # bytes/s below this = inactive
+        self.last_allocation: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+
+    def _throughput(self, stats: Dict[str, StageStats], spec: FlowSpec) -> float:
+        st = stats.get(spec.stage)
+        return st.throughput_of(spec.channel) if st else 0.0
+
+    def _active(self, stats: Dict[str, StageStats], spec: FlowSpec) -> bool:
+        st = stats.get(spec.stage)
+        if st is None:
+            return False
+        snap = st.per_channel.get(spec.channel)
+        if snap is None:
+            return False
+        # a flow blocked inside its DRL is active even at zero throughput
+        return snap.throughput > self.active_threshold or snap.inflight > 0
+
+    def step(self, stats: Dict[str, StageStats]) -> Dict[str, List[EnforcementRule]]:
+        fg_bw = self._throughput(stats, self.fg)
+        b_fl, b_l0, b_ln = tail_latency_allocation(
+            self.kvs_b,
+            fg_bw,
+            self._active(stats, self.flush),
+            self._active(stats, self.l0),
+            self.min_b,
+        )
+        self.last_allocation = (b_fl, b_l0, b_ln)
+        rules: Dict[str, List[EnforcementRule]] = {}
+
+        def emit(spec: FlowSpec, rate: float) -> None:
+            rules.setdefault(spec.stage, []).append(
+                EnforcementRule(channel=spec.channel, object_id=spec.object_id, state={"rate": rate})
+            )
+
+        emit(self.flush, b_fl)
+        emit(self.l0, b_l0)
+        # paper: split B_LN across all high-level DRL objects
+        if self.ln:
+            share = b_ln / len(self.ln)
+            for spec in self.ln:
+                emit(spec, share)
+        return rules
+
+
+# --------------------------------------------------------------------------- #
+# Algorithm 2 — max-min fair share (pure allocation)                           #
+# --------------------------------------------------------------------------- #
+def max_min_fair_share(demands: Sequence[float], capacity: float) -> List[float]:
+    """Paper Algorithm 2 lines 2–10.
+
+    Classic max-min: satisfy demands in ascending order, each bounded by its
+    fair share of what remains; then distribute any leftover equally among all
+    active instances (lines 9–10 of the paper redistribute leftover so idle
+    bandwidth is never stranded — the improvement over static blkio).
+    """
+    n = len(demands)
+    if n == 0:
+        return []
+    order = sorted(range(n), key=lambda i: demands[i])
+    rates = [0.0] * n
+    left = float(capacity)
+    for pos, i in enumerate(order):
+        fair = left / (n - pos)
+        rates[i] = min(demands[i], fair)
+        left -= rates[i]
+    if left > 1e-9:
+        bonus = left / n
+        for i in range(n):
+            rates[i] += bonus
+    return rates
+
+
+class FairShareControl(ControlAlgorithm):
+    """Algorithm 2 over per-instance PAIO stages.
+
+    Each instance (e.g. one tenant's training job) runs its own stage with one
+    DRL-enforced channel; demands are set a priori by the resource manager
+    (paper: SLURM/administrator). Instances register/leave dynamically —
+    allocation reacts on the next loop iteration.
+    """
+
+    def __init__(
+        self,
+        flows: Dict[str, FlowSpec],
+        demands: Dict[str, float],
+        max_bandwidth: float = 1024 * MiB,
+        loop_interval: float = 0.1,
+    ) -> None:
+        self.flows = dict(flows)
+        self.demands = dict(demands)
+        self.max_b = float(max_bandwidth)
+        self.loop_interval = loop_interval
+        self.last_rates: Dict[str, float] = {}
+
+    def set_demand(self, instance: str, demand: Optional[float]) -> None:
+        if demand is None:
+            self.demands.pop(instance, None)
+            self.flows.pop(instance, None)
+        else:
+            self.demands[instance] = demand
+
+    def add_instance(self, instance: str, flow: FlowSpec, demand: float) -> None:
+        self.flows[instance] = flow
+        self.demands[instance] = demand
+
+    def remove_instance(self, instance: str) -> None:
+        self.flows.pop(instance, None)
+        self.demands.pop(instance, None)
+
+    def step(self, stats: Dict[str, StageStats]) -> Dict[str, List[EnforcementRule]]:
+        names = [n for n in self.flows if n in self.demands]
+        rates = max_min_fair_share([self.demands[n] for n in names], self.max_b)
+        self.last_rates = dict(zip(names, rates))
+        rules: Dict[str, List[EnforcementRule]] = {}
+        for name, rate in self.last_rates.items():
+            spec = self.flows[name]
+            rules.setdefault(spec.stage, []).append(
+                EnforcementRule(channel=spec.channel, object_id=spec.object_id, state={"rate": rate})
+            )
+        return rules
+
+
+# --------------------------------------------------------------------------- #
+# Beyond-paper: Algorithm 1 applied to a training job's I/O stack              #
+# --------------------------------------------------------------------------- #
+class TrainIOControl(ControlAlgorithm):
+    """Two-flow tail-latency control for training jobs.
+
+    Foreground = input-pipeline fetches (never rate limited, only observed);
+    background = checkpoint/eval writes, DRL-limited to the leftover bandwidth
+    so a checkpoint burst can never starve the input pipeline and stall the
+    device (the training-stack analog of an LSM write stall).
+    """
+
+    def __init__(
+        self,
+        fg: FlowSpec,
+        background: Sequence[FlowSpec],
+        total_bandwidth: float,
+        min_bandwidth: float = 4 * MiB,
+        loop_interval: float = 0.1,
+    ) -> None:
+        self.fg = fg
+        self.background = list(background)
+        self.total_b = float(total_bandwidth)
+        self.min_b = float(min_bandwidth)
+        self.loop_interval = loop_interval
+        self.last_allocation: Dict[str, float] = {}
+
+    def step(self, stats: Dict[str, StageStats]) -> Dict[str, List[EnforcementRule]]:
+        st = stats.get(self.fg.stage)
+        fg_bw = st.throughput_of(self.fg.channel) if st else 0.0
+        left = max(self.total_b - fg_bw, self.min_b)
+        share = left / max(len(self.background), 1)
+        rules: Dict[str, List[EnforcementRule]] = {}
+        self.last_allocation = {}
+        for spec in self.background:
+            self.last_allocation[f"{spec.stage}/{spec.channel}"] = share
+            rules.setdefault(spec.stage, []).append(
+                EnforcementRule(channel=spec.channel, object_id=spec.object_id, state={"rate": share})
+            )
+        return rules

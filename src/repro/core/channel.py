@@ -1,0 +1,124 @@
+"""Channel: the stream-like abstraction requests flow through (paper §3.1).
+
+A channel owns one or more enforcement objects plus the rule that maps a
+request's context to the object that must service it (``select_object``,
+paper Fig 3 step 4), and per-workflow statistics counters (§4.3).
+
+The hot path is: object lookup (murmur token over the configured classifier
+masks) → ``obj_enf`` → stats record. Locking: the routing table is swapped
+atomically on rule installation (read-mostly, copy-on-write), so the hot path
+takes no lock besides the stats counter's.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from .clock import Clock, DEFAULT_CLOCK
+from .context import Context
+from .hashing import token_for
+from .objects import EnforcementObject, Noop, Result
+from .stats import ChannelStats, StatsSnapshot
+
+DEFAULT_OBJECT_ID = "0"
+
+
+class Channel:
+    def __init__(self, name: str, clock: Clock = DEFAULT_CLOCK) -> None:
+        self.name = name
+        self._clock = clock
+        self._objects: Dict[str, EnforcementObject] = {DEFAULT_OBJECT_ID: Noop()}
+        # ordered (mask, {token: object_id}) — most specific masks first
+        self._routing: List[Tuple[Tuple[str, ...], Dict[int, str]]] = []
+        #: classifier-tuple → resolved object id (§Perf iteration 1 memo)
+        self._route_cache: Dict[tuple, str] = {}
+        self._mutate = threading.Lock()
+        self.stats = ChannelStats(name, clock)
+        #: §Perf S2: in-flight tracking matters only when an object can block
+        #: (DRL/priority); noop/transform channels keep a single-lock fast path
+        self._track_inflight = False
+
+    # -- housekeeping ------------------------------------------------------
+    def add_object(self, object_id: str, obj: EnforcementObject) -> None:
+        with self._mutate:
+            self._objects = {**self._objects, object_id: obj}
+            if obj.kind in ("drl", "priority_gate"):
+                self._track_inflight = True
+
+    def remove_object(self, object_id: str) -> None:
+        with self._mutate:
+            objs = dict(self._objects)
+            objs.pop(object_id, None)
+            self._objects = objs
+
+    def get_object(self, object_id: str) -> Optional[EnforcementObject]:
+        return self._objects.get(object_id)
+
+    def object_ids(self) -> List[str]:
+        return list(self._objects.keys())
+
+    # -- differentiation ----------------------------------------------------
+    def add_object_route(self, mask: Tuple[str, ...], key: Tuple[Any, ...], object_id: str) -> None:
+        """Install a select_object mapping: requests whose classifiers under
+        ``mask`` hash to ``token_for(key)`` are serviced by ``object_id``."""
+        with self._mutate:
+            routing = [(m, dict(t)) for m, t in self._routing]
+            for m, table in routing:
+                if m == mask:
+                    table[token_for(key)] = object_id
+                    break
+            else:
+                routing.append((mask, {token_for(key): object_id}))
+            routing.sort(key=lambda e: -len(e[0]))
+            self._routing = routing
+            self._route_cache = {}
+
+    def select_object(self, ctx: Context) -> str:
+        if not self._routing:
+            return DEFAULT_OBJECT_ID
+        key = (ctx.workflow_id, ctx.request_type, ctx.request_context, ctx.tenant)
+        cached = self._route_cache.get(key)
+        if cached is not None:
+            return cached
+        oid = DEFAULT_OBJECT_ID
+        for mask, table in self._routing:
+            token = token_for(tuple(getattr(ctx, c) for c in mask))
+            hit = table.get(token)
+            if hit is not None:
+                oid = hit
+                break
+        if len(self._route_cache) < 65536:
+            self._route_cache[key] = oid
+        return oid
+
+    # -- enforcement (hot path) ---------------------------------------------
+    def enforce(self, ctx: Context, request: Any = None) -> Result:
+        oid = self.select_object(ctx)
+        obj = self._objects.get(oid)
+        if obj is None:  # object removed concurrently — fall back to noop
+            obj = self._objects[DEFAULT_OBJECT_ID]
+        if self._track_inflight:
+            self.stats.begin_op()
+        result = obj.obj_enf(ctx, request)
+        self.stats.record(ctx.size)
+        return result
+
+    # -- control ------------------------------------------------------------
+    def configure_object(self, object_id: str, state: Dict[str, Any]) -> bool:
+        obj = self._objects.get(object_id)
+        if obj is None:
+            return False
+        obj.obj_config(state)
+        return True
+
+    def collect(self) -> StatsSnapshot:
+        return self.stats.collect()
+
+    def describe(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "objects": {oid: obj.describe() for oid, obj in self._objects.items()},
+            "routes": [
+                {"mask": list(mask), "entries": len(table)} for mask, table in self._routing
+            ],
+        }

@@ -1,0 +1,84 @@
+"""Clock abstraction: real monotonic time or a virtual (simulated) clock.
+
+Enforcement objects (token buckets, schedulers) and control loops are written
+against this interface so that:
+
+* production stages run on ``MonotonicClock`` (``time.monotonic_ns``), and
+* benchmarks/tests run on ``VirtualClock`` — deterministic, instant, and able
+  to compress the paper's hour-long Fig 5–8 scenarios into milliseconds while
+  preserving the *exact* token-bucket arithmetic.
+
+``VirtualClock.sleep`` advances virtual time cooperatively; a condition variable
+wakes any cross-thread waiters so multi-threaded simulations stay coherent.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+
+class Clock:
+    def now(self) -> float:
+        """Seconds (monotonic)."""
+        raise NotImplementedError
+
+    def sleep(self, seconds: float) -> None:
+        raise NotImplementedError
+
+
+class MonotonicClock(Clock):
+    __slots__ = ()
+
+    def now(self) -> float:
+        return time.monotonic_ns() / 1e9
+
+    def sleep(self, seconds: float) -> None:
+        if seconds > 0:
+            time.sleep(seconds)
+
+
+class VirtualClock(Clock):
+    """Deterministic simulated clock.
+
+    ``sleep`` advances time immediately. When several threads share the clock,
+    advancing wakes all waiters; threads that need to wait *for a condition*
+    (e.g. bucket refill) should use ``wait_until``.
+    """
+
+    def __init__(self, start: float = 0.0) -> None:
+        self._t = start
+        self._cv = threading.Condition()
+
+    def now(self) -> float:
+        with self._cv:
+            return self._t
+
+    def sleep(self, seconds: float) -> None:
+        if seconds <= 0:
+            return
+        with self._cv:
+            self._t += seconds
+            self._cv.notify_all()
+
+    def advance_to(self, t: float) -> None:
+        with self._cv:
+            if t > self._t:
+                self._t = t
+                self._cv.notify_all()
+
+    def wait_until(self, t: float, timeout: float | None = None) -> float:
+        """Block until virtual time reaches ``t`` (another thread must advance).
+
+        Returns the current virtual time. In single-threaded use it simply
+        advances the clock (no deadlock).
+        """
+        with self._cv:
+            if self._t >= t:
+                return self._t
+            # Single-threaded convenience: advance directly.
+            self._t = t
+            self._cv.notify_all()
+            return self._t
+
+
+DEFAULT_CLOCK = MonotonicClock()

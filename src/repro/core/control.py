@@ -1,0 +1,262 @@
+"""SDS control plane (paper §3.2, §4.1, §4.3).
+
+The control plane is a logically-centralized entity that orchestrates stages
+through the five-call control interface. Communication is over UNIX Domain
+Sockets (paper §4.3) with a newline-delimited JSON protocol; an in-process
+transport with identical semantics is provided for embedded deployments and
+deterministic tests.
+
+Control algorithms (paper §5) are pluggable ``ControlAlgorithm`` objects run in
+a feedback loop: ``collect → compute → enf_rules → sleep(loop_interval)``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import socketserver
+import threading
+from dataclasses import asdict
+from typing import Any, Dict, List, Optional
+
+from .clock import Clock, DEFAULT_CLOCK
+from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule, rule_from_wire
+from .stage import Stage
+from .stats import StageStats, StatsSnapshot
+
+
+# --------------------------------------------------------------------------- #
+# transports                                                                   #
+# --------------------------------------------------------------------------- #
+class StageHandle:
+    """Control-plane-side view of one data plane stage (Table 2 calls)."""
+
+    def stage_info(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def hsk_rule(self, rule: HousekeepingRule) -> bool:
+        raise NotImplementedError
+
+    def dif_rule(self, rule: DifferentiationRule) -> bool:
+        raise NotImplementedError
+
+    def enf_rule(self, rule: EnforcementRule) -> bool:
+        raise NotImplementedError
+
+    def collect(self) -> StageStats:
+        raise NotImplementedError
+
+
+class LocalStageHandle(StageHandle):
+    """In-process transport: direct calls into the stage object."""
+
+    def __init__(self, stage: Stage) -> None:
+        self._stage = stage
+
+    def stage_info(self) -> Dict[str, Any]:
+        return self._stage.stage_info()
+
+    def hsk_rule(self, rule: HousekeepingRule) -> bool:
+        return self._stage.hsk_rule(rule)
+
+    def dif_rule(self, rule: DifferentiationRule) -> bool:
+        return self._stage.dif_rule(rule)
+
+    def enf_rule(self, rule: EnforcementRule) -> bool:
+        return self._stage.enf_rule(rule)
+
+    def collect(self) -> StageStats:
+        return self._stage.collect()
+
+
+def _snapshot_to_wire(s: StatsSnapshot) -> Dict[str, Any]:
+    return asdict(s)
+
+
+def _snapshot_from_wire(d: Dict[str, Any]) -> StatsSnapshot:
+    return StatsSnapshot(**d)
+
+
+class StageServer:
+    """Data-plane side of the UDS transport: serves one Stage on a socket path.
+
+    Protocol: one JSON object per line. ``{"call": "stage_info"}``,
+    ``{"call": "rule", ...wire-rule...}``, ``{"call": "collect"}``.
+    """
+
+    def __init__(self, stage: Stage, socket_path: str) -> None:
+        self.stage = stage
+        self.socket_path = socket_path
+        if os.path.exists(socket_path):
+            os.unlink(socket_path)
+        stage_ref = stage
+
+        class Handler(socketserver.StreamRequestHandler):
+            def handle(self) -> None:  # pragma: no cover - exercised via client
+                for line in self.rfile:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        msg = json.loads(line)
+                        reply = _dispatch(stage_ref, msg)
+                    except Exception as exc:  # noqa: BLE001 — report to controller
+                        reply = {"ok": False, "error": repr(exc)}
+                    self.wfile.write(json.dumps(reply).encode() + b"\n")
+                    self.wfile.flush()
+
+        class Server(socketserver.ThreadingUnixStreamServer):
+            daemon_threads = True
+            allow_reuse_address = True
+
+        self._server = Server(socket_path, Handler)
+        self._thread = threading.Thread(target=self._server.serve_forever, daemon=True, name=f"paio-stage-{stage.name}")
+
+    def start(self) -> "StageServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        if os.path.exists(self.socket_path):
+            os.unlink(self.socket_path)
+
+
+def _dispatch(stage: Stage, msg: Dict[str, Any]) -> Dict[str, Any]:
+    call = msg.get("call")
+    if call == "stage_info":
+        return {"ok": True, "info": stage.stage_info()}
+    if call == "rule":
+        rule = rule_from_wire(msg)
+        if isinstance(rule, HousekeepingRule):
+            return {"ok": stage.hsk_rule(rule)}
+        if isinstance(rule, DifferentiationRule):
+            return {"ok": stage.dif_rule(rule)}
+        return {"ok": stage.enf_rule(rule)}
+    if call == "collect":
+        stats = stage.collect()
+        return {"ok": True, "stats": {n: _snapshot_to_wire(s) for n, s in stats.per_channel.items()}}
+    return {"ok": False, "error": f"unknown call {call!r}"}
+
+
+class RemoteStageHandle(StageHandle):
+    """Control-plane side of the UDS transport."""
+
+    def __init__(self, socket_path: str, timeout: float = 5.0) -> None:
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.settimeout(timeout)
+        self._sock.connect(socket_path)
+        self._file = self._sock.makefile("rwb")
+        self._lock = threading.Lock()
+
+    def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        with self._lock:
+            self._file.write(json.dumps(msg).encode() + b"\n")
+            self._file.flush()
+            line = self._file.readline()
+        if not line:
+            raise ConnectionError("stage closed the control socket")
+        return json.loads(line)
+
+    def stage_info(self) -> Dict[str, Any]:
+        return self._call({"call": "stage_info"})["info"]
+
+    def hsk_rule(self, rule: HousekeepingRule) -> bool:
+        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
+
+    def dif_rule(self, rule: DifferentiationRule) -> bool:
+        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
+
+    def enf_rule(self, rule: EnforcementRule) -> bool:
+        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
+
+    def collect(self) -> StageStats:
+        reply = self._call({"call": "collect"})
+        return StageStats(per_channel={n: _snapshot_from_wire(s) for n, s in reply["stats"].items()})
+
+    def close(self) -> None:
+        try:
+            self._file.close()
+            self._sock.close()
+        except OSError:  # pragma: no cover
+            pass
+
+
+# --------------------------------------------------------------------------- #
+# control plane                                                                #
+# --------------------------------------------------------------------------- #
+class ControlAlgorithm:
+    """One feedback-loop iteration over the registered stages.
+
+    ``step`` receives {stage_name: StageStats} and returns the enforcement
+    rules to submit, keyed by stage name.
+    """
+
+    loop_interval: float = 0.1
+
+    def setup(self, handles: Dict[str, StageHandle]) -> None:
+        """Install housekeeping/differentiation rules (startup phase)."""
+
+    def step(self, stats: Dict[str, StageStats]) -> Dict[str, List[EnforcementRule]]:
+        raise NotImplementedError
+
+
+class ControlPlane:
+    """Runs a ControlAlgorithm in a monitor→rule feedback loop (paper §4.2)."""
+
+    def __init__(self, algorithm: ControlAlgorithm, clock: Clock = DEFAULT_CLOCK) -> None:
+        self.algorithm = algorithm
+        self._clock = clock
+        self._handles: Dict[str, StageHandle] = {}
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.iterations = 0
+        self.history: List[Dict[str, StageStats]] = []
+        self.keep_history = False
+
+    def register(self, name: str, handle: StageHandle) -> None:
+        self._handles[name] = handle
+
+    def register_stage(self, stage: Stage) -> None:
+        self.register(stage.name, LocalStageHandle(stage))
+
+    def connect(self, name: str, socket_path: str) -> None:
+        self.register(name, RemoteStageHandle(socket_path))
+
+    # -- single iteration (usable synchronously from tests/benchmarks) -----
+    def run_once(self) -> Dict[str, List[EnforcementRule]]:
+        stats = {name: h.collect() for name, h in self._handles.items()}
+        if self.keep_history:
+            self.history.append(stats)
+        rules = self.algorithm.step(stats)
+        for stage_name, stage_rules in rules.items():
+            handle = self._handles.get(stage_name)
+            if handle is None:
+                continue
+            for rule in stage_rules:
+                handle.enf_rule(rule)
+        self.iterations += 1
+        return rules
+
+    # -- background loop ----------------------------------------------------
+    def start(self) -> "ControlPlane":
+        self.algorithm.setup(self._handles)
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="paio-control-plane")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.run_once()
+            except ConnectionError:  # a stage died: keep controlling the rest
+                pass
+            self._stop.wait(self.algorithm.loop_interval)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

@@ -1,0 +1,64 @@
+"""MurmurHash3 (x86 32-bit) — the paper's channel-token hashing scheme (§4.3).
+
+PAIO concatenates a context's classifiers and hashes them into a fixed-size
+token with MurmurHash3 to build the request→channel / request→enforcement-object
+maps. We implement murmur3_32 exactly (validated against the reference vectors
+of Appleby's SMHasher in tests) so differentiation tokens are stable across
+processes — a requirement for rules sent by an *external* control plane to refer
+to the same tokens the data plane computes.
+"""
+from __future__ import annotations
+
+_C1 = 0xCC9E2D51
+_C2 = 0x1B873593
+_MASK = 0xFFFFFFFF
+
+
+def _rotl32(x: int, r: int) -> int:
+    return ((x << r) | (x >> (32 - r))) & _MASK
+
+
+def murmur3_32(data: bytes, seed: int = 0) -> int:
+    """Pure-python MurmurHash3 x86_32."""
+    length = len(data)
+    h = seed & _MASK
+    rounded = length & ~0x3
+    for i in range(0, rounded, 4):
+        k = int.from_bytes(data[i : i + 4], "little")
+        k = (k * _C1) & _MASK
+        k = _rotl32(k, 15)
+        k = (k * _C2) & _MASK
+        h ^= k
+        h = _rotl32(h, 13)
+        h = (h * 5 + 0xE6546B64) & _MASK
+    # tail
+    k = 0
+    tail = data[rounded:]
+    if len(tail) >= 3:
+        k ^= tail[2] << 16
+    if len(tail) >= 2:
+        k ^= tail[1] << 8
+    if len(tail) >= 1:
+        k ^= tail[0]
+        k = (k * _C1) & _MASK
+        k = _rotl32(k, 15)
+        k = (k * _C2) & _MASK
+        h ^= k
+    # finalization
+    h ^= length
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & _MASK
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & _MASK
+    h ^= h >> 16
+    return h
+
+
+def token_for(parts: tuple, seed: int = 0x5D5) -> int:
+    """Differentiation token: concatenate classifiers, murmur-hash to 32 bits.
+
+    ``parts`` is any tuple of ints/strings (a subset of Context classifiers as
+    chosen by the stage's differentiation spec).
+    """
+    raw = "\x1f".join(str(p) for p in parts).encode("utf-8")
+    return murmur3_32(raw, seed)

@@ -1,0 +1,123 @@
+"""Instance interface: the bridge between a targeted layer and its stage
+(paper §4.1).
+
+``Instance.enforce`` intercepts a request, builds the ``Context`` (picking up
+propagated request-context and tenant), submits both to the stage, and returns
+the enforced result to the original data path.
+
+Layer-oriented facades are provided so instrumentation is a one-line change
+(paper: "users only need to replace the original call for a PAIO one"):
+
+* ``PosixInstance`` — read/write/open/close/fsync wrappers over file objects,
+* ``KVInstance`` — put/get/delete wrappers,
+* ``ArrayInstance`` — numpy-array reads/writes (the training-framework layer:
+  input-pipeline fetches and checkpoint shard writes).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, BinaryIO, Callable, Optional
+
+import numpy as np
+
+from .context import Context, RequestType, build_context
+from .objects import Result
+from .stage import Stage
+
+
+class Instance:
+    """Generic instance: wraps a stage; builds contexts on the hot path."""
+
+    __slots__ = ("stage", "_workflow_of")
+
+    def __init__(self, stage: Stage, workflow_of: Optional[Callable[[], int]] = None) -> None:
+        self.stage = stage
+        self._workflow_of = workflow_of or threading.get_ident
+
+    def enforce(
+        self,
+        request_type: int,
+        size: int = 0,
+        request: Any = None,
+        request_context: Optional[str] = None,
+        workflow_id: Optional[int] = None,
+    ) -> Result:
+        ctx = build_context(
+            request_type,
+            size=size,
+            workflow_id=self._workflow_of() if workflow_id is None else workflow_id,
+            request_context=request_context,
+        )
+        return self.stage.enforce(ctx, request)
+
+    def enforce_ctx(self, ctx: Context, request: Any = None) -> Result:
+        return self.stage.enforce(ctx, request)
+
+
+class PosixInstance(Instance):
+    """POSIX-like facade (paper §4.1: layer-oriented interfaces)."""
+
+    def read(self, fobj: BinaryIO, n: int) -> bytes:
+        self.enforce(RequestType.read, size=n)
+        return fobj.read(n)
+
+    def pread(self, fobj: BinaryIO, n: int, offset: int) -> bytes:
+        self.enforce(RequestType.read, size=n)
+        fobj.seek(offset)
+        return fobj.read(n)
+
+    def write(self, fobj: BinaryIO, buf: bytes) -> int:
+        result = self.enforce(RequestType.write, size=len(buf), request=buf)
+        payload = result.content if result.content is not None else buf
+        return fobj.write(payload)
+
+    def open(self, path: str, mode: str = "rb") -> BinaryIO:
+        self.enforce(RequestType.open, size=0)
+        return open(path, mode)
+
+    def close(self, fobj: BinaryIO) -> None:
+        self.enforce(RequestType.close, size=0)
+        fobj.close()
+
+    def fsync(self, fobj: BinaryIO) -> None:
+        import os
+
+        self.enforce(RequestType.fsync, size=0)
+        os.fsync(fobj.fileno())
+
+
+class KVInstance(Instance):
+    """Key-value facade: enforcement around a backing dict-like store."""
+
+    def put(self, store, key, value) -> None:
+        size = len(value) if hasattr(value, "__len__") else 0
+        self.enforce(RequestType.put, size=size, request=value)
+        store[key] = value
+
+    def get(self, store, key):
+        value = store.get(key)
+        size = len(value) if value is not None and hasattr(value, "__len__") else 0
+        self.enforce(RequestType.get, size=size)
+        return value
+
+    def delete(self, store, key) -> None:
+        self.enforce(RequestType.delete, size=0)
+        store.pop(key, None)
+
+
+class ArrayInstance(Instance):
+    """Training-framework facade: enforce around ndarray I/O.
+
+    ``on_read``/``on_write`` wrap a producing/consuming thunk so the byte count
+    is known to the stage; transformations installed on the channel (compress,
+    quantize, checksum) are applied to the payload on writes.
+    """
+
+    def on_read(self, nbytes: int, thunk: Callable[[], np.ndarray]) -> np.ndarray:
+        self.enforce(RequestType.read, size=nbytes)
+        return thunk()
+
+    def on_write(self, array: np.ndarray, sink: Callable[[Any], None]) -> Result:
+        result = self.enforce(RequestType.write, size=array.nbytes, request=array)
+        sink(result.content if result.content is not None else array)
+        return result

@@ -1,0 +1,99 @@
+"""Rules: control-plane actions that update data-plane state (paper §3.1).
+
+Three types, verbatim from the paper:
+
+* **housekeeping rules** — manage stage organization (create/remove channels
+  and enforcement objects),
+* **differentiation rules** — install request→channel / request→object
+  mappings over context classifiers (with wildcard support as in Table 1),
+* **enforcement rules** — push a new state into a given enforcement object
+  (``obj_config``), e.g. a new token-bucket rate.
+
+Rules are plain serializable dataclasses so they can cross the UNIX-domain
+socket between the control plane and stages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+#: classifier names usable in differentiation rules
+CLASSIFIERS = ("workflow_id", "request_type", "request_context", "tenant")
+
+WILDCARD = "*"
+
+
+@dataclass(frozen=True)
+class HousekeepingRule:
+    """op ∈ {create_channel, remove_channel, create_object, remove_object}."""
+
+    op: str
+    channel: str
+    object_id: Optional[str] = None
+    object_kind: Optional[str] = None
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {
+            "rule": "hsk",
+            "op": self.op,
+            "channel": self.channel,
+            "object_id": self.object_id,
+            "object_kind": self.object_kind,
+            "params": self.params,
+        }
+
+
+@dataclass(frozen=True)
+class DifferentiationRule:
+    """Map requests whose classifiers match ``match`` to ``channel`` (and,
+    when ``object_id`` is set, to that enforcement object inside the channel).
+
+    ``match`` maps classifier name → exact value; absent classifiers are
+    wildcards (Table 1 semantics). More-specific rules win (most matched
+    classifiers first; install order breaks ties).
+    """
+
+    channel: str
+    match: Dict[str, Any] = field(default_factory=dict)
+    object_id: Optional[str] = None
+
+    def mask(self) -> Tuple[str, ...]:
+        return tuple(c for c in CLASSIFIERS if c in self.match)
+
+    def key(self) -> Tuple[Any, ...]:
+        return tuple(self.match[c] for c in self.mask())
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {"rule": "dif", "channel": self.channel, "match": self.match, "object_id": self.object_id}
+
+
+@dataclass(frozen=True)
+class EnforcementRule:
+    """Adjust enforcement object ``object_id`` of ``channel`` with ``state``."""
+
+    channel: str
+    object_id: str
+    state: Dict[str, Any] = field(default_factory=dict)
+
+    def to_wire(self) -> Dict[str, Any]:
+        return {"rule": "enf", "channel": self.channel, "object_id": self.object_id, "state": self.state}
+
+
+def rule_from_wire(msg: Dict[str, Any]):
+    kind = msg.get("rule")
+    if kind == "hsk":
+        return HousekeepingRule(
+            op=msg["op"],
+            channel=msg["channel"],
+            object_id=msg.get("object_id"),
+            object_kind=msg.get("object_kind"),
+            params=msg.get("params") or {},
+        )
+    if kind == "dif":
+        return DifferentiationRule(
+            channel=msg["channel"], match=msg.get("match") or {}, object_id=msg.get("object_id")
+        )
+    if kind == "enf":
+        return EnforcementRule(channel=msg["channel"], object_id=msg["object_id"], state=msg.get("state") or {})
+    raise ValueError(f"unknown rule wire format: {msg!r}")

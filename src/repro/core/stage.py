@@ -1,0 +1,179 @@
+"""Data plane stage: differentiation + enforcement modules (paper §3.2–§3.4).
+
+A ``Stage`` is embedded in an I/O layer. It holds channels, the request→channel
+differentiation tables, and exposes the five-call control interface of Table 2
+(``stage_info``, ``hsk_rule``, ``dif_rule``, ``enf_rule``, ``collect``).
+
+Differentiation follows the paper's two-phase scheme:
+  * phase 1 (setup): differentiation rules define which classifier combinations
+    ("masks") are considered and install token→channel mappings;
+  * phase 2 (runtime): ``select_channel`` hashes the request's classifiers
+    under each installed mask (most-specific first) and dispatches to the first
+    match, falling back to a default channel.
+
+The hot path (enforce) is lock-free over read-mostly routing tables.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from .channel import DEFAULT_OBJECT_ID, Channel
+from .clock import Clock, DEFAULT_CLOCK
+from .context import Context
+from .hashing import token_for
+from .objects import OBJECT_KINDS, EnforcementObject, Result
+from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from .stats import StageStats
+
+DEFAULT_CHANNEL = "default"
+
+
+class Stage:
+    def __init__(
+        self,
+        name: str,
+        clock: Clock = DEFAULT_CLOCK,
+        create_default_channel: bool = True,
+    ) -> None:
+        self.name = name
+        self.pid = os.getpid()
+        self._clock = clock
+        self._channels: Dict[str, Channel] = {}
+        # ordered (mask, {token: channel_name}) — most specific first
+        self._routing: List[Tuple[Tuple[str, ...], Dict[int, str]]] = []
+        #: classifier-tuple → resolved channel (pure function of _routing)
+        self._route_cache: Dict[tuple, str] = {}
+        self._mutate = threading.Lock()
+        if create_default_channel:
+            self._channels[DEFAULT_CHANNEL] = Channel(DEFAULT_CHANNEL, clock)
+
+    # ------------------------------------------------------------------ #
+    # housekeeping                                                       #
+    # ------------------------------------------------------------------ #
+    def create_channel(self, name: str) -> Channel:
+        with self._mutate:
+            if name not in self._channels:
+                channels = dict(self._channels)
+                channels[name] = Channel(name, self._clock)
+                self._channels = channels
+        return self._channels[name]
+
+    def remove_channel(self, name: str) -> None:
+        with self._mutate:
+            channels = dict(self._channels)
+            channels.pop(name, None)
+            self._channels = channels
+
+    def channel(self, name: str) -> Optional[Channel]:
+        return self._channels.get(name)
+
+    def channels(self) -> List[str]:
+        return list(self._channels.keys())
+
+    # ------------------------------------------------------------------ #
+    # differentiation                                                    #
+    # ------------------------------------------------------------------ #
+    def add_channel_route(self, mask: Tuple[str, ...], key: Tuple[Any, ...], channel: str) -> None:
+        with self._mutate:
+            routing = [(m, dict(t)) for m, t in self._routing]
+            for m, table in routing:
+                if m == mask:
+                    table[token_for(key)] = channel
+                    break
+            else:
+                routing.append((mask, {token_for(key): channel}))
+            routing.sort(key=lambda e: -len(e[0]))
+            self._routing = routing
+            self._route_cache = {}  # routing changed: resolved routes stale
+
+    def select_channel(self, ctx: Context) -> str:
+        # resolved-route memo: murmur hashing of classifier strings is the
+        # Python hot-path bottleneck (§Perf iteration 1); the mapping
+        # classifiers→channel is pure, so cache the resolution per exact
+        # classifier tuple (cleared on any dif_rule change).
+        key = (ctx.workflow_id, ctx.request_type, ctx.request_context, ctx.tenant)
+        cached = self._route_cache.get(key)
+        if cached is not None:
+            return cached
+        name = DEFAULT_CHANNEL
+        for mask, table in self._routing:
+            token = token_for(tuple(getattr(ctx, c) for c in mask))
+            hit = table.get(token)
+            if hit is not None:
+                name = hit
+                break
+        if len(self._route_cache) < 65536:
+            self._route_cache[key] = name
+        return name
+
+    # ------------------------------------------------------------------ #
+    # enforcement (Instance API: ``enforce``)                            #
+    # ------------------------------------------------------------------ #
+    def enforce(self, ctx: Context, request: Any = None) -> Result:
+        name = self.select_channel(ctx)
+        chan = self._channels.get(name)
+        if chan is None:
+            chan = self._channels.get(DEFAULT_CHANNEL)
+            if chan is None:  # stage with no channels: pass through
+                return Result(content=request)
+        return chan.enforce(ctx, request)
+
+    # ------------------------------------------------------------------ #
+    # control interface (Table 2)                                        #
+    # ------------------------------------------------------------------ #
+    def stage_info(self) -> Dict[str, Any]:
+        return {
+            "pid": self.pid,
+            "stage": self.name,
+            "channels": {n: c.describe() for n, c in self._channels.items()},
+        }
+
+    def hsk_rule(self, rule: HousekeepingRule) -> bool:
+        if rule.op == "create_channel":
+            self.create_channel(rule.channel)
+            return True
+        if rule.op == "remove_channel":
+            self.remove_channel(rule.channel)
+            return True
+        if rule.op == "create_object":
+            chan = self._channels.get(rule.channel)
+            if chan is None or rule.object_kind not in OBJECT_KINDS:
+                return False
+            params = dict(rule.params)
+            cls = OBJECT_KINDS[rule.object_kind]
+            if rule.object_kind in ("drl", "priority_gate"):
+                params.setdefault("clock", self._clock)
+            chan.add_object(rule.object_id or DEFAULT_OBJECT_ID, cls(**params))
+            return True
+        if rule.op == "remove_object":
+            chan = self._channels.get(rule.channel)
+            if chan is None:
+                return False
+            chan.remove_object(rule.object_id or DEFAULT_OBJECT_ID)
+            return True
+        return False
+
+    def dif_rule(self, rule: DifferentiationRule) -> bool:
+        if rule.channel not in self._channels:
+            return False
+        if rule.object_id is None:
+            self.add_channel_route(rule.mask(), rule.key(), rule.channel)
+        else:
+            self._channels[rule.channel].add_object_route(rule.mask(), rule.key(), rule.object_id)
+        return True
+
+    def enf_rule(self, rule: EnforcementRule) -> bool:
+        chan = self._channels.get(rule.channel)
+        if chan is None:
+            return False
+        return chan.configure_object(rule.object_id, rule.state)
+
+    def collect(self) -> StageStats:
+        return StageStats(per_channel={n: c.collect() for n, c in self._channels.items()})
+
+    # convenience: attach a raw EnforcementObject (programmatic setup path;
+    # the paper allows configuring stages directly as well as via rules §3.3)
+    def install(self, channel: str, object_id: str, obj: EnforcementObject) -> None:
+        self.create_channel(channel).add_object(object_id, obj)

@@ -1,0 +1,105 @@
+"""Per-workflow statistics counters (paper §4.3).
+
+Channels register every enforced request. ``collect`` (the control-plane call)
+returns windowed metrics — ops, bytes, and mean throughput since the previous
+collection — and resets the window, exactly the semantics the paper's feedback
+loops (Algorithms 1–2) rely on.
+
+Counters are updated on the stage hot path, so the fast path is two integer
+adds under a lock that is never held across I/O.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict
+
+from .clock import Clock, DEFAULT_CLOCK
+
+
+@dataclass
+class StatsSnapshot:
+    """Windowed metrics returned by ``collect`` for one channel."""
+
+    channel: str
+    ops: int
+    bytes: int
+    window_seconds: float
+    #: mean throughput over the window, bytes/s
+    throughput: float
+    #: mean op rate over the window, ops/s
+    iops: float
+    cumulative_ops: int = 0
+    cumulative_bytes: int = 0
+    #: requests currently blocked inside enforcement objects — lets control
+    #: algorithms treat a starved-but-waiting flow as active
+    inflight: int = 0
+
+
+class ChannelStats:
+    __slots__ = (
+        "_lock", "_clock", "_ops", "_bytes", "_cum_ops", "_cum_bytes", "_window_start", "_inflight", "name"
+    )
+
+    def __init__(self, name: str, clock: Clock = DEFAULT_CLOCK) -> None:
+        self.name = name
+        self._lock = threading.Lock()
+        self._clock = clock
+        self._ops = 0
+        self._bytes = 0
+        self._cum_ops = 0
+        self._cum_bytes = 0
+        self._inflight = 0
+        self._window_start = clock.now()
+
+    def begin_op(self) -> None:
+        with self._lock:
+            self._inflight += 1
+
+    def record(self, size: int) -> None:
+        with self._lock:
+            self._ops += 1
+            self._bytes += size
+            if self._inflight > 0:
+                self._inflight -= 1
+
+    def collect(self) -> StatsSnapshot:
+        now = self._clock.now()
+        with self._lock:
+            window = max(now - self._window_start, 1e-9)
+            snap = StatsSnapshot(
+                channel=self.name,
+                ops=self._ops,
+                bytes=self._bytes,
+                window_seconds=window,
+                throughput=self._bytes / window,
+                iops=self._ops / window,
+                cumulative_ops=self._cum_ops + self._ops,
+                cumulative_bytes=self._cum_bytes + self._bytes,
+                inflight=self._inflight,
+            )
+            self._cum_ops += self._ops
+            self._cum_bytes += self._bytes
+            self._ops = 0
+            self._bytes = 0
+            self._window_start = now
+        return snap
+
+
+@dataclass
+class StageStats:
+    """Aggregate view over all channels of a stage."""
+
+    per_channel: Dict[str, StatsSnapshot] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.bytes for s in self.per_channel.values())
+
+    @property
+    def total_ops(self) -> int:
+        return sum(s.ops for s in self.per_channel.values())
+
+    def throughput_of(self, channel: str) -> float:
+        snap = self.per_channel.get(channel)
+        return snap.throughput if snap else 0.0

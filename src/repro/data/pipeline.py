@@ -1,0 +1,172 @@
+"""Input pipeline with a PAIO stage on the read path.
+
+Every shard read flows through an :class:`ArrayInstance` with the ``fg_fetch``
+request context (the *foreground flow* of the training job's I/O stack —
+paper §5 mapping). The control plane observes the pipeline's bandwidth via the
+stage's statistics and allocates leftover bandwidth to background flows
+(checkpoints, eval) — PAIO's tail-latency policy applied to training.
+
+The pipeline prefetches on a background thread into a bounded queue so the
+device never blocks on storage unless the storage is genuinely saturated —
+which is exactly the condition the control plane reacts to.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FG_FETCH, ArrayInstance, RequestType, Stage, propagate_context
+from repro.models.model import ArchConfig
+
+
+class SyntheticTokenSource:
+    """Deterministic synthetic tokens (seeded per batch index).
+
+    Tokens follow a Zipf-like unigram distribution so a model has learnable
+    structure (loss drops from ln(V) toward the source entropy) — uniform
+    noise would make smoke-training flat.
+    """
+
+    def __init__(self, vocab: int, batch: int, seq: int, seed: int = 0) -> None:
+        self.vocab, self.batch, self.seq, self.seed = vocab, batch, seq, seed
+        ranks = np.arange(vocab, dtype=np.float64)
+        p = 1.0 / (ranks + 5.0)
+        self._p = p / p.sum()
+
+    def read(self, index: int) -> np.ndarray:
+        rng = np.random.default_rng(self.seed + index)
+        flat = rng.choice(self.vocab, size=self.batch * self.seq, p=self._p)
+        return flat.reshape(self.batch, self.seq).astype(np.int32)
+
+    @property
+    def nbytes_per_batch(self) -> int:
+        return self.batch * self.seq * 4
+
+
+class FileTokenSource:
+    """Memory-mapped token shards on disk (one flat int32 stream per shard)."""
+
+    def __init__(self, paths: list[str], batch: int, seq: int) -> None:
+        self.paths = list(paths)
+        self.batch, self.seq = batch, seq
+        self._maps = [np.memmap(p, dtype=np.int32, mode="r") for p in self.paths]
+        self._sizes = [m.shape[0] for m in self._maps]
+
+    @staticmethod
+    def write_shard(path: str, tokens: np.ndarray) -> None:
+        arr = np.asarray(tokens, np.int32)
+        with open(path, "wb") as f:
+            f.write(arr.tobytes())
+            f.flush()
+            os.fsync(f.fileno())
+
+    def read(self, index: int) -> np.ndarray:
+        need = self.batch * self.seq
+        shard = self._maps[index % len(self._maps)]
+        n_windows = max(shard.shape[0] - need, 1)
+        off = (index * 9973) % n_windows
+        return np.array(shard[off : off + need]).reshape(self.batch, self.seq)
+
+    @property
+    def nbytes_per_batch(self) -> int:
+        return self.batch * self.seq * 4
+
+
+class DataPipeline:
+    """Prefetching loader; reads are enforced by the given PAIO stage."""
+
+    def __init__(
+        self,
+        source,
+        stage: Optional[Stage] = None,
+        prefetch: int = 2,
+        channel_context: str = FG_FETCH,
+    ) -> None:
+        self.source = source
+        self.instance = ArrayInstance(stage) if stage is not None else None
+        self.channel_context = channel_context
+        self._queue: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._index = 0
+        self._thread: Optional[threading.Thread] = None
+
+    # -- synchronous read (used by tests and the quickstart) ---------------
+    def read_batch(self, index: int) -> np.ndarray:
+        if self.instance is None:
+            return self.source.read(index)
+        with propagate_context(self.channel_context):
+            return self.instance.on_read(self.source.nbytes_per_batch, lambda: self.source.read(index))
+
+    # -- background prefetch ------------------------------------------------
+    def start(self) -> "DataPipeline":
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True, name="paio-data-pipeline")
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            batch = self.read_batch(self._index)
+            self._index += 1
+            while not self._stop.is_set():
+                try:
+                    self._queue.put(batch, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def __iter__(self) -> Iterator[np.ndarray]:
+        return self
+
+    def __next__(self) -> np.ndarray:
+        if self._thread is None:
+            batch = self.read_batch(self._index)
+            self._index += 1
+            return batch
+        return self._queue.get()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            while not self._queue.empty():  # unblock producer
+                try:
+                    self._queue.get_nowait()
+                except queue.Empty:
+                    break
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+# --------------------------------------------------------------------------- #
+# batch specs per (arch × shape cell) — shared by dry-run and training         #
+# --------------------------------------------------------------------------- #
+def make_batch_specs(cfg: ArchConfig, batch: int, seq: int, kind: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of one step.
+
+    ``kind``: ``train`` (full-seq batch), ``prefill`` (full-seq serve),
+    ``decode`` (one token against a ``seq``-long cache — token specs only;
+    cache specs come from ``models.init_caches`` via ``eval_shape``).
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    s_tok = 1 if kind == "decode" else seq
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "audio":
+        specs["frames"] = jax.ShapeDtypeStruct((batch, s_tok, cfg.frontend_dim), f32)
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((batch, s_tok), i32)
+        return specs
+    if cfg.family == "vlm":
+        if kind != "decode":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct((batch, cfg.n_vision_tokens, cfg.d_model), f32)
+            s_tok = max(s_tok - cfg.n_vision_tokens, 1)  # total seq budget includes vision tokens
+    specs["tokens"] = jax.ShapeDtypeStruct((batch, s_tok), i32)
+    if kind == "decode":
+        specs["positions"] = jax.ShapeDtypeStruct((batch, 1), i32)
+    return specs

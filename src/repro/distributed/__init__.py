@@ -1,0 +1,4 @@
+"""Distribution: logical sharding rules, compressed collectives, pipeline."""
+from .sharding import DEFAULT_RULES, active_mesh, logical_to_spec, lsc, named_sharding, sharding_rules
+
+__all__ = ["DEFAULT_RULES", "active_mesh", "logical_to_spec", "lsc", "named_sharding", "sharding_rules"]

@@ -1,0 +1,88 @@
+"""Compressed collectives: int8 gradient all-reduce with error feedback.
+
+Distributed-optimization trick for bandwidth-bound data parallelism: the
+all-reduce is decomposed into reduce-scatter (full precision — the summation
+must not quantize) followed by int8-quantized all-gather, cutting the gather
+half of the ring traffic ~2× (plus 1/128 for scales). On the ICI roofline:
+plain AR moves 2·(n-1)/n·N·2B; this moves (n-1)/n·N·(2B + 1.03B).
+
+``ErrorFeedback`` carries the per-step quantization residual so the bias is
+corrected over time (Karimireddy et al., EF-SGD) — used by the optimizer when
+``compress_grads`` is enabled.
+
+The quantization here is the pure-jnp reference (kernels/quantize/ref) so it
+traces inside ``shard_map``; on TPU the Pallas kernel is substituted by XLA
+custom-call through the same ops entry.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _quantize_1d(x: Array, block: int = 256) -> Tuple[Array, Array]:
+    n = x.shape[0]
+    pad = (-n) % block
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    tiles = xp.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(tiles), axis=1, keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(tiles / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_1d(q: Array, scale: Array, n: int) -> Array:
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    return x[:n]
+
+
+def compressed_psum_mean(x: Array, axis_name: str, block: int = 256) -> Array:
+    """Mean over ``axis_name`` with int8-compressed all-gather half.
+
+    Must be called inside ``shard_map``. Works on any-shape ``x``.
+    """
+    n_dev = jax.lax.axis_size(axis_name)
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    size = flat.shape[0]
+    pad = (-size) % (n_dev * block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    # 1) reduce-scatter the sum in full precision (summation must be exact-ish)
+    shard = jax.lax.psum_scatter(flat, axis_name, scatter_dimension=0, tiled=True) / n_dev
+    # 2) quantize the local shard, all-gather int8 + scales
+    q, scale = _quantize_1d(shard, block)
+    q_all = jax.lax.all_gather(q, axis_name, axis=0, tiled=True)
+    s_all = jax.lax.all_gather(scale, axis_name, axis=0, tiled=True)
+    out = _dequantize_1d(q_all, s_all, size)
+    return out.reshape(shape).astype(x.dtype)
+
+
+class ErrorFeedback:
+    """Residual-carrying compression wrapper (EF-SGD).
+
+    state = pytree of residuals; ``apply`` compresses (g + e), returns the
+    decompressed value and the new residual.
+    """
+
+    @staticmethod
+    def init(grads: Any) -> Any:
+        return jax.tree_util.tree_map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    @staticmethod
+    def apply(grads: Any, residual: Any, block: int = 256) -> Tuple[Any, Any]:
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            flat = target.reshape(-1)
+            q, s = _quantize_1d(flat, block)
+            deq = _dequantize_1d(q, s, flat.shape[0]).reshape(g.shape)
+            return deq.astype(g.dtype), target - deq
+
+        pairs = jax.tree_util.tree_map(one, grads, residual)
+        outer = jax.tree_util.tree_structure(grads)
+        new_g = jax.tree_util.tree_map(lambda p: p[0], pairs, is_leaf=lambda v: isinstance(v, tuple))
+        new_e = jax.tree_util.tree_map(lambda p: p[1], pairs, is_leaf=lambda v: isinstance(v, tuple))
+        return new_g, new_e

@@ -1,0 +1,129 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Model code annotates intermediates with *logical* axis names
+(``batch``, ``seq``, ``embed``, ``heads``, ``kv_heads``, ``ff``, ``experts``,
+``vocab``, ``layers``, ``kv_seq``, ``stack``). A :class:`ShardingRules` context
+maps logical names to mesh axes; outside any context the annotations are
+no-ops, so the same model code runs on a single CPU device and on a 512-chip
+mesh unchanged.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+#: default logical→mesh translation for a ("data","model") mesh; the pod axis
+#: (multi-pod) folds into data-parallel dimensions.
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "fsdp": ("pod", "data"),     # parameter sharding axis for FSDP/ZeRO-3
+    "seq": None,
+    "kv_seq": "data",            # sequence parallelism for long-context decode caches
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "q_lora": None,
+    "ff": "model",
+    "experts": "model",
+    "expert_group": ("pod", "data"),
+    "capacity": None,
+    "vocab": "model",
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "stack": None,
+}
+
+
+class _Active(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Dict[str, Axis] = {}
+        self.manual = False  # inside shard_map: sharding constraints disallowed
+
+
+_active = _Active()
+
+
+@contextmanager
+def sharding_rules(mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+    """Activate logical sharding over ``mesh`` for the enclosed trace."""
+    prev_mesh, prev_rules = _active.mesh, _active.rules
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop mesh axes that don't exist (e.g. "pod" on single-pod meshes)
+    names = set(mesh.axis_names)
+
+    def _filter(ax: Axis) -> Axis:
+        if ax is None:
+            return None
+        if isinstance(ax, str):
+            return ax if ax in names else None
+        kept = tuple(a for a in ax if a in names)
+        return kept if kept else None
+
+    _active.mesh = mesh
+    _active.rules = {k: _filter(v) for k, v in merged.items()}
+    try:
+        yield
+    finally:
+        _active.mesh, _active.rules = prev_mesh, prev_rules
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]]) -> P:
+    rules = _active.rules
+    spec, used = [], set()
+    for name in logical_axes:
+        ax = rules.get(name) if name is not None else None
+        # a mesh axis may appear at most once in a PartitionSpec
+        if ax is not None:
+            flat = (ax,) if isinstance(ax, str) else tuple(ax)
+            flat = tuple(a for a in flat if a not in used)
+            used.update(flat)
+            ax = None if not flat else (flat[0] if len(flat) == 1 else flat)
+        spec.append(ax)
+    return P(*spec)
+
+
+@contextmanager
+def manual_region():
+    """Mark a shard_map body: ``lsc`` becomes a no-op (manual axes)."""
+    prev = _active.manual
+    _active.manual = True
+    try:
+        yield
+    finally:
+        _active.manual = prev
+
+
+def lsc(x, logical_axes: Sequence[Optional[str]]):
+    """``with_sharding_constraint`` by logical axis names (no-op w/o context)."""
+    if _active.mesh is None or _active.manual:
+        return x
+    spec = logical_to_spec(logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_active.mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    if _active.mesh is None:
+        return None
+    return NamedSharding(_active.mesh, logical_to_spec(logical_axes))
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _active.mesh
+
+
+def batch_axes() -> Tuple[str, ...]:
+    """Mesh axes the logical batch dim maps to under the active rules."""
+    ax = _active.rules.get("batch")
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)

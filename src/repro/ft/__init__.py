@@ -1,0 +1,3 @@
+from .monitor import HeartbeatMonitor, StragglerReport
+
+__all__ = ["HeartbeatMonitor", "StragglerReport"]

@@ -1,0 +1,72 @@
+"""Fault-tolerance monitors: heartbeats + straggler detection.
+
+At scale every host runs a training loop and reports per-step heartbeats; the
+PAIO control plane consumes this monitor's reports:
+
+* a **dead** host (missed heartbeats) triggers checkpoint-restart on the
+  survivors (elastic resharding handles the smaller mesh);
+* a **straggler** (step time ≫ fleet median) first gets its *background* I/O
+  squeezed — an enforcement rule dropping its checkpoint/eval DRL rates to
+  ``min_b`` — before more disruptive action, applying the paper's Algorithm 1
+  philosophy (protect the latency-critical flow) to fleet health.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.clock import Clock, DEFAULT_CLOCK
+
+
+@dataclass
+class StragglerReport:
+    dead: List[str] = field(default_factory=list)
+    stragglers: List[str] = field(default_factory=list)
+    median_step: float = 0.0
+    per_host_step: Dict[str, float] = field(default_factory=dict)
+
+
+class HeartbeatMonitor:
+    def __init__(
+        self,
+        dead_after: float = 10.0,
+        straggler_factor: float = 1.5,
+        clock: Clock = DEFAULT_CLOCK,
+    ) -> None:
+        self.dead_after = dead_after
+        self.straggler_factor = straggler_factor
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._last_beat: Dict[str, float] = {}
+        self._step_time: Dict[str, float] = {}
+
+    def beat(self, host: str, step_seconds: Optional[float] = None) -> None:
+        now = self._clock.now()
+        with self._lock:
+            self._last_beat[host] = now
+            if step_seconds is not None:
+                # EWMA so a single hiccup doesn't flag a straggler
+                prev = self._step_time.get(host)
+                self._step_time[host] = step_seconds if prev is None else 0.7 * prev + 0.3 * step_seconds
+
+    def report(self) -> StragglerReport:
+        now = self._clock.now()
+        with self._lock:
+            dead = [h for h, t in self._last_beat.items() if now - t > self.dead_after]
+            alive_steps = {h: s for h, s in self._step_time.items() if h not in dead}
+            if not alive_steps:
+                return StragglerReport(dead=dead)
+            values = sorted(alive_steps.values())
+            median = values[len(values) // 2]
+            stragglers = [
+                h for h, s in alive_steps.items() if median > 0 and s > self.straggler_factor * median
+            ]
+            return StragglerReport(
+                dead=dead, stragglers=stragglers, median_step=median, per_host_step=dict(alive_steps)
+            )
+
+    def forget(self, host: str) -> None:
+        with self._lock:
+            self._last_beat.pop(host, None)
+            self._step_time.pop(host, None)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_reference(
+    q: jax.Array,  # [B, Sq, H, d]
+    k: jax.Array,  # [B, Sk, K, d]
+    v: jax.Array,  # [B, Sk, K, d]
+    *,
+    scale: Optional[float] = None,
+    causal: bool = True,
+    sliding_window: int = 0,
+    kv_len: Optional[int] = None,
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    scale = d**-0.5 if scale is None else scale
+    group = h // kh
+    kf = jnp.repeat(k, group, axis=2)
+    vf = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32)) * scale
+    q_idx = jnp.arange(sq)[:, None]
+    k_idx = jnp.arange(sk)[None, :]
+    ok = jnp.ones((sq, sk), bool)
+    if causal:
+        ok &= q_idx >= k_idx
+    if sliding_window > 0:
+        ok &= (q_idx - k_idx) < sliding_window
+    if kv_len is not None:
+        ok &= k_idx < kv_len
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import dequantize_int8, quantize_int8
+
+__all__ = ["dequantize_int8", "quantize_int8"]

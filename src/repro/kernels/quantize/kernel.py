@@ -1,0 +1,67 @@
+"""Int8 block-quantization Pallas kernels.
+
+The device-side twin of PAIO's data-transformation enforcement object
+(paper §3.1): used by the compressed all-reduce (gradient compression with
+error feedback) and by quantized checkpoint shards.
+
+Each (block_r × block_c) tile gets one fp32 scale = absmax/127 — tiles are
+(128, 128) by default so rows/lanes align with the VPU/MXU layout and one
+tile plus its scale comfortably fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[0, 0]).astype(x_ref.dtype)
+
+
+def quantize_2d(x: jax.Array, block_r: int = 128, block_c: int = 128, interpret: bool = False):
+    """x [R, C] (R % block_r == 0, C % block_c == 0) → (int8 [R,C], scales)."""
+    r, c = x.shape
+    grid = (r // block_r, c // block_c)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, block_c), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, c), jnp.int8),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q, s
+
+
+def dequantize_2d(q: jax.Array, s: jax.Array, out_dtype=jnp.float32, block_r: int = 128, block_c: int = 128, interpret: bool = False):
+    r, c = q.shape
+    grid = (r // block_r, c // block_c)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), out_dtype),
+        interpret=interpret,
+    )(q, s)

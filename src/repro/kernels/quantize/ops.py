@@ -1,0 +1,39 @@
+"""Jit-able wrappers: flatten/pad any-rank arrays into aligned 2D tiles."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dequantize_2d, quantize_2d
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _to_2d(x: jax.Array, block_r: int, block_c: int) -> Tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    cols = block_c
+    rows = math.ceil(flat.size / cols)
+    rows_pad = (-rows) % block_r
+    pad = rows * cols - flat.size + rows_pad * cols
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows + rows_pad, cols), pad
+
+
+def quantize_int8(x: jax.Array, block_r: int = 128, block_c: int = 128, interpret: Optional[bool] = None):
+    """Any-shape → (q int8 [R,C], scales [R/br, C/bc], meta)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    x2, pad = _to_2d(x, block_r, block_c)
+    q, s = quantize_2d(x2, block_r, block_c, interpret=interpret)
+    return q, s, {"shape": x.shape, "dtype": x.dtype, "pad": pad}
+
+
+def dequantize_int8(q: jax.Array, s: jax.Array, meta, block_r: int = 128, block_c: int = 128, interpret: Optional[bool] = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    x2 = dequantize_2d(q, s, jnp.float32, block_r, block_c, interpret=interpret)
+    flat = x2.reshape(-1)
+    if meta["pad"]:
+        flat = flat[: flat.size - meta["pad"]]
+    return flat.reshape(meta["shape"]).astype(meta["dtype"])

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the int8 block-quantization kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_reference(x: jax.Array, block_r: int = 128, block_c: int = 128):
+    r, c = x.shape
+    gr, gc = r // block_r, c // block_c
+    tiles = x.astype(jnp.float32).reshape(gr, block_r, gc, block_c).transpose(0, 2, 1, 3)
+    absmax = jnp.max(jnp.abs(tiles), axis=(2, 3))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(tiles / scale[:, :, None, None]), -127, 127).astype(jnp.int8)
+    q = q.transpose(0, 2, 1, 3).reshape(r, c)
+    return q, scale
+
+
+def dequantize_reference(q: jax.Array, scale: jax.Array, out_dtype=jnp.float32, block_r: int = 128, block_c: int = 128):
+    r, c = q.shape
+    gr, gc = scale.shape
+    tiles = q.astype(jnp.float32).reshape(gr, block_r, gc, block_c).transpose(0, 2, 1, 3)
+    x = tiles * scale[:, :, None, None]
+    return x.transpose(0, 2, 1, 3).reshape(r, c).astype(out_dtype)

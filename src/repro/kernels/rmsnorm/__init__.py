@@ -1,0 +1,3 @@
+from .ops import rms_norm_fused
+
+__all__ = ["rms_norm_fused"]

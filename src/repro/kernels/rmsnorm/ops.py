@@ -1,0 +1,32 @@
+"""Jit-able wrapper: any [..., d] input, VMEM-aware row blocking."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import rmsnorm_2d
+
+_INTERPRET = jax.default_backend() != "tpu"
+_VMEM_BUDGET = 4 * 1024 * 1024  # leave room for double buffering
+
+
+def rms_norm_fused(x: jax.Array, scale: jax.Array, eps: float = 1e-5, interpret: Optional[bool] = None):
+    interpret = _INTERPRET if interpret is None else interpret
+    d = x.shape[-1]
+    lead = x.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    # block_rows: tile ≤ VMEM budget at fp32, multiple of 8, ≤ rows
+    block = max(min(_VMEM_BUDGET // (d * 4), rows), 1)
+    block = max((block // 8) * 8, 1)
+    pad = (-rows) % block
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = rmsnorm_2d(x2, scale, eps=eps, block_rows=block, interpret=interpret)
+    if pad:
+        out = out[:rows]
+    return out.reshape(*lead, d)

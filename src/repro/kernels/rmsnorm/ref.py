@@ -1,0 +1,4 @@
+"""Oracle: the model's own rms_norm (models.common) is the reference."""
+from repro.models.common import rms_norm as rmsnorm_reference
+
+__all__ = ["rmsnorm_reference"]

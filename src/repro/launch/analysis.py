@@ -1,0 +1,173 @@
+"""Compiled-artifact analysis: collective bytes from HLO text + roofline terms.
+
+``cost_analysis`` gives HLO FLOPs and bytes-accessed; collective traffic is
+not in there, so we parse the (SPMD, per-device) optimized HLO and sum the
+result sizes of every ``all-gather`` / ``all-reduce`` / ``reduce-scatter`` /
+``all-to-all`` / ``collective-permute``, converting each to an estimated
+*bytes moved per device* with a ring cost model:
+
+  all-reduce       2 · size · (n-1)/n      (reduce-scatter + all-gather)
+  all-gather       size · (n-1)/n          (size = gathered result)
+  reduce-scatter   size · (n-1)            (size = scattered result; input n×)
+  all-to-all       size · (n-1)/n
+  collective-permute  size
+
+The per-device program's collective bytes divided by the per-link bandwidth is
+the collective roofline term (equivalent to global_bytes / (chips · link_bw)).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+# e.g.  %x = f32[8,128]{1,0} all-reduce(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # replica_groups=[G,n]<=[N]
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    result_bytes: Dict[str, int]
+    moved_bytes: Dict[str, float]
+
+    @property
+    def total_moved(self) -> float:
+        return sum(self.moved_bytes.values())
+
+
+def parse_collectives(hlo_text: str, default_group: int = 2) -> CollectiveStats:
+    counts = {c: 0 for c in _COLLECTIVES}
+    result_bytes = {c: 0 for c in _COLLECTIVES}
+    moved = {c: 0.0 for c in _COLLECTIVES}
+    seen_start: set = set()
+    for line in hlo_text.splitlines():
+        if "-done(" in line:  # async pair: count the start only
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        size = _shape_bytes(m.group("shape"))
+        n = max(_group_size(line, default_group), 1)
+        counts[op] += 1
+        result_bytes[op] += size
+        if op == "all-reduce":
+            moved[op] += 2.0 * size * (n - 1) / n
+        elif op == "all-gather":
+            moved[op] += size * (n - 1) / n
+        elif op == "reduce-scatter":
+            moved[op] += size * (n - 1)
+        elif op == "all-to-all":
+            moved[op] += size * (n - 1) / n
+        else:  # collective-permute
+            moved[op] += size
+    return CollectiveStats(counts=counts, result_bytes=result_bytes, moved_bytes=moved)
+
+
+# --------------------------------------------------------------------------- #
+# roofline                                                                     #
+# --------------------------------------------------------------------------- #
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device (SPMD program) quantities
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    # terms in seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_flops_ratio: float
+    memory_per_device_bytes: float = 0.0
+    note: str = ""
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1)
+
+
+def roofline_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    collectives: CollectiveStats,
+    model_flops_global: float,
+    hw: Dict[str, float],
+    memory_per_device: float = 0.0,
+    note: str = "",
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))  # per-device (SPMD module)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = collectives.total_moved
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = bytes_accessed / hw["hbm_bandwidth"]
+    collective_s = coll / hw["ici_link_bandwidth"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    model_flops_dev = model_flops_global / chips
+    return Roofline(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=bytes_accessed,
+        collective_bytes=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops_dev,
+        useful_flops_ratio=(model_flops_dev / flops) if flops else 0.0,
+        memory_per_device_bytes=memory_per_device,
+        note=note,
+    )

@@ -1,0 +1,95 @@
+"""The (architecture × input-shape) cell matrix for the dry-run.
+
+Shapes (assigned):
+  train_4k     seq 4,096   global_batch 256   → train_step
+  prefill_32k  seq 32,768  global_batch 32    → serve (prefill / encoder fwd)
+  decode_32k   seq 32,768  global_batch 128   → serve (1 token, 32k cache)
+  long_500k    seq 524,288 global_batch 1     → serve (1 token, 500k state)
+
+Skips (recorded in DESIGN.md §Shape-cell skips):
+  * long_500k only for sub-quadratic archs (ssm / hybrid);
+  * decode shapes skipped for encoder-only (hubert).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import ALL_ARCHS, get as get_config
+from repro.models.model import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+SUBQUADRATIC = {"hymba_1_5b", "xlstm_350m"}
+ENCODER_ONLY = {"hubert_xlarge"}
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return "long_500k needs sub-quadratic attention (full-attention arch)"
+    if shape in ("decode_32k", "long_500k") and arch in ENCODER_ONLY:
+        return "encoder-only arch has no autoregressive decode step"
+    return None
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    cells = []
+    for arch in ALL_ARCHS:
+        for shape in SHAPES:
+            if skip_reason(arch, shape) is None:
+                cells.append((arch, shape))
+    return cells
+
+
+def tune_for_cell(cfg: ArchConfig, cell: ShapeCell, dp: int) -> Tuple[ArchConfig, int]:
+    """Execution config for one cell: attention backend, remat, microbatches."""
+    params_b = cfg.total_params() / 1e9
+    if cell.kind == "train":
+        target_mb = 8 if params_b > 10 else 4  # §Perf C2: fewer micros → fewer per-micro weight gathers + grad reductions
+        microbatches = max(min(target_mb, cell.global_batch // max(dp, 1)), 1)
+        cfg = cfg.replace(attn_backend="chunked", attn_chunk=2048, remat=True, mlstm_chunk=512)
+    elif cell.kind == "prefill":
+        microbatches = 1
+        # wider mLSTM chunks bound the probes' unrolled-body count at 32k
+        cfg = cfg.replace(attn_backend="chunked", attn_chunk=2048, mlstm_chunk=2048)
+    else:  # decode: q_len=1 — naive core over the cache is the right shape
+        microbatches = 1
+        cfg = cfg.replace(attn_backend="xla")
+    # MoE dispatch-group sizing: keep the [G,S',E,C] tensor bounded
+    if cfg.n_experts > 0:
+        cfg = cfg.replace(moe_group_size=256 if cell.kind == "train" else 512)
+    return cfg, microbatches
+
+
+def model_flops_for_cell(cfg: ArchConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens processed.
+
+    Train counts fwd+bwd (6·N·D); serve steps count 2·N·D. Attention
+    quadratic FLOPs are excluded by definition (this is the *useful* model
+    FLOPs yardstick the roofline ratio asks for).
+    """
+    n_layers_active = cfg.active_params_per_layer() * cfg.n_layers
+    embed = cfg.vocab_padded * cfg.d_model  # lm head matmul params
+    n_active = n_layers_active + embed
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq
+        return 2.0 * n_active * tokens
+    tokens = cell.global_batch * 1  # decode: one token per sequence
+    return 2.0 * n_active * tokens

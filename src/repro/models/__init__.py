@@ -1,0 +1,22 @@
+"""Pure-JAX model zoo covering the six assigned architecture families."""
+from .model import (
+    ArchConfig,
+    cache_logical_axes,
+    forward,
+    init_caches,
+    init_params,
+    loss_fn,
+    mask_padded_vocab,
+    param_logical_axes,
+)
+
+__all__ = [
+    "ArchConfig",
+    "cache_logical_axes",
+    "forward",
+    "init_caches",
+    "init_params",
+    "loss_fn",
+    "mask_padded_vocab",
+    "param_logical_axes",
+]

@@ -1,0 +1,89 @@
+"""Serving engine: batched prefill + decode with a PAIO stage on the
+request path.
+
+Every admitted request flows through the stage with its tenant classifier, so
+an SDS control plane can enforce per-tenant token-rate policies (the paper's
+§5.2 fair-share scenario applied to serving): each tenant's channel holds a
+DRL object whose rate is the tenant's *token budget per second*; Algorithm 2
+redistributes leftover budget when tenants go idle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RequestType, Stage, build_context, propagate_tenant
+from repro.launch.steps import build_decode_step, build_prefill_step
+from repro.models import init_caches
+from repro.models.model import ArchConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: List[int]
+    prompt_len: int
+    tenant: Optional[str] = None
+
+
+class ServeEngine:
+    """Single-host serving: fixed max batch, greedy decoding.
+
+    ``generate`` runs prompts through prefill then step-wise decode; when a
+    ``stage`` is given, each generated token consumes tokens from the
+    tenant's channel (context-only enforcement — the zero-copy fast path of
+    paper §3.4), so token throughput per tenant is shaped by the control
+    plane.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        max_seq: int = 512,
+        stage: Optional[Stage] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.stage = stage
+        self._prefill = jax.jit(build_prefill_step(cfg))
+        self._decode = jax.jit(build_decode_step(cfg), donate_argnums=1)
+
+    def _enforce(self, tenant: Optional[str], n_tokens: int) -> None:
+        if self.stage is None:
+            return
+        with propagate_tenant(tenant or "default"):
+            ctx = build_context(RequestType.get, size=n_tokens)
+            self.stage.enforce(ctx, None)
+
+    def generate(
+        self,
+        prompts: np.ndarray,  # [B, S0] int32
+        max_new_tokens: int = 32,
+        tenant: Optional[str] = None,
+    ) -> List[GenerationResult]:
+        b, s0 = prompts.shape
+        caches = init_caches(self.cfg, b, self.max_seq, dtype=self.cfg.compute_dtype)
+        batch = {
+            "tokens": jnp.asarray(prompts, jnp.int32),
+            "positions": jnp.broadcast_to(jnp.arange(s0, dtype=jnp.int32), (b, s0)),
+        }
+        self._enforce(tenant, b * s0)  # prefill cost: prompt tokens
+        next_tok, caches = self._prefill(self.params, caches, batch)
+        outs = [[int(t)] for t in np.asarray(next_tok)[:, 0]]
+        for step in range(1, max_new_tokens):
+            pos = jnp.full((b, 1), s0 + step - 1, jnp.int32)
+            self._enforce(tenant, b)  # one token per sequence
+            next_tok, caches = self._decode(
+                self.params, caches, {"tokens": next_tok, "positions": pos}
+            )
+            for i, t in enumerate(np.asarray(next_tok)[:, 0]):
+                outs[i].append(int(t))
+        return [GenerationResult(tokens=o, prompt_len=s0, tenant=tenant) for o in outs]

@@ -1,0 +1,3 @@
+from .metrics import ProcIOReader, StepTimer
+
+__all__ = ["ProcIOReader", "StepTimer"]

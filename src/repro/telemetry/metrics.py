@@ -1,0 +1,70 @@
+"""Telemetry: /proc I/O counters (paper §4.3's control-plane side channel)
+and step-time tracking for the straggler monitor."""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, Optional
+
+
+class ProcIOReader:
+    """Reads read_bytes/write_bytes from /proc/<pid>/io (paper §4.3: the
+    control plane compares block-layer counters with stage statistics)."""
+
+    def __init__(self, pid: Optional[int] = None) -> None:
+        import os
+
+        self.path = f"/proc/{pid or os.getpid()}/io"
+        self._last: Dict[str, int] = {}
+
+    def read(self) -> Dict[str, int]:
+        counters: Dict[str, int] = {}
+        try:
+            with open(self.path) as f:
+                for line in f:
+                    key, _, val = line.partition(":")
+                    counters[key.strip()] = int(val)
+        except OSError:
+            pass
+        return counters
+
+    def delta(self) -> Dict[str, int]:
+        now = self.read()
+        d = {k: now.get(k, 0) - self._last.get(k, 0) for k in now}
+        self._last = now
+        return d
+
+
+class StepTimer:
+    """Sliding-window step-duration stats; feeds the straggler monitor."""
+
+    def __init__(self, window: int = 50) -> None:
+        self._durations: Deque[float] = deque(maxlen=window)
+        self._lock = threading.Lock()
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> float:
+        dt = time.monotonic() - (self._t0 or time.monotonic())
+        with self._lock:
+            self._durations.append(dt)
+        return dt
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._durations.append(seconds)
+
+    def mean(self) -> float:
+        with self._lock:
+            return sum(self._durations) / len(self._durations) if self._durations else 0.0
+
+    def percentile(self, q: float) -> float:
+        with self._lock:
+            if not self._durations:
+                return 0.0
+            data = sorted(self._durations)
+            k = min(int(q / 100.0 * len(data)), len(data) - 1)
+            return data[k]

@@ -1,0 +1,436 @@
+"""PAIO core unit + property tests (paper §3–§4 semantics)."""
+from __future__ import annotations
+
+import tempfile
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    BG_COMPACTION_HIGH,
+    BG_COMPACTION_L0,
+    BG_FLUSH,
+    DRL,
+    Checksum,
+    Compress,
+    Context,
+    ControlPlane,
+    Decompress,
+    DifferentiationRule,
+    EnforcementRule,
+    FairShareControl,
+    FlowSpec,
+    HousekeepingRule,
+    Noop,
+    QuantizeInt8,
+    RequestType,
+    Stage,
+    StageServer,
+    TailLatencyControl,
+    TokenBucket,
+    VirtualClock,
+    build_context,
+    max_min_fair_share,
+    murmur3_32,
+    propagate_context,
+    tail_latency_allocation,
+    token_for,
+)
+from repro.core.control import RemoteStageHandle
+
+
+# --------------------------------------------------------------------------- #
+# hashing                                                                      #
+# --------------------------------------------------------------------------- #
+class TestMurmur3:
+    def test_reference_vectors(self):
+        # SMHasher / Appleby reference values for murmur3 x86_32
+        assert murmur3_32(b"", 0) == 0x00000000
+        assert murmur3_32(b"", 1) == 0x514E28B7
+        assert murmur3_32(b"", 0xFFFFFFFF) == 0x81F16F39
+        assert murmur3_32(b"hello", 0) == 0x248BFA47
+        assert murmur3_32(b"hello, world", 0) == 0x149BBB7F
+        assert murmur3_32(b"The quick brown fox jumps over the lazy dog", 0x9747B28C) == 0x2FA826CD
+
+    @given(st.binary(max_size=64), st.integers(min_value=0, max_value=2**32 - 1))
+    def test_deterministic_and_32bit(self, data, seed):
+        h1, h2 = murmur3_32(data, seed), murmur3_32(data, seed)
+        assert h1 == h2
+        assert 0 <= h1 < 2**32
+
+    @given(st.tuples(st.integers(), st.text(max_size=8), st.integers(0, 8)))
+    def test_token_stability(self, parts):
+        assert token_for(parts) == token_for(parts)
+
+
+# --------------------------------------------------------------------------- #
+# token bucket / DRL                                                           #
+# --------------------------------------------------------------------------- #
+class TestTokenBucket:
+    def test_burst_then_pace(self):
+        clk = VirtualClock()
+        tb = TokenBucket(rate=100.0, capacity=50.0, clock=clk)
+        assert tb.consume(50) == 0.0  # initial burst within capacity
+        w = tb.consume(100)  # now must wait 1s for 100 tokens
+        assert w == pytest.approx(1.0)
+        assert clk.now() == pytest.approx(1.0)
+
+    def test_try_consume(self):
+        clk = VirtualClock()
+        tb = TokenBucket(rate=10.0, capacity=10.0, clock=clk)
+        assert tb.try_consume(10)
+        assert not tb.try_consume(1)
+        clk.sleep(0.5)
+        assert tb.try_consume(5)
+
+    def test_rate_change_applies(self):
+        clk = VirtualClock()
+        tb = TokenBucket(rate=10.0, capacity=10.0, clock=clk)
+        tb.consume(10)
+        tb.set_rate(1000.0, capacity=1000.0)
+        w = tb.consume(100)
+        assert w == pytest.approx(0.1)
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        consumes=st.lists(st.floats(min_value=1.0, max_value=500.0), min_size=1, max_size=40),
+        rate=st.floats(min_value=10.0, max_value=1000.0),
+        capacity=st.floats(min_value=1.0, max_value=200.0),
+    )
+    def test_rate_bound_invariant(self, consumes, rate, capacity):
+        """Total admitted by time T never exceeds capacity + rate*T (paper's
+        token-bucket contract: the knob the control plane relies on)."""
+        clk = VirtualClock()
+        tb = TokenBucket(rate=rate, capacity=capacity, clock=clk)
+        admitted = 0.0
+        for n in consumes:
+            tb.consume(n)
+            admitted += n
+            t = clk.now()
+            assert admitted <= capacity + rate * t + 1e-6 * admitted + 1e-9
+
+    def test_concurrent_consumers_do_not_over_admit(self):
+        # real clock, short run: 2 threads sharing a 1 MiB/s bucket for ~0.3s
+        tb = TokenBucket(rate=1e6, capacity=1e4)
+        admitted = []
+        import time
+
+        t0 = time.monotonic()
+
+        def worker():
+            local = 0
+            while time.monotonic() - t0 < 0.3:
+                tb.consume(1000)
+                local += 1000
+            admitted.append(local)
+
+        threads = [threading.Thread(target=worker) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.monotonic() - t0
+        assert sum(admitted) <= 1e4 + 1e6 * elapsed * 1.10 + 1000  # 10% sched slack
+
+
+class TestDRL:
+    def test_enforce_and_reconfigure(self):
+        clk = VirtualClock()
+        drl = DRL(rate=1000.0, refill_period=0.1, clock=clk)
+        ctx = Context(workflow_id=1, request_type=RequestType.write, size=100)
+        drl.obj_enf(ctx)  # burst capacity = 100 tokens
+        r = drl.obj_enf(ctx)
+        assert r.wait_seconds == pytest.approx(0.1)
+        drl.obj_config({"rate": 10000.0})
+        assert drl.rate == 10000.0
+        # paper's rate(r): capacity tracks rate × refill_period
+        assert drl._bucket.capacity == pytest.approx(1000.0)
+
+
+# --------------------------------------------------------------------------- #
+# transformations                                                              #
+# --------------------------------------------------------------------------- #
+class TestTransformations:
+    def test_compress_roundtrip(self):
+        comp, decomp = Compress(level=3), Decompress()
+        payload = np.arange(4096, dtype=np.float32)
+        ctx = Context(1, RequestType.write, payload.nbytes)
+        out = comp.obj_enf(ctx, payload)
+        assert out.meta["compressed_bytes"] < out.meta["raw_bytes"]
+        back = decomp.obj_enf(ctx, out.content)
+        assert np.array_equal(np.frombuffer(back.content, np.float32), payload)
+
+    def test_checksum(self):
+        ck = Checksum()
+        ctx = Context(1, RequestType.write, 16)
+        r1 = ck.obj_enf(ctx, b"abcd1234abcd1234")
+        r2 = ck.obj_enf(ctx, b"abcd1234abcd1234")
+        assert r1.meta["crc32"] == r2.meta["crc32"]
+
+    @given(
+        st.integers(min_value=2, max_value=5).flatmap(
+            lambda nd: st.lists(st.integers(1, 9), min_size=nd, max_size=nd)
+        )
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_quantize_roundtrip_error_bound(self, shape):
+        rng = np.random.default_rng(0)
+        arr = rng.normal(size=shape).astype(np.float32)
+        q = QuantizeInt8(block=64)
+        ctx = Context(1, RequestType.write, arr.nbytes)
+        r = q.obj_enf(ctx, arr)
+        back = QuantizeInt8.dequantize(r.content, r.meta)
+        assert back.shape == arr.shape
+        scale = np.abs(arr).max() / 127.0
+        assert np.max(np.abs(back - arr)) <= scale * 1.01 + 1e-7
+
+
+# --------------------------------------------------------------------------- #
+# differentiation: channel + object routing                                    #
+# --------------------------------------------------------------------------- #
+class TestDifferentiation:
+    def _stage(self):
+        clk = VirtualClock()
+        st_ = Stage("kvs", clock=clk)
+        for ch in ("fg", "flush", "compact"):
+            st_.hsk_rule(HousekeepingRule(op="create_channel", channel=ch))
+        st_.dif_rule(DifferentiationRule(channel="flush", match={"request_context": BG_FLUSH}))
+        st_.dif_rule(DifferentiationRule(channel="compact", match={"request_context": BG_COMPACTION_L0}))
+        st_.dif_rule(DifferentiationRule(channel="compact", match={"request_context": BG_COMPACTION_HIGH}))
+        st_.dif_rule(DifferentiationRule(channel="fg", match={"request_context": ""}))
+        return st_
+
+    def test_select_channel_by_context(self):
+        st_ = self._stage()
+        assert st_.select_channel(Context(1, RequestType.write, 1, BG_FLUSH)) == "flush"
+        assert st_.select_channel(Context(1, RequestType.write, 1, BG_COMPACTION_L0)) == "compact"
+        assert st_.select_channel(Context(9, RequestType.read, 1, "")) == "fg"
+
+    def test_most_specific_mask_wins(self):
+        st_ = self._stage()
+        st_.hsk_rule(HousekeepingRule(op="create_channel", channel="flush_writes"))
+        st_.dif_rule(
+            DifferentiationRule(
+                channel="flush_writes",
+                match={"request_context": BG_FLUSH, "request_type": int(RequestType.write)},
+            )
+        )
+        assert st_.select_channel(Context(1, int(RequestType.write), 1, BG_FLUSH)) == "flush_writes"
+        assert st_.select_channel(Context(1, int(RequestType.read), 1, BG_FLUSH)) == "flush"
+
+    def test_object_routing_within_channel(self):
+        st_ = self._stage()
+        st_.hsk_rule(
+            HousekeepingRule(
+                op="create_object", channel="compact", object_id="drl_l0", object_kind="drl", params={"rate": 100.0}
+            )
+        )
+        st_.hsk_rule(
+            HousekeepingRule(
+                op="create_object", channel="compact", object_id="drl_ln", object_kind="drl", params={"rate": 10.0}
+            )
+        )
+        st_.dif_rule(
+            DifferentiationRule(channel="compact", match={"request_context": BG_COMPACTION_L0}, object_id="drl_l0")
+        )
+        st_.dif_rule(
+            DifferentiationRule(channel="compact", match={"request_context": BG_COMPACTION_HIGH}, object_id="drl_ln")
+        )
+        chan = st_.channel("compact")
+        assert chan.select_object(Context(1, 2, 1, BG_COMPACTION_L0)) == "drl_l0"
+        assert chan.select_object(Context(1, 2, 1, BG_COMPACTION_HIGH)) == "drl_ln"
+        assert chan.select_object(Context(1, 2, 1, "unknown")) == "0"
+
+    @given(
+        wf=st.integers(0, 1000),
+        rt=st.sampled_from([int(RequestType.read), int(RequestType.write)]),
+        rc=st.sampled_from(["", BG_FLUSH, BG_COMPACTION_L0, BG_COMPACTION_HIGH, "other"]),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_routing_total_and_deterministic(self, wf, rt, rc):
+        """Every request maps to exactly one channel, deterministically."""
+        st_ = self._stage()
+        ctx = Context(wf, rt, 1, rc)
+        c1, c2 = st_.select_channel(ctx), st_.select_channel(ctx)
+        assert c1 == c2
+        assert c1 in set(st_.channels())
+
+    def test_context_propagation_nesting(self):
+        with propagate_context(BG_FLUSH):
+            assert build_context(RequestType.write).request_context == BG_FLUSH
+            with propagate_context(BG_COMPACTION_L0):
+                assert build_context(RequestType.write).request_context == BG_COMPACTION_L0
+            assert build_context(RequestType.write).request_context == BG_FLUSH
+        assert build_context(RequestType.write).request_context == ""
+
+    def test_stage_oblivious_passthrough(self):
+        """Targeted system is oblivious to enforcement (paper §3.4): with no
+        rules installed everything flows through the default noop channel."""
+        st_ = Stage("bare", clock=VirtualClock())
+        r = st_.enforce(Context(1, RequestType.read, 4096), b"x" * 16)
+        assert r.content == b"x" * 16 and r.wait_seconds == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# control algorithms (pure functions)                                          #
+# --------------------------------------------------------------------------- #
+class TestMaxMinFairShare:
+    @given(
+        demands=st.lists(st.floats(min_value=0.0, max_value=1e9), min_size=1, max_size=16),
+        capacity=st.floats(min_value=1.0, max_value=1e9),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_invariants(self, demands, capacity):
+        rates = max_min_fair_share(demands, capacity)
+        assert len(rates) == len(demands)
+        total = sum(rates)
+        # never exceeds capacity (+fp slack)
+        assert total <= capacity * (1 + 1e-9) + 1e-6
+        # work conserving when demand saturates capacity; always fully
+        # allocated otherwise too (leftover is redistributed — Alg. 2 l.9-10)
+        assert total == pytest.approx(capacity, rel=1e-6)
+        # each instance gets at least min(demand, equal share)
+        n = len(demands)
+        for d, r in zip(demands, rates):
+            assert r >= min(d, capacity / n) - 1e-6
+
+    @given(
+        demands=st.lists(st.floats(min_value=1.0, max_value=1e6), min_size=2, max_size=10),
+        capacity=st.floats(min_value=10.0, max_value=1e6),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_max_min_optimality(self, demands, capacity):
+        """No instance's *demand-bounded* allocation can grow without shrinking
+        another instance with a smaller allocation (max-min property),
+        evaluated before leftover redistribution."""
+        n = len(demands)
+        order = sorted(range(n), key=lambda i: demands[i])
+        rates = [0.0] * n
+        left = capacity
+        for pos, i in enumerate(order):
+            fair = left / (n - pos)
+            rates[i] = min(demands[i], fair)
+            left -= rates[i]
+        for i in range(n):
+            if rates[i] < demands[i] - 1e-6:  # unsatisfied
+                # then i's rate must be >= every other rate that is capped
+                for j in range(n):
+                    if j != i and rates[j] > rates[i] + 1e-6:
+                        assert rates[j] <= demands[j] + 1e-6  # j only exceeds if fully satisfied
+
+    def test_paper_scenario(self):
+        # ABCI: demands 150/200/300/350 MiB/s under 1024 MiB/s
+        rates = max_min_fair_share([150.0, 200.0, 300.0, 350.0], 1024.0)
+        for d, r in zip([150, 200, 300, 350], rates):
+            assert r >= d  # all guarantees met, leftover shared
+        assert sum(rates) == pytest.approx(1024.0)
+
+
+class TestTailLatencyAllocation:
+    @given(
+        fg=st.floats(min_value=0, max_value=400),
+        fl=st.booleans(),
+        l0=st.booleans(),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_invariants(self, fg, fl, l0):
+        kvs_b, min_b = 200.0, 10.0
+        b_fl, b_l0, b_ln = tail_latency_allocation(kvs_b, fg, fl, l0, min_b)
+        # all flows keep flowing (l.3): worst case the two high-priority flows
+        # split left_B == min_B between them
+        assert min(b_fl, b_l0, b_ln) >= min_b / 2
+        left = max(kvs_b - fg, min_b)
+        assert b_fl + b_l0 + b_ln <= left + 2 * min_b + 1e-9
+        if fl and l0:
+            assert b_fl == b_l0 == pytest.approx(left / 2)
+        if not fl and not l0:
+            assert b_ln == pytest.approx(left)  # leftover to low-priority
+
+
+# --------------------------------------------------------------------------- #
+# control plane loop + UDS transport                                           #
+# --------------------------------------------------------------------------- #
+class TestControlPlane:
+    def _tenant_stage(self, name, clk):
+        st_ = Stage(name, clock=clk)
+        st_.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+        st_.hsk_rule(
+            HousekeepingRule(op="create_object", channel="io", object_id="0", object_kind="drl", params={"rate": 1.0})
+        )
+        st_.dif_rule(DifferentiationRule(channel="io", match={"request_type": int(RequestType.read)}))
+        return st_
+
+    def test_fair_share_loop_sets_rates(self):
+        clk = VirtualClock()
+        stages = {f"I{i}": self._tenant_stage(f"I{i}", clk) for i in range(1, 5)}
+        algo = FairShareControl(
+            flows={n: FlowSpec(stage=n, channel="io") for n in stages},
+            demands={"I1": 150.0, "I2": 200.0, "I3": 300.0, "I4": 350.0},
+            max_bandwidth=1024.0,
+        )
+        cp = ControlPlane(algo, clock=clk)
+        for n, s in stages.items():
+            cp.register_stage(s)
+        cp.run_once()
+        rates = {n: stages[n].channel("io").get_object("0").rate for n in stages}
+        assert all(rates[f"I{i}"] >= d for i, d in zip(range(1, 5), [150, 200, 300, 350]))
+        assert sum(rates.values()) == pytest.approx(1024.0)
+        # instance leaves → leftover redistributed next iteration
+        algo.remove_instance("I4")
+        cp.run_once()
+        rates3 = {n: stages[n].channel("io").get_object("0").rate for n in ("I1", "I2", "I3")}
+        assert sum(rates3.values()) == pytest.approx(1024.0)
+        assert rates3["I3"] > rates["I3"]
+
+    def test_tail_latency_loop_reallocates(self):
+        clk = VirtualClock()
+        st_ = Stage("kvs", clock=clk)
+        for ch in ("fg", "flush", "l0", "ln"):
+            st_.hsk_rule(HousekeepingRule(op="create_channel", channel=ch))
+        for ch, rate in (("flush", 50.0), ("l0", 50.0), ("ln", 50.0)):
+            st_.hsk_rule(
+                HousekeepingRule(op="create_object", channel=ch, object_id="0", object_kind="drl", params={"rate": rate})
+            )
+        algo = TailLatencyControl(
+            fg=FlowSpec("kvs", "fg"),
+            flush=FlowSpec("kvs", "flush"),
+            l0=FlowSpec("kvs", "l0"),
+            ln=[FlowSpec("kvs", "ln")],
+            kvs_bandwidth=200.0,
+            min_bandwidth=10.0,
+        )
+        cp = ControlPlane(algo, clock=clk)
+        cp.register_stage(st_)
+        # simulate: fg flowing at 100 B/s, flush active, no L0
+        st_.channel("fg").stats.record(100)
+        st_.channel("flush").stats.record(50)
+        clk.sleep(1.0)
+        cp.run_once()
+        assert algo.last_allocation[0] == pytest.approx(100.0)  # flush gets leftover
+        assert st_.channel("flush").get_object("0").rate == pytest.approx(100.0)
+        assert st_.channel("ln").get_object("0").rate == pytest.approx(10.0)
+
+    def test_uds_transport_end_to_end(self):
+        clk = VirtualClock()
+        st_ = self._tenant_stage("remote", clk)
+        with tempfile.TemporaryDirectory() as d:
+            path = f"{d}/paio.sock"
+            server = StageServer(st_, path).start()
+            try:
+                handle = RemoteStageHandle(path)
+                info = handle.stage_info()
+                assert info["stage"] == "remote" and "io" in info["channels"]
+                assert handle.enf_rule(EnforcementRule(channel="io", object_id="0", state={"rate": 777.0}))
+                assert st_.channel("io").get_object("0").rate == 777.0
+                assert handle.hsk_rule(HousekeepingRule(op="create_channel", channel="x"))
+                assert "x" in st_.channels()
+                assert handle.dif_rule(DifferentiationRule(channel="x", match={"request_context": "zz"}))
+                st_.channel("io").stats.record(4096)
+                stats = handle.collect()
+                assert stats.per_channel["io"].bytes == 4096
+                handle.close()
+            finally:
+                server.stop()

@@ -1,0 +1,255 @@
+"""Distributed correctness on 8 virtual devices (subprocess: the XLA host
+device-count flag must be set before jax initializes — tests stay at 1 device).
+
+Covers: sharded train step ≡ single-device step, decode sharding ≡ single
+device, elastic checkpoint resharding across meshes, compressed all-reduce
+error bounds.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout, env=env, cwd=REPO
+    )
+    assert proc.returncode == 0, f"subprocess failed:\nSTDOUT:{proc.stdout}\nSTDERR:{proc.stderr[-4000:]}"
+    return proc.stdout
+
+
+pytestmark = pytest.mark.slow
+
+
+class TestShardedTraining:
+    def test_dp_tp_train_step_matches_single_device(self):
+        run_with_devices(
+            """
+import jax, jax.numpy as jnp, numpy as np
+import repro.configs as configs
+from repro.distributed.sharding import sharding_rules
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import (TrainConfig, build_train_step, init_train_state,
+                                make_state_shardings, rules_for, make_batch_shardings)
+from repro.optim import AdamWConfig
+
+cfg = configs.get_reduced("llama3_2_1b").replace(compute_dtype=jnp.float32)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)
+tcfg = TrainConfig(opt=AdamWConfig(lr=1e-3))
+
+# single device reference
+state = init_train_state(cfg, jax.random.PRNGKey(0))
+step = jax.jit(build_train_step(cfg, tcfg))
+state_ref, m_ref = step(state, {"tokens": tokens})
+
+# 4x2 mesh (DP=4, TP=2)
+mesh = make_mesh((4, 2))
+rules = rules_for(cfg, batch_size=8, mesh=mesh)
+with mesh, sharding_rules(mesh, rules):
+    shardings = make_state_shardings(cfg, mesh, rules)
+    state2 = init_train_state(cfg, jax.random.PRNGKey(0))
+    state2 = jax.device_put(state2, shardings)
+    bspec = {"tokens": jax.ShapeDtypeStruct(tokens.shape, tokens.dtype)}
+    bshard = make_batch_shardings(cfg, mesh, bspec, rules)
+    batch = jax.device_put({"tokens": tokens}, bshard)
+    step2 = jax.jit(build_train_step(cfg, tcfg), in_shardings=(shardings, bshard),
+                    out_shardings=(shardings, None))
+    state_sh, m_sh = step2(state2, batch)
+
+assert abs(float(m_ref["loss"]) - float(m_sh["loss"])) < 1e-4, (m_ref["loss"], m_sh["loss"])
+ref_leaves = jax.tree_util.tree_leaves(state_ref["params"])
+sh_leaves = jax.tree_util.tree_leaves(state_sh["params"])
+worst = max(float(jnp.max(jnp.abs(a - jax.device_get(b)))) for a, b in zip(ref_leaves, sh_leaves))
+assert worst < 5e-4, worst
+print("DP+TP equivalence OK, worst param diff", worst)
+"""
+        )
+
+    def test_moe_expert_parallel_lowers_with_all_to_all(self):
+        run_with_devices(
+            """
+import jax, jax.numpy as jnp
+import repro.configs as configs
+from repro.distributed.sharding import sharding_rules
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import (TrainConfig, build_train_step, init_train_state,
+                                make_state_shardings, rules_for, make_batch_shardings)
+
+cfg = configs.get_reduced("granite_moe_1b_a400m").replace(moe_group_size=16)
+mesh = make_mesh((2, 4))  # experts sharded over model=4
+rules = rules_for(cfg, batch_size=8, mesh=mesh)
+with mesh, sharding_rules(mesh, rules):
+    shardings = make_state_shardings(cfg, mesh, rules)
+    state = jax.device_put(init_train_state(cfg, jax.random.PRNGKey(0)), shardings)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab)
+    step = jax.jit(build_train_step(cfg, TrainConfig()), in_shardings=(shardings, None),
+                   out_shardings=(shardings, None))
+    state, metrics = step(state, {"tokens": tokens})
+    import numpy as np
+    assert np.isfinite(float(metrics["loss"]))
+    txt = step.lower(state, {"tokens": tokens}).compile().as_text()
+assert ("all-to-all" in txt) or ("all-gather" in txt), "no EP collectives found"
+print("EP sharded MoE step OK; collectives present")
+"""
+        )
+
+    def test_decode_sharded_matches_single_device(self):
+        run_with_devices(
+            """
+import jax, jax.numpy as jnp, numpy as np
+import repro.configs as configs
+from repro.distributed.sharding import sharding_rules
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import (build_decode_step, build_prefill_step,
+                                make_state_shardings, make_cache_shardings, rules_for)
+from repro.models import init_caches, init_params
+
+cfg = configs.get_reduced("llama3_2_1b").replace(compute_dtype=jnp.float32)
+params = init_params(cfg, jax.random.PRNGKey(0))
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
+
+caches = init_caches(cfg, 8, 32, dtype=jnp.float32)
+prefill = jax.jit(build_prefill_step(cfg))
+tok_ref, caches = prefill(params, caches, {"tokens": tokens})
+decode = jax.jit(build_decode_step(cfg))
+tok2_ref, _ = decode(params, caches, {"tokens": tok_ref, "positions": jnp.full((8,1), 16, jnp.int32)})
+
+mesh = make_mesh((4, 2))
+rules = rules_for(cfg, decode=True, batch_size=8, mesh=mesh)
+with mesh, sharding_rules(mesh, rules):
+    pshard = make_state_shardings(cfg, mesh, rules)["params"]
+    cshard = make_cache_shardings(cfg, mesh, rules)
+    params_s = jax.device_put(params, pshard)
+    caches_s = jax.device_put(init_caches(cfg, 8, 32, dtype=jnp.float32), cshard)
+    prefill_s = jax.jit(build_prefill_step(cfg), in_shardings=(pshard, cshard, None),
+                        out_shardings=(None, cshard))
+    tok_s, caches_s = prefill_s(params_s, caches_s, {"tokens": tokens})
+    decode_s = jax.jit(build_decode_step(cfg), in_shardings=(pshard, cshard, None),
+                       out_shardings=(None, cshard))
+    tok2_s, _ = decode_s(params_s, caches_s, {"tokens": tok_s, "positions": jnp.full((8,1), 16, jnp.int32)})
+
+assert np.array_equal(np.array(tok_ref), np.array(jax.device_get(tok_s)))
+assert np.array_equal(np.array(tok2_ref), np.array(jax.device_get(tok2_s)))
+print("sharded decode (seq-parallel KV) matches single device")
+"""
+        )
+
+
+class TestElasticResharding:
+    def test_checkpoint_restores_onto_different_mesh(self, tmp_path):
+        run_with_devices(
+            f"""
+import jax, jax.numpy as jnp, numpy as np
+import repro.configs as configs
+from repro.checkpoint import CheckpointManager
+from repro.distributed.sharding import sharding_rules
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import (TrainConfig, build_train_step, init_train_state,
+                                make_state_shardings, rules_for)
+
+cfg = configs.get_reduced("llama3_2_1b").replace(compute_dtype=jnp.float32)
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
+mgr = CheckpointManager({str(tmp_path)!r})
+
+# train 2 steps on an 8x1 mesh, checkpoint
+mesh_a = make_mesh((8, 1))
+rules_a = rules_for(cfg, batch_size=8, mesh=mesh_a)
+with mesh_a, sharding_rules(mesh_a, rules_a):
+    sh_a = make_state_shardings(cfg, mesh_a, rules_a)
+    state = jax.device_put(init_train_state(cfg, jax.random.PRNGKey(0)), sh_a)
+    step = jax.jit(build_train_step(cfg, TrainConfig()), in_shardings=(sh_a, None), out_shardings=(sh_a, None))
+    for _ in range(2):
+        state, m = step(state, {{"tokens": tokens}})
+    mgr.save(2, state)
+    loss_a = float(m["loss"])
+
+# elastic rescale: resume on a 2x4 mesh (node loss → different parallelism)
+mesh_b = make_mesh((2, 4))
+rules_b = rules_for(cfg, batch_size=8, mesh=mesh_b)
+with mesh_b, sharding_rules(mesh_b, rules_b):
+    sh_b = make_state_shardings(cfg, mesh_b, rules_b)
+    abstract = jax.eval_shape(lambda: init_train_state(cfg, jax.random.PRNGKey(0)))
+    state_b = mgr.restore(2, abstract, shardings=sh_b)
+    step_b = jax.jit(build_train_step(cfg, TrainConfig()), in_shardings=(sh_b, None), out_shardings=(sh_b, None))
+    state_b, m_b = step_b(state_b, {{"tokens": tokens}})
+
+# continuing on the new mesh must match continuing on the old mesh
+with mesh_a, sharding_rules(mesh_a, rules_a):
+    state_a2, m_a2 = step(state, {{"tokens": tokens}})
+assert abs(float(m_b["loss"]) - float(m_a2["loss"])) < 1e-4, (m_b["loss"], m_a2["loss"])
+print("elastic reshard OK: step-3 loss matches across meshes", float(m_b["loss"]))
+"""
+        )
+
+
+class TestCompressedAllReduce:
+    def test_compressed_psum_error_bound(self):
+        run_with_devices(
+            """
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.compression import compressed_psum_mean
+from jax.sharding import Mesh
+from functools import partial
+
+devices = np.array(jax.devices()[:8])
+mesh = Mesh(devices, ("dp",))
+x = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.float32)
+
+@partial(jax.shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec("dp"), out_specs=jax.sharding.PartitionSpec("dp"))
+def reduce_fn(xs):
+    return compressed_psum_mean(xs[0], "dp")[None]
+
+out = reduce_fn(x)
+ref = jnp.mean(x, axis=0)
+err = float(jnp.max(jnp.abs(out[0] - ref)))
+bound = float(jnp.max(jnp.abs(ref))) / 127.0 * 1.05 + 1e-6
+assert err <= bound, (err, bound)
+print("compressed all-reduce err", err, "bound", bound)
+"""
+        )
+
+
+class TestPipelineParallel:
+    def test_gpipe_matches_sequential(self):
+        run_with_devices(
+            """
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import Mesh
+from repro.distributed.pipeline import pipeline_apply
+
+S, M, mb, d = 4, 8, 2, 16
+mesh = Mesh(np.array(jax.devices()[:S]), ("pipe",))
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (S, d, d)) * 0.3
+params = {"w": w}
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"])
+
+x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
+out = pipeline_apply(stage_fn, params, x, mesh)
+
+ref = x
+for i in range(S):
+    ref = jnp.tanh(ref @ w[i])
+err = float(jnp.max(jnp.abs(out - ref)))
+assert err < 1e-5, err
+print("GPipe pipeline matches sequential, err", err)
+
+# collective-permute must be present in the compiled module
+f = jax.jit(lambda p, xs: pipeline_apply(stage_fn, p, xs, mesh))
+txt = f.lower(params, x).compile().as_text()
+assert "collective-permute" in txt
+print("collective-permute present in HLO")
+"""
+        , n_devices=4)

@@ -1,0 +1,55 @@
+"""Serving engine: generation determinism + per-tenant PAIO enforcement."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.core import (
+    DifferentiationRule,
+    HousekeepingRule,
+    Stage,
+    VirtualClock,
+)
+from repro.models import forward, init_params, mask_padded_vocab
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = configs.get_reduced("llama3_2_1b").replace(compute_dtype=jnp.float32)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestServeEngine:
+    def test_greedy_generation_matches_full_forward(self, small_model):
+        cfg, params = small_model
+        engine = ServeEngine(cfg, params, max_seq=32)
+        prompts = np.array([[5, 17, 99, 3], [250, 1, 7, 42]], dtype=np.int32)
+        results = engine.generate(prompts, max_new_tokens=4)
+        # re-derive greedily from full forwards
+        toks = prompts.copy()
+        for _ in range(4):
+            logits, _, _ = forward(cfg, params, {"tokens": jnp.asarray(toks)})
+            logits = mask_padded_vocab(cfg, logits)  # engine never samples pad ids
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            toks = np.concatenate([toks, nxt[:, None]], axis=1)
+        expect = toks[:, prompts.shape[1] :]
+        got = np.array([r.tokens for r in results])
+        np.testing.assert_array_equal(got, expect)
+
+    def test_tenant_enforcement_counts_tokens(self, small_model):
+        cfg, params = small_model
+        stage = Stage("serve")
+        stage.hsk_rule(HousekeepingRule(op="create_channel", channel="tenant_x"))
+        stage.dif_rule(DifferentiationRule(channel="tenant_x", match={"tenant": "tenant_x"}))
+        engine = ServeEngine(cfg, params, max_seq=32, stage=stage)
+        prompts = np.zeros((2, 4), dtype=np.int32)
+        engine.generate(prompts, max_new_tokens=3, tenant="tenant_x")
+        snap = stage.collect().per_channel["tenant_x"]
+        # prefill: 2×4 prompt tokens; decode steps 2..3: 2 tokens each
+        assert snap.cumulative_bytes == 2 * 4 + 2 * 2
