@@ -15,9 +15,10 @@ size-linear byte throughput) is what this benchmark demonstrates.
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
-from typing import Dict, List, Tuple
+from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
@@ -30,6 +31,7 @@ from repro.core import (
     Stage,
     build_context,
     token_for,
+    token_for_batch,
 )
 
 KiB = 1024
@@ -45,8 +47,15 @@ def build_stage(n_channels: int, copy_content: bool) -> Stage:
     return stage
 
 
-def run_loopback(n_channels: int, request_size: int, seconds: float = 1.0) -> Tuple[float, float]:
-    """Returns (ops/s, bytes/s) cumulative across ``n_channels`` client threads."""
+def run_loopback(
+    n_channels: int, request_size: int, seconds: float = 1.0, batch_size: int = 1
+) -> Tuple[float, float]:
+    """Returns (ops/s, bytes/s) cumulative across ``n_channels`` client threads.
+
+    ``batch_size`` = 1 drives the per-request ``enforce`` path; larger values
+    drive ``enforce_batch`` with that many requests per submit (the batched
+    data plane fast path).
+    """
     stage = build_stage(n_channels, copy_content=request_size > 0)
     payload = b"x" * request_size if request_size else None
     counts = [0] * n_channels
@@ -55,9 +64,16 @@ def run_loopback(n_channels: int, request_size: int, seconds: float = 1.0) -> Tu
     def client(i: int) -> None:
         ctx = Context(workflow_id=i, request_type=RequestType.write, size=request_size)
         n = 0
-        while not stop.is_set():
-            stage.enforce(ctx, payload)
-            n += 1
+        if batch_size <= 1:
+            while not stop.is_set():
+                stage.enforce(ctx, payload)
+                n += 1
+        else:
+            ctxs = [ctx] * batch_size
+            payloads = None if payload is None else [payload] * batch_size
+            while not stop.is_set():
+                stage.enforce_batch(ctxs, payloads)
+                n += batch_size
         counts[i] = n
 
     threads = [threading.Thread(target=client, args=(i,), daemon=True) for i in range(n_channels)]
@@ -115,11 +131,54 @@ def profile_ops(n: int = 20000) -> Dict[str, float]:
         token_for((2, 1, "bg_flush"))
     out["murmur_token_ns"] = (time.perf_counter_ns() - t0) / n
 
+    # numpy dispatch overhead makes the vectorized tokenizer break even around
+    # batch 64; the win shows at the route-table fan-outs (hundreds of keys)
+    for bs in (64, 1024):
+        keys = [(i, 1, "bg_flush") for i in range(bs)]
+        reps = max(n // bs, 1)
+        t0 = time.perf_counter_ns()
+        for _ in range(reps):
+            token_for_batch(keys)
+        out[f"murmur_token_batch{bs}_ns"] = (time.perf_counter_ns() - t0) / (reps * bs)
+
     t0 = time.perf_counter_ns()
     for _ in range(n):
         stage.enforce(ctx, None)
     out["end_to_end_enforce_ns"] = (time.perf_counter_ns() - t0) / n
+
+    ctxs64 = [ctx] * 64
+    reps64 = max(n // 64, 1)
+    t0 = time.perf_counter_ns()
+    for _ in range(reps64):
+        stage.enforce_batch(ctxs64, None)
+    out["end_to_end_enforce_batch64_ns"] = (time.perf_counter_ns() - t0) / (reps64 * 64)
     return out
+
+
+def run_matrix(
+    channels: List[int], sizes: List[int], batch_sizes: List[int], seconds: float
+) -> List[Dict[str, Any]]:
+    """The (channels × size × batch) sweep; batch 1 is the per-request baseline."""
+    rows: List[Dict[str, Any]] = []
+    for ch in channels:
+        for size in sizes:
+            base_ops = None
+            for bs in batch_sizes:
+                ops, byts = run_loopback(ch, size, seconds, batch_size=bs)
+                if bs == 1:
+                    base_ops = ops
+                rows.append(
+                    {
+                        "channels": ch,
+                        "request_size": size,
+                        "batch_size": bs,
+                        "ops_per_s": ops,
+                        "gib_per_s": byts / 2**30,
+                        "ns_per_op": 1e9 / max(ops, 1e-9),
+                        "speedup_vs_batch1": (ops / base_ops) if base_ops else None,
+                    }
+                )
+    return rows
 
 
 def main() -> None:
@@ -127,17 +186,43 @@ def main() -> None:
     ap.add_argument("--seconds", type=float, default=1.0)
     ap.add_argument("--channels", default="1,2,4,8")
     ap.add_argument("--sizes", default="0,4096,131072")
+    ap.add_argument(
+        "--batch-sizes",
+        default="1",
+        help="comma list; >1 drives enforce_batch (e.g. 1,16,64,256)",
+    )
+    ap.add_argument("--json", default="", help="write machine-readable results to this path")
     args = ap.parse_args()
 
-    print(f"{'channels':>8} {'size':>8} {'kops/s':>10} {'MiB/s':>10}")
-    for ch in (int(c) for c in args.channels.split(",")):
-        for size in (int(s) for s in args.sizes.split(",")):
-            ops, byts = run_loopback(ch, size, args.seconds)
-            print(f"{ch:>8} {size:>8} {ops/1e3:>10.1f} {byts/2**20:>10.1f}")
+    channels = [int(c) for c in args.channels.split(",")]
+    sizes = [int(s) for s in args.sizes.split(",")]
+    batch_sizes = [int(b) for b in args.batch_sizes.split(",")]
+
+    rows = run_matrix(channels, sizes, batch_sizes, args.seconds)
+    print(f"{'channels':>8} {'size':>8} {'batch':>6} {'kops/s':>10} {'MiB/s':>10} {'ns/op':>9} {'vs b=1':>7}")
+    for r in rows:
+        speedup = f"{r['speedup_vs_batch1']:.2f}x" if r["speedup_vs_batch1"] else "-"
+        print(
+            f"{r['channels']:>8} {r['request_size']:>8} {r['batch_size']:>6} "
+            f"{r['ops_per_s']/1e3:>10.1f} {r['gib_per_s']*1024:>10.1f} "
+            f"{r['ns_per_op']:>9.0f} {speedup:>7}"
+        )
 
     print("\nper-op profile (paper §6.1: ctx 17 ns, selection 85 ns each in C++):")
-    for name, ns in profile_ops().items():
-        print(f"  {name:<24} {ns:>10.0f} ns")
+    profile = profile_ops()
+    for name, ns in profile.items():
+        print(f"  {name:<30} {ns:>10.0f} ns")
+
+    if args.json:
+        payload = {
+            "benchmark": "bench_stage_scalability",
+            "seconds_per_point": args.seconds,
+            "loopback": rows,
+            "per_op_profile_ns": profile,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"\nwrote {args.json}")
 
 
 if __name__ == "__main__":

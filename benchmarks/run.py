@@ -33,6 +33,27 @@ def bench_fig4(seconds: float) -> None:
         emit(f"profile_{name[:-3]}", ns / 1e3, "")
 
 
+def bench_batch(seconds: float) -> None:
+    """Batched vs per-request enforcement (the batched data plane fast path)."""
+    from .bench_stage_scalability import run_loopback
+
+    base_ops, _ = run_loopback(1, 4096, seconds, batch_size=1)
+    emit("batch_enforce_b1_4KiB", 1e6 / max(base_ops, 1e-9), f"{base_ops/1e3:.1f}kops/s")
+    for bs in (64, 256):
+        ops, byts = run_loopback(1, 4096, seconds, batch_size=bs)
+        emit(
+            f"batch_enforce_b{bs}_4KiB",
+            1e6 / max(ops, 1e-9),
+            f"{ops/1e3:.1f}kops/s {byts/2**30:.2f}GiB/s {ops/max(base_ops,1e-9):.2f}x",
+        )
+
+
+def bench_smoke() -> None:
+    """~2 s loopback smoke: one per-request + one batched point, so per-PR CI
+    surfaces hot-path perf regressions without the full matrix."""
+    bench_batch(seconds=1.0)
+
+
 def bench_fig5_7(seconds: float) -> None:
     from .bench_tail_latency import run_system
 
@@ -106,13 +127,21 @@ def bench_roofline() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--skip", default="", help="comma list: fig4,fig5_7,fig8,kernels,roofline")
+    ap.add_argument(
+        "--smoke", action="store_true", help="~2s loopback bench only (per-PR CI perf signal)"
+    )
+    ap.add_argument("--skip", default="", help="comma list: fig4,batch,fig5_7,fig8,kernels,roofline")
     args = ap.parse_args()
     skip = set(args.skip.split(",")) if args.skip else set()
 
     print("name,us_per_call,derived")
+    if args.smoke:
+        bench_smoke()
+        return
     if "fig4" not in skip:
         bench_fig4(seconds=2.0 if args.full else 0.5)
+    if "batch" not in skip:
+        bench_batch(seconds=2.0 if args.full else 0.5)
     if "fig5_7" not in skip:
         bench_fig5_7(seconds=20.0 if args.full else 6.0)
     if "fig8" not in skip:

@@ -1,0 +1,13 @@
+#!/usr/bin/env sh
+# Per-PR smoke: tier-1 (non-slow) tests + a ~2 s loopback bench so hot-path
+# perf regressions are visible in CI output on every PR.
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH
+
+echo "== tier-1 (non-slow) tests =="
+python -m pytest -x -q
+
+echo "== loopback bench smoke (enforce vs enforce_batch) =="
+python -m benchmarks.run --smoke

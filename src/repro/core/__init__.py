@@ -43,7 +43,7 @@ from .control import (
     RemoteStageHandle,
     StageServer,
 )
-from .hashing import murmur3_32, token_for
+from .hashing import murmur3_32, murmur3_32_batch, token_for, token_for_batch
 from .instance import ArrayInstance, Instance, KVInstance, PosixInstance
 from .objects import (
     DRL,
@@ -109,8 +109,10 @@ __all__ = [
     "current_context",
     "max_min_fair_share",
     "murmur3_32",
+    "murmur3_32_batch",
     "propagate_context",
     "propagate_tenant",
     "tail_latency_allocation",
     "token_for",
+    "token_for_batch",
 ]

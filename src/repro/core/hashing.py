@@ -62,3 +62,82 @@ def token_for(parts: tuple, seed: int = 0x5D5) -> int:
     """
     raw = "\x1f".join(str(p) for p in parts).encode("utf-8")
     return murmur3_32(raw, seed)
+
+
+# --------------------------------------------------------------------------- #
+# batched hashing (enforce_batch route resolution)                            #
+# --------------------------------------------------------------------------- #
+#: finalization / mixing constants kept as ints; batch math runs in uint64
+#: with explicit 32-bit masking so numpy never silently widens or warns.
+_FC1 = 0x85EBCA6B
+_FC2 = 0xC2B2AE35
+
+
+def murmur3_32_batch(datas, seed: int = 0):
+    """Vectorized murmur3_32 over a list of byte strings.
+
+    Bit-exact with :func:`murmur3_32` per row (asserted by tests). All rows are
+    packed into one ``[N, W]`` little-endian word matrix; the body rounds run
+    once per *word column* instead of once per word per request, so Python-level
+    work is O(max_len/4) rather than O(total_bytes/4). Returns ``List[int]``.
+    """
+    import numpy as np
+
+    n = len(datas)
+    if n == 0:
+        return []
+    lengths = np.fromiter((len(d) for d in datas), dtype=np.int64, count=n)
+    max_len = int(lengths.max())
+    # +4 spare bytes so tail gathers never index past the row end
+    width = ((max_len + 3) // 4) * 4 + 4
+    buf = np.zeros((n, width), dtype=np.uint8)
+    for i, d in enumerate(datas):
+        if d:
+            buf[i, : len(d)] = np.frombuffer(d, dtype=np.uint8)
+    words = buf.view("<u4").astype(np.uint64)  # [N, width/4]
+
+    h = np.full(n, seed & _MASK, dtype=np.uint64)
+    n_body = lengths // 4  # full 4-byte words per row
+    for j in range(int(n_body.max()) if n else 0):
+        active = n_body > j
+        k = (words[:, j] * _C1) & _MASK
+        k = ((k << 15) | (k >> 17)) & _MASK
+        k = (k * _C2) & _MASK
+        hx = h ^ k
+        hx = ((hx << 13) | (hx >> 19)) & _MASK
+        hx = (hx * 5 + 0xE6546B64) & _MASK
+        h = np.where(active, hx, h)
+
+    # tails (1–3 trailing bytes), gathered per row
+    tail_len = lengths & 3
+    base = (lengths & ~3).astype(np.int64)
+    rows = np.arange(n)
+    b0 = buf[rows, base].astype(np.uint64)
+    b1 = buf[rows, base + 1].astype(np.uint64)
+    b2 = buf[rows, base + 2].astype(np.uint64)
+    k = np.where(tail_len >= 3, b2 << 16, 0).astype(np.uint64)
+    k = np.where(tail_len >= 2, k ^ (b1 << 8), k)
+    k = np.where(tail_len >= 1, k ^ b0, k)
+    k = (k * _C1) & _MASK
+    k = ((k << 15) | (k >> 17)) & _MASK
+    k = (k * _C2) & _MASK
+    h = np.where(tail_len >= 1, h ^ k, h)
+
+    # finalization (fmix32)
+    h ^= lengths.astype(np.uint64)
+    h ^= h >> 16
+    h = (h * _FC1) & _MASK
+    h ^= h >> 13
+    h = (h * _FC2) & _MASK
+    h ^= h >> 16
+    return [int(x) for x in h]
+
+
+def token_for_batch(parts_list, seed: int = 0x5D5):
+    """Batched :func:`token_for`: one vectorized murmur pass over all rows.
+
+    ``parts_list`` is a sequence of classifier tuples; returns ``List[int]``
+    tokens, elementwise equal to ``[token_for(p, seed) for p in parts_list]``.
+    """
+    raws = ["\x1f".join(str(p) for p in parts).encode("utf-8") for parts in parts_list]
+    return murmur3_32_batch(raws, seed)

@@ -16,11 +16,11 @@ Layer-oriented facades are provided so instrumentation is a one-line change
 from __future__ import annotations
 
 import threading
-from typing import Any, BinaryIO, Callable, Optional
+from typing import Any, BinaryIO, Callable, List, Optional, Sequence
 
 import numpy as np
 
-from .context import Context, RequestType, build_context
+from .context import Context, RequestType, build_context, current_context, current_tenant
 from .objects import Result
 from .stage import Stage
 
@@ -52,6 +52,32 @@ class Instance:
 
     def enforce_ctx(self, ctx: Context, request: Any = None) -> Result:
         return self.stage.enforce(ctx, request)
+
+    # -- batch submit API (batched data plane) ---------------------------
+    def enforce_batch(
+        self,
+        request_type: int,
+        sizes: Sequence[int],
+        requests: Optional[Sequence[Any]] = None,
+        request_context: Optional[str] = None,
+        workflow_id: Optional[int] = None,
+    ) -> List[Result]:
+        """Submit a whole batch of same-type requests through the stage.
+
+        Propagated request-context/tenant are sampled once per batch (all
+        requests originate from this call site), contexts are built in one
+        pass, and the stage routes/enforces the batch with amortized cost.
+        """
+        wf = self._workflow_of() if workflow_id is None else workflow_id
+        rc = current_context() if request_context is None else request_context
+        tenant = current_tenant()
+        ctxs = [Context(wf, request_type, s, rc, tenant) for s in sizes]
+        return self.stage.enforce_batch(ctxs, requests)
+
+    def enforce_ctx_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        return self.stage.enforce_batch(ctxs, requests)
 
 
 class PosixInstance(Instance):

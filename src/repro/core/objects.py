@@ -17,7 +17,7 @@ from __future__ import annotations
 import threading
 import zlib
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -25,7 +25,7 @@ from .clock import Clock, DEFAULT_CLOCK
 from .context import Context
 
 
-@dataclass
+@dataclass(slots=True)
 class Result:
     """Outcome of enforcing one request (paper §3.4).
 
@@ -33,6 +33,9 @@ class Result:
     context-only enforcement (performance-control objects never touch bytes —
     the paper's zero-copy fast path). ``wait_seconds`` reports scheduling delay
     imposed by performance-control objects, which feeds telemetry.
+
+    ``slots=True``: Results are created once per enforced request, so their
+    allocation cost is on the batched hot path.
     """
 
     content: Any = None
@@ -48,6 +51,19 @@ class EnforcementObject:
 
     def obj_enf(self, ctx: Context, request: Any = None) -> Result:
         raise NotImplementedError
+
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        """Enforce a whole batch; elementwise equivalent to ``obj_enf``.
+
+        Default falls back to per-item enforcement so every object is batch
+        callable; hot objects override this to amortize locks, clock reads and
+        byte-touching work across the batch.
+        """
+        if requests is None:
+            return [self.obj_enf(ctx) for ctx in ctxs]
+        return [self.obj_enf(ctx, r) for ctx, r in zip(ctxs, requests)]
 
     def obj_config(self, state: Dict[str, Any]) -> None:
         raise NotImplementedError
@@ -73,6 +89,42 @@ class Noop(EnforcementObject):
         if isinstance(request, np.ndarray):
             return Result(content=request.copy())
         return Result(content=request)
+
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        if requests is None:
+            return [Result() for _ in ctxs]
+        if not self.copy_content:
+            return list(map(Result, requests))  # C-level loop, no Python frame
+        first = requests[0] if requests else None
+        if type(first) is bytes and all(type(r) is bytes for r in requests):
+            # bytes are immutable: bytes(r) is the identity (same as obj_enf),
+            # so skip the conversion entirely; the all() guard keeps mixed
+            # batches (None/ndarray/bytearray tails) on the per-item path
+            return list(map(Result, requests))
+        if isinstance(first, (bytearray, memoryview)) and all(
+            isinstance(r, (bytes, bytearray, memoryview)) for r in requests
+        ):
+            # mutable buffers need a real copy: ONE bulk copy for the whole
+            # batch, carved into independent immutable slices (no view into
+            # the joined buffer survives, so nothing pins the batch)
+            joined = b"".join(requests)
+            out: List[Result] = []
+            off = 0
+            for r in requests:
+                end = off + len(r)
+                out.append(Result(joined[off:end]))
+                off = end
+            return out
+        if isinstance(first, np.ndarray):
+            # per-item C-level memcpys; deliberately NOT one np.stack carved
+            # into views — a retained Result must not pin the whole batch
+            return [
+                self.obj_enf(c, r) if not isinstance(r, np.ndarray) else Result(r.copy())
+                for c, r in zip(ctxs, requests)
+            ]
+        return [self.obj_enf(c, r) for c, r in zip(ctxs, requests)]
 
     def obj_config(self, state: Dict[str, Any]) -> None:
         if "copy_content" in state:
@@ -202,6 +254,28 @@ class DRL(EnforcementObject):
         wait = self._bucket.consume(max(ctx.size, 1))
         return Result(content=request, wait_seconds=wait)
 
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        """Admit the whole batch with ONE bucket consume: one lock acquisition,
+        one clock read, and a single computed sleep for the batch's cumulative
+        debt. The admitted ≤ capacity + rate·(T − t0) invariant is preserved
+        exactly — an atomic consume of ``sum(sizes)`` debits the same tokens a
+        sequential per-request walk would. The imposed wait is attributed to
+        requests proportionally to their cost so telemetry sums are unchanged.
+        """
+        sizes = [max(c.size, 1) for c in ctxs]
+        total = float(sum(sizes))
+        wait = self._bucket.consume(total)
+        if requests is None:
+            requests = [None] * len(ctxs)
+        if wait == 0.0:
+            return [Result(content=r) for r in requests]
+        per_token = wait / total
+        return [
+            Result(content=r, wait_seconds=s * per_token) for r, s in zip(requests, sizes)
+        ]
+
     def obj_config(self, state: Dict[str, Any]) -> None:
         if "refill_period" in state:
             self.refill_period = float(state["refill_period"])
@@ -245,6 +319,45 @@ class PriorityGate(EnforcementObject):
             self._clock.sleep(self.low_hold)
             waited += self.low_hold
         return Result(content=request, wait_seconds=waited)
+
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        """Sorted batch admission: all high-priority requests are admitted
+        first under a single lock/clock read; the low-priority remainder then
+        yields ONCE for the whole batch (instead of each low request spinning
+        on the gate separately). Result order matches submission order.
+        """
+        if requests is None:
+            requests = [None] * len(ctxs)
+        prios = [self.priority_of.get(c.request_context, 0) for c in ctxs]
+        any_high = any(p > 0 for p in prios)
+        if any_high:
+            with self._lock:
+                self._last_high = self._clock.now()
+        waited = 0.0
+        if any(p <= 0 for p in prios):
+            for _ in range(32):
+                with self._lock:
+                    recent = (self._clock.now() - self._last_high) < self.low_hold
+                if not recent:
+                    break
+                self._clock.sleep(self.low_hold)
+                waited += self.low_hold
+        # the single shared yield is attributed to the FIRST low-priority
+        # request (as in the sequential walk, where later lows find the
+        # window already expired) so summed wait telemetry is not inflated
+        out: List[Result] = []
+        first_low = True
+        for r, p in zip(requests, prios):
+            if p > 0:
+                out.append(Result(content=r))
+            elif first_low:
+                out.append(Result(content=r, wait_seconds=waited))
+                first_low = False
+            else:
+                out.append(Result(content=r))
+        return out
 
     def obj_config(self, state: Dict[str, Any]) -> None:
         if "priority_of" in state:
@@ -312,22 +425,83 @@ class Checksum(EnforcementObject):
         buf = request.tobytes() if isinstance(request, np.ndarray) else bytes(request)
         return Result(content=request, meta={"crc32": zlib.crc32(buf) & 0xFFFFFFFF})
 
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        if requests is None:
+            return [Result() for _ in ctxs]
+        # zlib.crc32 is a C single-pass; the batch win is skipping per-request
+        # routing/stats, so a tight loop here is the whole cost.
+        crc = zlib.crc32
+        out: List[Result] = []
+        for r in requests:
+            if r is None:
+                out.append(Result())
+                continue
+            buf = r.tobytes() if isinstance(r, np.ndarray) else bytes(r)
+            out.append(Result(content=r, meta={"crc32": crc(buf) & 0xFFFFFFFF}))
+        return out
+
     def obj_config(self, state: Dict[str, Any]) -> None:
         pass
+
+
+def _quantize_blocks_numpy(blocks: np.ndarray):
+    """[M, block] float32 → (int8 [M, block], float32 scales [M, 1]). One
+    vectorized pass — shared by the per-request and batched quantize paths."""
+    scale = np.maximum(np.abs(blocks).max(axis=1, keepdims=True), 1e-12) / 127.0
+    q = np.clip(np.rint(blocks / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
 
 
 class QuantizeInt8(EnforcementObject):
     """Host-side int8 symmetric per-block quantization transformation.
 
     The device-side twin (Pallas kernel, ``repro.kernels.quantize``) runs on
-    TPU for gradient compression; this numpy object serves the checkpoint
-    write path. Block size is per-row groups of ``block`` elements.
+    TPU for gradient compression; this object serves the checkpoint write
+    path. Block size is per-row groups of ``block`` elements.
+
+    ``obj_enf_batch`` packs the whole batch into one ``[M, block]`` matrix and
+    quantizes it with a single fused call — the Pallas rows kernel when a TPU
+    backend is available (``use_pallas=True`` or auto-detected), else one
+    vectorized numpy pass — instead of N Python-level loops.
     """
 
     kind = "quantize_int8"
 
-    def __init__(self, block: int = 256) -> None:
+    def __init__(self, block: int = 256, use_pallas: Optional[bool] = None) -> None:
         self.block = int(block)
+        #: None = auto (TPU backend only); the numpy path is the CPU fallback
+        self.use_pallas = use_pallas
+        self._pallas_rows = None  # resolved lazily; jax import stays off core
+
+    def _resolve_pallas(self):
+        if self._pallas_rows is not None:
+            return self._pallas_rows if self._pallas_rows is not False else None
+        want = self.use_pallas
+        if want is None or want:
+            try:
+                import jax
+
+                from repro.kernels.quantize.ops import quantize_rows_int8
+
+                on_tpu = jax.default_backend() == "tpu"
+                # lane-aligned blocks only; otherwise the tile padding would
+                # change per-block scales vs the numpy semantics
+                if (want or (want is None and on_tpu)) and self.block % 128 == 0:
+                    self._pallas_rows = quantize_rows_int8
+                    return self._pallas_rows
+            except Exception:
+                pass
+        self._pallas_rows = False
+        return None
+
+    def _quantize_blocks(self, blocks: np.ndarray):
+        rows = self._resolve_pallas()
+        if rows is not None:
+            q, s = rows(blocks)
+            return np.asarray(q), np.asarray(s)
+        return _quantize_blocks_numpy(blocks)
 
     def obj_enf(self, ctx: Context, request: Any = None) -> Result:
         if request is None:
@@ -337,13 +511,47 @@ class QuantizeInt8(EnforcementObject):
         pad = (-flat.size) % self.block
         if pad:
             flat = np.concatenate([flat, np.zeros(pad, np.float32)])
-        blocks = flat.reshape(-1, self.block)
-        scale = np.maximum(np.abs(blocks).max(axis=1, keepdims=True), 1e-12) / 127.0
-        q = np.clip(np.rint(blocks / scale), -127, 127).astype(np.int8)
+        q, scale = self._quantize_blocks(flat.reshape(-1, self.block))
         return Result(
-            content=(q, scale.astype(np.float32)),
+            content=(q, scale),
             meta={"shape": arr.shape, "dtype": str(arr.dtype), "pad": pad, "block": self.block},
         )
+
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        if requests is None:
+            return [Result() for _ in ctxs]
+        arrs = [None if r is None else np.asarray(r) for r in requests]
+        flats = [
+            None if a is None else a.reshape(-1).astype(np.float32, copy=False) for a in arrs
+        ]
+        pads = [None if f is None else (-f.size) % self.block for f in flats]
+        sizes = {f.size + p for f, p in zip(flats, pads) if f is not None}
+        if len(sizes) != 1:  # ragged batch: per-item path (still one kernel each)
+            return [self.obj_enf(c, r) for c, r in zip(ctxs, requests)]
+        padded = sizes.pop()
+        live = [i for i, f in enumerate(flats) if f is not None]
+        packed = np.zeros((len(live), padded), np.float32)
+        for row, i in enumerate(live):
+            packed[row, : flats[i].size] = flats[i]
+        blocks_per = padded // self.block
+        q_all, s_all = self._quantize_blocks(packed.reshape(-1, self.block))
+        q_all = q_all.reshape(len(live), blocks_per, self.block)
+        s_all = s_all.reshape(len(live), blocks_per, 1)
+        out: List[Result] = [Result() for _ in ctxs]
+        for row, i in enumerate(live):
+            # per-row copies so a retained Result doesn't pin the batch output
+            out[i] = Result(
+                content=(q_all[row].copy(), s_all[row].copy()),
+                meta={
+                    "shape": arrs[i].shape,
+                    "dtype": str(arrs[i].dtype),
+                    "pad": pads[i],
+                    "block": self.block,
+                },
+            )
+        return out
 
     @staticmethod
     def dequantize(content, meta) -> np.ndarray:

@@ -17,17 +17,20 @@ from __future__ import annotations
 
 import os
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .channel import DEFAULT_OBJECT_ID, Channel
+from .channel import DEFAULT_OBJECT_ID, Channel, group_dispatch
 from .clock import Clock, DEFAULT_CLOCK
 from .context import Context
-from .hashing import token_for
+from .hashing import token_for, token_for_batch
 from .objects import OBJECT_KINDS, EnforcementObject, Result
-from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from .rules import CLASSIFIERS, DifferentiationRule, EnforcementRule, HousekeepingRule
 from .stats import StageStats
 
 DEFAULT_CHANNEL = "default"
+
+#: position of each routable classifier inside the resolved-route cache key
+_CLASSIFIER_POS = {name: i for i, name in enumerate(CLASSIFIERS)}
 
 
 class Stage:
@@ -108,6 +111,46 @@ class Stage:
             self._route_cache[key] = name
         return name
 
+    def select_channels_batch(self, ctxs: Sequence[Context]) -> List[str]:
+        """Resolve routes for a whole batch in one pass.
+
+        Cache hits cost one dict probe each; the distinct cache misses are
+        tokenized together — one vectorized murmur pass per mask level
+        (``token_for_batch``) — instead of hashing request-by-request.
+        """
+        names: List[Optional[str]] = [None] * len(ctxs)
+        cache = self._route_cache
+        misses: Dict[tuple, List[int]] = {}
+        for i, ctx in enumerate(ctxs):
+            key = (ctx.workflow_id, ctx.request_type, ctx.request_context, ctx.tenant)
+            hit = cache.get(key)
+            if hit is not None:
+                names[i] = hit
+            else:
+                misses.setdefault(key, []).append(i)
+        if misses:
+            resolved = {key: DEFAULT_CHANNEL for key in misses}
+            unresolved = list(misses)
+            for mask, table in self._routing:
+                if not unresolved:
+                    break
+                pos = [_CLASSIFIER_POS[c] for c in mask]
+                tokens = token_for_batch([tuple(k[p] for p in pos) for k in unresolved])
+                still = []
+                for key, tok in zip(unresolved, tokens):
+                    hit = table.get(tok)
+                    if hit is not None:
+                        resolved[key] = hit
+                    else:
+                        still.append(key)
+                unresolved = still
+            for key, name in resolved.items():
+                if len(cache) < 65536:
+                    cache[key] = name
+                for i in misses[key]:
+                    names[i] = name
+        return names  # type: ignore[return-value]
+
     # ------------------------------------------------------------------ #
     # enforcement (Instance API: ``enforce``)                            #
     # ------------------------------------------------------------------ #
@@ -119,6 +162,46 @@ class Stage:
             if chan is None:  # stage with no channels: pass through
                 return Result(content=request)
         return chan.enforce(ctx, request)
+
+    def enforce_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        """Batched ``enforce``: route the whole batch in one pass, group by
+        channel, and dispatch one ``Channel.enforce_batch`` call per group.
+        Elementwise equivalent to calling ``enforce`` per request, but pays
+        routing, lock and dispatch cost per *batch*.
+        """
+        n = len(ctxs)
+        if n == 0:
+            return []
+        c0 = ctxs[0]
+        if all(c is c0 for c in ctxs):  # homogeneous submit loop fast path
+            chan = self._channels.get(self.select_channel(c0)) or self._channels.get(
+                DEFAULT_CHANNEL
+            )
+            if chan is None:
+                reqs = [None] * n if requests is None else requests
+                return [Result(content=r) for r in reqs]
+            return chan.enforce_batch(ctxs, requests, _homogeneous=True)
+        names = self.select_channels_batch(ctxs)
+        groups: Dict[str, List[int]] = {}
+        for i, name in enumerate(names):
+            groups.setdefault(name, []).append(i)
+        if len(groups) == 1:
+            name = next(iter(groups))
+            chan = self._channels.get(name) or self._channels.get(DEFAULT_CHANNEL)
+            if chan is None:
+                reqs = [None] * n if requests is None else requests
+                return [Result(content=r) for r in reqs]
+            return chan.enforce_batch(ctxs, requests)
+        def call(name: str, sub_ctx, sub_req):
+            chan = self._channels.get(name) or self._channels.get(DEFAULT_CHANNEL)
+            if chan is None:  # stage with no such channel: pass through
+                reqs = [None] * len(sub_ctx) if sub_req is None else sub_req
+                return [Result(content=r) for r in reqs]
+            return chan.enforce_batch(sub_ctx, sub_req)
+
+        return group_dispatch(n, groups, ctxs, requests, call)
 
     # ------------------------------------------------------------------ #
     # control interface (Table 2)                                        #

@@ -56,12 +56,28 @@ class ChannelStats:
         with self._lock:
             self._inflight += 1
 
+    def begin_ops(self, n: int) -> None:
+        """Batch twin of ``begin_op``: one lock acquisition for ``n`` requests."""
+        with self._lock:
+            self._inflight += n
+
     def record(self, size: int) -> None:
         with self._lock:
             self._ops += 1
             self._bytes += size
             if self._inflight > 0:
                 self._inflight -= 1
+
+    def record_batch(self, ops: int, nbytes: int) -> None:
+        """Register ``ops`` enforced requests totalling ``nbytes`` under one
+        lock acquisition — the batch hot path pays lock traffic per *batch*,
+        not per request, while ``collect`` windows stay exactly equivalent to
+        ``ops`` individual ``record`` calls."""
+        with self._lock:
+            self._ops += ops
+            self._bytes += nbytes
+            if self._inflight > 0:
+                self._inflight = self._inflight - ops if self._inflight >= ops else 0
 
     def collect(self) -> StatsSnapshot:
         now = self._clock.now()

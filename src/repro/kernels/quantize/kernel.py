@@ -51,6 +51,40 @@ def quantize_2d(x: jax.Array, block_r: int = 128, block_c: int = 128, interpret:
     return q, s
 
 
+def _quant_rows_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)  # one scale per row
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def quantize_rows_2d(x: jax.Array, row_block: int = 32, interpret: bool = False):
+    """x [M, C] (M % row_block == 0) → (int8 [M, C], fp32 scales [M, 1]).
+
+    Row-granular twin of :func:`quantize_2d`, used by the batched enforcement
+    path: each row is one request block, so a whole enforcement batch becomes a
+    single fused kernel launch. ``row_block`` = 32 satisfies the int8 sublane
+    minimum so input and output tiles are layout-legal on TPU.
+    """
+    m, c = x.shape
+    grid = (m // row_block,)
+    return pl.pallas_call(
+        _quant_rows_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_block, c), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((row_block, c), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, c), jnp.int8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
 def dequantize_2d(q: jax.Array, s: jax.Array, out_dtype=jnp.float32, block_r: int = 128, block_c: int = 128, interpret: bool = False):
     r, c = q.shape
     grid = (r // block_r, c // block_c)

@@ -7,7 +7,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .kernel import dequantize_2d, quantize_2d
+from .kernel import dequantize_2d, quantize_2d, quantize_rows_2d
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -28,6 +28,24 @@ def quantize_int8(x: jax.Array, block_r: int = 128, block_c: int = 128, interpre
     x2, pad = _to_2d(x, block_r, block_c)
     q, s = quantize_2d(x2, block_r, block_c, interpret=interpret)
     return q, s, {"shape": x.shape, "dtype": x.dtype, "pad": pad}
+
+
+def quantize_rows_int8(x, row_block: int = 32, interpret: Optional[bool] = None):
+    """[M, C] → (int8 [M, C], fp32 scales [M, 1]), one scale per row.
+
+    Backs the batched ``QuantizeInt8`` enforcement object: the whole batch's
+    blocks are packed row-wise and quantized in ONE kernel launch. Rows are
+    padded to ``row_block`` (TPU sublane alignment) and sliced back, so any
+    batch size is accepted. Accepts numpy or jax arrays.
+    """
+    interpret = _INTERPRET if interpret is None else interpret
+    x = jnp.asarray(x, jnp.float32)
+    m, c = x.shape
+    pad = (-m) % row_block
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    q, s = quantize_rows_2d(x, row_block=row_block, interpret=interpret)
+    return q[:m], s[:m]
 
 
 def dequantize_int8(q: jax.Array, s: jax.Array, meta, block_r: int = 128, block_c: int = 128, interpret: Optional[bool] = None):

@@ -32,6 +32,15 @@ class GenerationResult:
     tenant: Optional[str] = None
 
 
+@dataclasses.dataclass
+class _Pending:
+    """A queued generation request awaiting batch admission."""
+
+    prompts: np.ndarray
+    max_new_tokens: int
+    tenant: Optional[str]
+
+
 class ServeEngine:
     """Single-host serving: fixed max batch, greedy decoding.
 
@@ -55,6 +64,7 @@ class ServeEngine:
         self.stage = stage
         self._prefill = jax.jit(build_prefill_step(cfg))
         self._decode = jax.jit(build_decode_step(cfg), donate_argnums=1)
+        self._queue: "queue.Queue[_Pending]" = queue.Queue()
 
     def _enforce(self, tenant: Optional[str], n_tokens: int) -> None:
         if self.stage is None:
@@ -63,11 +73,68 @@ class ServeEngine:
             ctx = build_context(RequestType.get, size=n_tokens)
             self.stage.enforce(ctx, None)
 
+    # -- batched submit path (batched data plane) -------------------------
+    def submit(
+        self,
+        prompts: np.ndarray,
+        max_new_tokens: int = 32,
+        tenant: Optional[str] = None,
+    ) -> None:
+        """Queue a generation request; ``drain`` admits and runs the queue."""
+        self._queue.put(_Pending(np.asarray(prompts), int(max_new_tokens), tenant))
+
+    def _admit_batch(self, pending: List[_Pending]) -> None:
+        """Enforce the queued requests' prefill token cost as ONE batch.
+
+        Each pending request contributes one context carrying its tenant and
+        its prompt-token cost; the stage routes and rate-limits the whole drain
+        in a single ``enforce_batch`` pass (per-tenant DRLs each see one
+        cumulative consume instead of per-request lock/clock traffic).
+        """
+        if self.stage is None or not pending:
+            return
+        ctxs = []
+        for p in pending:
+            b, s0 = p.prompts.shape
+            ctxs.append(
+                build_context(
+                    RequestType.get, size=b * s0, request_context="", workflow_id=None
+                )
+            )
+            ctxs[-1].tenant = p.tenant or "default"
+        self.stage.enforce_batch(ctxs)
+
+    def drain(self) -> List[GenerationResult]:
+        """Drain the submit queue: batch-admit all queued requests through
+        ``Stage.enforce_batch``, then generate each (decode-step token costs
+        are still enforced per step, as in ``generate``)."""
+        pending: List[_Pending] = []
+        while True:
+            try:
+                pending.append(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        if not pending:
+            return []
+        self._admit_batch(pending)
+        results: List[GenerationResult] = []
+        for p in pending:
+            results.extend(
+                self.generate(
+                    p.prompts,
+                    max_new_tokens=p.max_new_tokens,
+                    tenant=p.tenant,
+                    _prefill_admitted=True,
+                )
+            )
+        return results
+
     def generate(
         self,
         prompts: np.ndarray,  # [B, S0] int32
         max_new_tokens: int = 32,
         tenant: Optional[str] = None,
+        _prefill_admitted: bool = False,
     ) -> List[GenerationResult]:
         b, s0 = prompts.shape
         caches = init_caches(self.cfg, b, self.max_seq, dtype=self.cfg.compute_dtype)
@@ -75,7 +142,8 @@ class ServeEngine:
             "tokens": jnp.asarray(prompts, jnp.int32),
             "positions": jnp.broadcast_to(jnp.arange(s0, dtype=jnp.int32), (b, s0)),
         }
-        self._enforce(tenant, b * s0)  # prefill cost: prompt tokens
+        if not _prefill_admitted:  # drain() already batch-admitted prefill cost
+            self._enforce(tenant, b * s0)  # prefill cost: prompt tokens
         next_tok, caches = self._prefill(self.params, caches, batch)
         outs = [[int(t)] for t in np.asarray(next_tok)[:, 0]]
         for step in range(1, max_new_tokens):

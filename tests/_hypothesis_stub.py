@@ -1,0 +1,63 @@
+"""Minimal hypothesis shim so tier-1 collects on containers without it.
+
+When the real ``hypothesis`` is installed, test modules import it directly;
+this stub is only reached on ``ImportError``. ``@given`` turns the property
+test into a pytest skip with a clear reason; ``st.*`` expressions evaluate to
+inert placeholder strategies so module-level strategy construction (including
+``.map``/``.flatmap`` chains) never raises at collection time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import pytest
+
+SKIP_REASON = "hypothesis not installed: property-based test skipped (unit tests still run)"
+
+
+class _Strategy:
+    """Inert stand-in supporting the strategy-combinator surface used here."""
+
+    def __call__(self, *args: Any, **kwargs: Any) -> "_Strategy":
+        return self
+
+    def map(self, fn: Any) -> "_Strategy":
+        return self
+
+    def flatmap(self, fn: Any) -> "_Strategy":
+        return self
+
+    def filter(self, fn: Any) -> "_Strategy":
+        return self
+
+
+class _StrategiesModule:
+    def __getattr__(self, name: str) -> _Strategy:
+        return _Strategy()
+
+
+st = _StrategiesModule()
+
+
+def given(*_args: Any, **_kwargs: Any):
+    """Replace the property test with a zero-arg skipping stand-in (the
+    original body expects hypothesis-generated arguments it can never get)."""
+
+    def decorate(fn):
+        @pytest.mark.skip(reason=SKIP_REASON)
+        def skipped(self=None):  # `self` when used inside a test class
+            pass
+
+        skipped.__name__ = fn.__name__
+        skipped.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        skipped.__doc__ = fn.__doc__
+        return skipped
+
+    return decorate
+
+
+def settings(*_args: Any, **_kwargs: Any):
+    def decorate(fn):
+        return fn
+
+    return decorate

@@ -52,6 +52,7 @@ class TestCheckpointManager:
         _assert_tree_equal(state, restored)
 
     def test_compressed_roundtrip(self, tmp_path):
+        pytest.importorskip("zstandard", reason="zstandard not installed")
         mgr = CheckpointManager(str(tmp_path), transform="compress")
         state = _state()
         mgr.save(1, state)

@@ -14,6 +14,7 @@ from repro.core import (
     Stage,
     VirtualClock,
 )
+from repro.serve.engine import _Pending
 from repro.models import forward, init_params, mask_padded_vocab
 from repro.serve import ServeEngine
 
@@ -53,3 +54,34 @@ class TestServeEngine:
         snap = stage.collect().per_channel["tenant_x"]
         # prefill: 2×4 prompt tokens; decode steps 2..3: 2 tokens each
         assert snap.cumulative_bytes == 2 * 4 + 2 * 2
+
+    def test_submit_drain_batches_admission(self, small_model):
+        """The submit loop drains its queue through Stage.enforce_batch: one
+        batched admission for all queued prefill costs, same per-tenant
+        accounting as sequential generate calls."""
+        cfg, params = small_model
+        stage = Stage("serve")
+        for t in ("tenant_a", "tenant_b"):
+            stage.hsk_rule(HousekeepingRule(op="create_channel", channel=t))
+            stage.dif_rule(DifferentiationRule(channel=t, match={"tenant": t}))
+        engine = ServeEngine(cfg, params, max_seq=32, stage=stage)
+        engine.submit(np.zeros((1, 4), dtype=np.int32), max_new_tokens=2, tenant="tenant_a")
+        engine.submit(np.zeros((2, 4), dtype=np.int32), max_new_tokens=2, tenant="tenant_b")
+        results = engine.drain()
+        assert len(results) == 3  # 1 + 2 sequences, submission order
+        assert [r.tenant for r in results] == ["tenant_a", "tenant_b", "tenant_b"]
+        snaps = stage.collect().per_channel
+        # prefill (batch-admitted): 1×4 / 2×4; decode step 2: 1 / 2 tokens
+        assert snaps["tenant_a"].cumulative_bytes == 1 * 4 + 1
+        assert snaps["tenant_b"].cumulative_bytes == 2 * 4 + 2
+        assert engine.drain() == []  # queue emptied
+
+    def test_admit_batch_builds_tenant_contexts(self, small_model):
+        cfg, params = small_model
+        stage = Stage("serve")
+        stage.hsk_rule(HousekeepingRule(op="create_channel", channel="t"))
+        stage.dif_rule(DifferentiationRule(channel="t", match={"tenant": "t"}))
+        engine = ServeEngine(cfg, params, max_seq=32, stage=stage)
+        pending = [_Pending(np.zeros((2, 3), np.int32), 1, "t")]
+        engine._admit_batch(pending)
+        assert stage.collect().per_channel["t"].cumulative_bytes == 6
