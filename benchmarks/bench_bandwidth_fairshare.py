@@ -73,7 +73,29 @@ def default_instances(scale: float) -> List[InstanceSpec]:
     ]
 
 
-def run_setup(mode: str, scale: float = 0.1, chunk: int = 256 * 1024) -> Dict[str, InstanceResult]:
+def _scaled_policy(policy_path: str, scale: float):
+    """Load a policy file and scale every bandwidth quantity by ``scale``
+    (the bench's --scale knob applied to the checked-in full-scale policy)."""
+    from repro.policy import load_policy_file, parse_quantity, policy_from_dict, policy_to_dict
+
+    d = policy_to_dict(load_policy_file(policy_path))
+    for f in d.get("flows", ()):
+        for o in f.get("objects", ()):
+            if "rate" in o.get("params", {}):
+                o["params"]["rate"] = parse_quantity(o["params"]["rate"]) * scale
+    obj = d.get("objective")
+    if obj:
+        if "capacity" in obj:
+            obj["capacity"] = parse_quantity(obj["capacity"]) * scale
+        obj["demands"] = {
+            k: parse_quantity(v) * scale for k, v in (obj.get("demands") or {}).items()
+        }
+    return policy_from_dict(d)
+
+
+def run_setup(
+    mode: str, scale: float = 0.1, chunk: int = 256 * 1024, policy_path: str = ""
+) -> Dict[str, InstanceResult]:
     disk_bw = 1024 * MiB * scale
     disk = Disk(disk_bw)
     instances = default_instances(scale)
@@ -81,7 +103,30 @@ def run_setup(mode: str, scale: float = 0.1, chunk: int = 256 * 1024) -> Dict[st
     stages: Dict[str, Stage] = {}
     cp = None
 
-    if mode == "paio":
+    if mode == "paio" and policy_path:
+        # everything — channels, DRLs, differentiation, the fair-share
+        # objective — comes from the checked-in policy file; the bench only
+        # registers bare stages and mimics instances joining/leaving
+        policy = _scaled_policy(policy_path, scale)
+        cp = ControlPlane(loop_interval=0.05)
+        for spec in instances:
+            stages[spec.name] = Stage(spec.name)
+            cp.register_stage(stages[spec.name])
+        cp.install_policy(policy)
+        algo = cp.policy_runtime.get(policy.name).algorithm
+        if algo is None:
+            raise SystemExit(f"{policy_path}: policy declares no fairshare objective")
+        for spec in instances:
+            got = algo.demands.get(spec.name)
+            if got is None or abs(got - spec.demand) > 1e-6 * spec.demand:
+                raise SystemExit(
+                    f"{policy_path}: demand for {spec.name} is {got}, bench expects {spec.demand}"
+                )
+        # instances join dynamically (workers re-add themselves on start)
+        for spec in instances:
+            algo.remove_instance(spec.name)
+        cp.start()
+    elif mode == "paio":
         algo = FairShareControl(flows={}, demands={}, max_bandwidth=disk_bw, loop_interval=0.05)
         cp = ControlPlane(algo)
         for spec in instances:
@@ -141,20 +186,29 @@ def run_setup(mode: str, scale: float = 0.1, chunk: int = 256 * 1024) -> Dict[st
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.1, help="fraction of the paper's 1 GiB/s setup")
+    ap.add_argument(
+        "--policy",
+        default="",
+        help="policy file driving the paio setup (e.g. examples/policies/fairshare.json); "
+        "replaces the hand-coded stage provisioning + FairShareControl construction",
+    )
     args = ap.parse_args()
     specs = default_instances(args.scale)
     print(f"disk={1024*args.scale:.0f} MiB/s; demands " + ", ".join(f"{s.name}={s.demand/MiB:.0f}MiB/s" for s in specs))
+    if args.policy:
+        print(f"paio setup driven by policy file: {args.policy}")
     print("per-instance bandwidth DURING the all-active phase (the paper's guarantee window):")
     print(f"{'setup':<9} " + " ".join(f"{s.name+' MiB/s':>10}" for s in specs) + "   guarantees  makespan_s")
     for mode in ("baseline", "blkio", "paio"):
-        res = run_setup(mode, args.scale)
+        res = run_setup(mode, args.scale, policy_path=args.policy if mode == "paio" else "")
         phase0 = max(r.t_start for r in res.values())
         phase1 = min(r.t_end for r in res.values())
         bw = {s.name: res[s.name].bandwidth_in(phase0, phase1) for s in specs}
         met = all(bw[s.name] >= s.demand * 0.9 for s in specs)
         makespan = max(r.t_end for r in res.values())
+        label = "paio*" if (mode == "paio" and args.policy) else mode
         print(
-            f"{mode:<9} "
+            f"{label:<9} "
             + " ".join(f"{bw[s.name]/MiB:>10.1f}" for s in specs)
             + f"   {'ALL MET' if met else 'VIOLATED':>9}  {makespan:>6.1f}"
         )

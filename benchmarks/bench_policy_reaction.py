@@ -1,0 +1,138 @@
+"""Trigger-to-enforcement reaction latency of the policy subsystem.
+
+Scenario: a stage with one policy-provisioned flow and a trigger
+(``when throughput > T: set rate=cap``). Each trial lets the control loop
+settle, then injects a traffic burst that crosses the threshold at a known
+instant and polls the flow's DRL until the triggered rate lands. The reported
+latency spans the full path: metric crossing → collect tick → registry sample
+→ sliding-window predicate → trigger fire → enforcement rule → ``obj_config``.
+
+The expected value is ~half the control-loop interval (the crossing lands at
+a random phase of the loop) plus evaluation cost; the acceptance bar is
+*mean under one loop interval*.
+
+``--smoke`` additionally validates every checked-in policy file under
+``examples/policies/`` (parse + offline compile) and exits non-zero on any
+error — the CI hook that keeps example policies from rotting.
+
+Usage: python -m benchmarks.bench_policy_reaction [--smoke] [--trials N]
+                                                  [--interval 0.05] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+MiB = float(1 << 20)
+
+POLICY_TEXT = """
+policy reaction_probe stage app
+for context=fg_task as fg: limit bandwidth 1GiB/s
+when throughput@fg > {threshold} window 1s cooldown 0s: set rate={capped} on fg
+"""
+
+
+def validate_example_policies(policy_dir: str) -> List[str]:
+    """Parse + offline-compile every policy file; returns error strings."""
+    from repro.policy import PolicyError, compile_policy, load_policy_file
+
+    errors: List[str] = []
+    paths = sorted(
+        glob.glob(os.path.join(policy_dir, "*.json"))
+        + glob.glob(os.path.join(policy_dir, "*.pol"))
+    )
+    if not paths:
+        errors.append(f"no policy files found under {policy_dir!r}")
+    for path in paths:
+        try:
+            compiled = compile_policy(load_policy_file(path))
+            print(f"policy_ok,{path},{'+'.join(compiled.summary()['flows'])}")
+        except PolicyError as exc:
+            errors.append(f"{path}: {exc}")
+    return errors
+
+
+def measure_reaction(
+    trials: int, interval: float, threshold: float = 1000.0, capped: float = 10 * MiB
+) -> Dict[str, float]:
+    from repro.core import ControlPlane, Stage
+
+    latencies: List[float] = []
+    policy_text = POLICY_TEXT.format(threshold=threshold, capped=capped)
+    for _ in range(trials):
+        stage = Stage("app")
+        cp = ControlPlane(loop_interval=interval)
+        cp.register_stage(stage)
+        cp.install_policy(policy_text)
+        drl = stage.channel("fg").get_object("0")
+        baseline = drl.rate
+        cp.start()
+        try:
+            time.sleep(interval * 1.5)  # loop ticking; stats window established
+            t0 = time.monotonic()
+            stage.channel("fg").stats.record(int(4 * MiB))  # burst crosses T
+            deadline = t0 + interval * 20 + 1.0
+            while drl.rate == baseline:
+                if time.monotonic() > deadline:
+                    raise RuntimeError("trigger never fired — policy loop broken")
+                time.sleep(interval / 100)
+            latencies.append(time.monotonic() - t0)
+        finally:
+            cp.stop()
+    latencies.sort()
+    n = len(latencies)
+    return {
+        "trials": n,
+        "interval_s": interval,
+        "mean_s": sum(latencies) / n,
+        "p50_s": latencies[n // 2],
+        "p95_s": latencies[min(int(0.95 * n), n - 1)],
+        "max_s": latencies[-1],
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI mode: validate example policies + quick reaction check")
+    ap.add_argument("--trials", type=int, default=0, help="default: 5 smoke / 30 full")
+    ap.add_argument("--interval", type=float, default=0.05, help="control-loop interval (s)")
+    ap.add_argument("--policy-dir", default=os.path.join(os.path.dirname(__file__), "..", "examples", "policies"))
+    ap.add_argument("--json", default="", help="write machine-readable results to this path")
+    args = ap.parse_args()
+
+    print("name,value,derived")
+    errors = validate_example_policies(args.policy_dir)
+    for err in errors:
+        print(f"policy_error,,{err}", file=sys.stderr)
+    if errors:
+        print(f"{len(errors)} policy file(s) failed to parse/compile", file=sys.stderr)
+        return 1
+
+    trials = args.trials or (5 if args.smoke else 30)
+    r = measure_reaction(trials, args.interval)
+    ok = r["mean_s"] < args.interval
+    print(
+        f"policy_reaction_mean,{r['mean_s']*1e3:.2f}ms,"
+        f"p50={r['p50_s']*1e3:.2f}ms p95={r['p95_s']*1e3:.2f}ms max={r['max_s']*1e3:.2f}ms "
+        f"interval={args.interval*1e3:.0f}ms trials={r['trials']} "
+        f"{'UNDER' if ok else 'OVER'}-one-interval"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "bench_policy_reaction", **r, "under_one_interval": ok}, f, indent=2)
+        print(f"wrote {args.json}")
+    # a mean beyond 2x the loop interval means the trigger path itself is
+    # broken (the expected value is ~interval/2); fail loudly
+    if r["mean_s"] > 2 * args.interval:
+        print("reaction latency beyond 2x loop interval", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -54,6 +54,20 @@ def bench_smoke() -> None:
     bench_batch(seconds=1.0)
 
 
+def bench_policy() -> None:
+    """Policy trigger-to-enforcement reaction latency (see bench_policy_reaction)."""
+    from .bench_policy_reaction import measure_reaction
+
+    for interval in (0.05, 0.1):
+        r = measure_reaction(trials=10, interval=interval)
+        emit(
+            f"policy_reaction_i{int(interval*1e3)}ms",
+            r["mean_s"] * 1e6,
+            f"mean={r['mean_s']*1e3:.1f}ms p95={r['p95_s']*1e3:.1f}ms "
+            f"{'under' if r['mean_s'] < interval else 'OVER'}-one-interval",
+        )
+
+
 def bench_fig5_7(seconds: float) -> None:
     from .bench_tail_latency import run_system
 
@@ -130,7 +144,9 @@ def main() -> None:
     ap.add_argument(
         "--smoke", action="store_true", help="~2s loopback bench only (per-PR CI perf signal)"
     )
-    ap.add_argument("--skip", default="", help="comma list: fig4,batch,fig5_7,fig8,kernels,roofline")
+    ap.add_argument(
+        "--skip", default="", help="comma list: fig4,batch,policy,fig5_7,fig8,kernels,roofline"
+    )
     args = ap.parse_args()
     skip = set(args.skip.split(",")) if args.skip else set()
 
@@ -142,6 +158,8 @@ def main() -> None:
         bench_fig4(seconds=2.0 if args.full else 0.5)
     if "batch" not in skip:
         bench_batch(seconds=2.0 if args.full else 0.5)
+    if "policy" not in skip:
+        bench_policy()
     if "fig5_7" not in skip:
         bench_fig5_7(seconds=20.0 if args.full else 6.0)
     if "fig8" not in skip:

@@ -2,6 +2,12 @@
 instances with bandwidth guarantees sharing one disk, under baseline /
 static-blkio / PAIO max-min fair share.
 
+The PAIO setup is driven entirely by the checked-in policy file
+``examples/policies/fairshare.json`` — channels, DRL provisioning,
+differentiation and the fair-share objective all come from the policy, not
+from code (pass an explicit ``--policy ''`` to fall back to the hand-coded
+construction).
+
 Run: PYTHONPATH=src python examples/bandwidth_fairshare.py
 """
 import sys
@@ -12,4 +18,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 from benchmarks.bench_bandwidth_fairshare import main
 
 if __name__ == "__main__":
+    if not any(a.startswith("--policy") for a in sys.argv[1:]):
+        sys.argv += ["--policy", os.path.join(os.path.dirname(__file__), "policies", "fairshare.json")]
     main()

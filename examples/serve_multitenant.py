@@ -1,10 +1,11 @@
 """Multi-tenant serving with per-tenant token-rate policies (paper §5.2
 applied to inference).
 
-Two tenants share one model server. Each tenant's requests flow through its
-PAIO channel with a DRL object; the control plane (Algorithm 2, max-min fair
-share) guarantees tenant A 2× tenant B's token rate and redistributes the
-budget when one goes idle.
+Two tenants share one model server. The whole setup — per-tenant channels,
+DRL token buckets, differentiation and the max-min fair-share objective
+guaranteeing tenant A 2× tenant B's token rate — comes from the checked-in
+policy file ``examples/policies/serve_multitenant.json``; this example only
+registers the stage and calls ``ControlPlane.install_policy``.
 
 Run: PYTHONPATH=src python examples/serve_multitenant.py
 """
@@ -18,16 +19,11 @@ import numpy as np
 import jax
 
 import repro.configs as configs
-from repro.core import (
-    ControlPlane,
-    DifferentiationRule,
-    FairShareControl,
-    FlowSpec,
-    HousekeepingRule,
-    Stage,
-)
+from repro.core import ControlPlane, Stage
 from repro.models import init_params
 from repro.serve import ServeEngine
+
+POLICY_FILE = os.path.join(os.path.dirname(__file__), "policies", "serve_multitenant.json")
 
 
 def main() -> None:
@@ -35,24 +31,10 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
 
     stage = Stage("serve")
-    for tenant in ("tenant_a", "tenant_b"):
-        stage.hsk_rule(HousekeepingRule(op="create_channel", channel=tenant))
-        stage.hsk_rule(
-            HousekeepingRule(
-                op="create_object", channel=tenant, object_id="0", object_kind="drl",
-                params={"rate": 100.0},  # tokens/s placeholder; control plane retunes
-            )
-        )
-        stage.dif_rule(DifferentiationRule(channel=tenant, match={"tenant": tenant}))
-
-    algo = FairShareControl(
-        flows={t: FlowSpec("serve", t) for t in ("tenant_a", "tenant_b")},
-        demands={"tenant_a": 400.0, "tenant_b": 200.0},  # tokens/s guarantees
-        max_bandwidth=600.0,
-        loop_interval=0.1,
-    )
-    cp = ControlPlane(algo)
+    cp = ControlPlane()
     cp.register_stage(stage)
+    name = cp.install_policy(POLICY_FILE)
+    print(f"installed policy {name!r}: {cp.list_policies()[0]}")
     cp.start()
 
     engine = ServeEngine(cfg, params, max_seq=64, stage=stage)

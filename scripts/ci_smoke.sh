@@ -11,3 +11,6 @@ python -m pytest -x -q
 
 echo "== loopback bench smoke (enforce vs enforce_batch) =="
 python -m benchmarks.run --smoke
+
+echo "== policy smoke (example policies parse/compile + trigger reaction) =="
+python -m benchmarks.bench_policy_reaction --smoke

@@ -57,7 +57,14 @@ from .objects import (
     Result,
     TokenBucket,
 )
-from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from .rules import (
+    DifferentiationRule,
+    EnforcementRule,
+    HousekeepingRule,
+    rule_from_wire,
+    rules_from_wire,
+    rules_to_wire,
+)
 from .stage import Stage
 from .stats import StageStats, StatsSnapshot
 
@@ -112,6 +119,9 @@ __all__ = [
     "murmur3_32_batch",
     "propagate_context",
     "propagate_tenant",
+    "rule_from_wire",
+    "rules_from_wire",
+    "rules_to_wire",
     "tail_latency_allocation",
     "token_for",
     "token_for_batch",

@@ -16,7 +16,7 @@ Both are implemented as pure allocation functions (property-tested) wrapped in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .control import ControlAlgorithm, StageHandle
 from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
@@ -76,6 +76,34 @@ class TailLatencyControl(ControlAlgorithm):
         self.loop_interval = loop_interval
         self.active_threshold = active_threshold  # bytes/s below this = inactive
         self.last_allocation: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+
+    @classmethod
+    def from_policy(cls, params: Dict[str, Any]) -> "TailLatencyControl":
+        """Build from a compiled policy objective (numeric params, resolved
+        FlowSpecs) — the policy compiler's entry point, so a policy file and
+        hand-written construction share one code path."""
+        return cls(
+            fg=params["fg"],
+            flush=params["flush"],
+            l0=params["l0"],
+            ln=params.get("ln") or [],
+            kvs_bandwidth=params["capacity"],
+            min_bandwidth=params.get("min_bandwidth", 10 * MiB),
+            loop_interval=params.get("loop_interval", 0.1),
+        )
+
+    def to_policy(self) -> Dict[str, Any]:
+        """The objective-params dict this algorithm is equivalent to."""
+        return {
+            "kind": "tail_latency",
+            "fg": self.fg,
+            "flush": self.flush,
+            "l0": self.l0,
+            "ln": list(self.ln),
+            "capacity": self.kvs_b,
+            "min_bandwidth": self.min_b,
+            "loop_interval": self.loop_interval,
+        }
 
     def _throughput(self, stats: Dict[str, StageStats], spec: FlowSpec) -> float:
         st = stats.get(spec.stage)
@@ -167,6 +195,30 @@ class FairShareControl(ControlAlgorithm):
         self.max_b = float(max_bandwidth)
         self.loop_interval = loop_interval
         self.last_rates: Dict[str, float] = {}
+
+    @classmethod
+    def from_policy(
+        cls, params: Dict[str, Any], flows: Dict[str, FlowSpec]
+    ) -> "FairShareControl":
+        """Build from a compiled policy objective: ``params['demands']`` maps
+        flow name → guaranteed bandwidth (floats), ``params['capacity']`` is
+        the shared-resource total. Policy files and hand-written construction
+        share this one code path."""
+        return cls(
+            flows=flows,
+            demands={k: float(v) for k, v in dict(params["demands"]).items()},
+            max_bandwidth=params["capacity"],
+            loop_interval=params.get("loop_interval", 0.1),
+        )
+
+    def to_policy(self) -> Dict[str, Any]:
+        """The objective-params dict this algorithm is equivalent to."""
+        return {
+            "kind": "fairshare",
+            "demands": dict(self.demands),
+            "capacity": self.max_b,
+            "loop_interval": self.loop_interval,
+        }
 
     def set_demand(self, instance: str, demand: Optional[float]) -> None:
         if demand is None:

@@ -16,6 +16,7 @@ import os
 import socket
 import socketserver
 import threading
+import weakref
 from dataclasses import asdict
 from typing import Any, Dict, List, Optional
 
@@ -203,14 +204,43 @@ class ControlAlgorithm:
 
 
 class ControlPlane:
-    """Runs a ControlAlgorithm in a monitor→rule feedback loop (paper §4.2)."""
+    """Runs the monitor→rule feedback loop (paper §4.2) over registered stages.
 
-    def __init__(self, algorithm: ControlAlgorithm, clock: Clock = DEFAULT_CLOCK) -> None:
+    Two sources of control co-exist on the same loop:
+
+    * a programmatic :class:`ControlAlgorithm` (optional, the paper's §5 path),
+    * installed *policies* (:mod:`repro.policy`): declarative flow
+      provisioning, metrics-driven triggers, and policy objectives that lower
+      to ControlAlgorithms. The lifecycle — ``install_policy`` /
+      ``remove_policy`` / ``list_policies`` — goes through the same
+      StageHandle interface as everything else, so it has identical semantics
+      for embedded stages and stages reached over the UDS transport.
+    """
+
+    #: loop cadence when neither an algorithm nor the constructor names one
+    DEFAULT_LOOP_INTERVAL = 0.1
+
+    def __init__(
+        self,
+        algorithm: Optional[ControlAlgorithm] = None,
+        clock: Clock = DEFAULT_CLOCK,
+        loop_interval: Optional[float] = None,
+    ) -> None:
         self.algorithm = algorithm
         self._clock = clock
+        #: explicit plane-level tick cadence; None defers to the algorithms'
+        #: own intervals. The loop *ticks* (collect + triggers) at the fastest
+        #: requested cadence; each algorithm *steps* at its own loop_interval
+        #: with skipped ticks' stat windows accumulated (see _algorithm_stats)
+        self.loop_interval = loop_interval
         self._handles: Dict[str, StageHandle] = {}
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._policy_lock = threading.Lock()
+        self._policy_runtime = None  # lazy: created on first install_policy
+        #: per-algorithm loop state (last step time + accumulated stats) for
+        #: cadence gating; weak keys so removed policies' algorithms drop out
+        self._algo_states: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
         self.iterations = 0
         self.history: List[Dict[str, StageStats]] = []
         self.keep_history = False
@@ -224,24 +254,193 @@ class ControlPlane:
     def connect(self, name: str, socket_path: str) -> None:
         self.register(name, RemoteStageHandle(socket_path))
 
+    # -- policy lifecycle ---------------------------------------------------
+    @property
+    def policy_runtime(self):
+        """The policy runtime (created on demand); exposes ``registry`` for
+        registering custom metrics addressable from trigger predicates."""
+        if self._policy_runtime is None:
+            from repro.policy.engine import PolicyRuntime  # local: optional subsystem
+
+            with self._policy_lock:
+                if self._policy_runtime is None:
+                    self._policy_runtime = PolicyRuntime()
+        return self._policy_runtime
+
+    def install_policy(self, source, stage: Optional[str] = None) -> str:
+        """Parse, compile and install a policy; returns its name.
+
+        ``source`` is anything :func:`repro.policy.load_policy` accepts — a
+        Policy, a canonical dict, DSL text, or a ``.json``/``.pol`` path.
+        Compilation validates against live ``stage_info()`` from every
+        registered handle, so a policy naming unknown stages/channels/objects
+        fails here, before any rule is applied.
+        """
+        from repro.policy import compile_policy, load_policy
+
+        policy = load_policy(source)
+        # fast-fail duplicate check (friendly error before compile touches the
+        # channel layout); the authoritative check is under the lock below
+        if self.policy_runtime.get(policy.name) is not None:
+            raise ValueError(f"policy {policy.name!r} already installed")
+        infos = {name: h.stage_info() for name, h in self._handles.items()}
+        compiled = compile_policy(policy, infos, default_stage=stage)
+        runtime = self.policy_runtime
+        with self._policy_lock:
+            # authoritative duplicate check: under the lock, before any rule
+            # lands, so concurrent installs cannot interleave half-applies
+            if runtime.get(policy.name) is not None:
+                raise ValueError(f"policy {policy.name!r} already installed")
+            try:
+                for stage_name, rules in compiled.install.items():
+                    handle = self._handles[stage_name]
+                    for rule in rules:
+                        self._apply_rule(handle, rule)
+            except Exception:
+                # roll back the partial install: teardown rules are safe to
+                # apply to whatever subset actually landed (remove ops on
+                # things never created are no-ops)
+                for stage_name, rules in compiled.teardown.items():
+                    handle = self._handles.get(stage_name)
+                    if handle is None:
+                        continue
+                    for rule in rules:
+                        try:
+                            self._apply_rule(handle, rule)
+                        except Exception:  # noqa: BLE001 — best-effort undo
+                            break
+                raise
+            runtime.install(compiled)
+        if compiled.algorithm is not None:
+            compiled.algorithm.setup(self._handles)
+        return policy.name
+
+    def remove_policy(self, name: str) -> None:
+        """Uninstall a policy: its triggers stop evaluating, its objective
+        algorithm leaves the loop, and its teardown rules (remove routes /
+        objects / channels it created) are applied best-effort. Triggers that
+        are FIRED at removal first apply their release rules, so enforcement
+        state pushed onto pre-existing (non-policy-owned) objects does not
+        outlive the policy."""
+        runtime = self.policy_runtime
+        with self._policy_lock:
+            compiled, fired = runtime.remove(name)
+            for rules_by_stage in [t.release_rules for t in fired] + [compiled.teardown]:
+                for stage_name, rules in rules_by_stage.items():
+                    handle = self._handles.get(stage_name)
+                    if handle is None:
+                        continue
+                    for rule in rules:
+                        try:
+                            self._apply_rule(handle, rule)
+                        except ConnectionError:  # stage already gone
+                            break
+
+    def list_policies(self) -> List[Dict[str, Any]]:
+        if self._policy_runtime is None:
+            return []
+        return self._policy_runtime.list()
+
     # -- single iteration (usable synchronously from tests/benchmarks) -----
-    def run_once(self) -> Dict[str, List[EnforcementRule]]:
+    def _algorithms(self) -> List[ControlAlgorithm]:
+        algos = [self.algorithm] if self.algorithm is not None else []
+        if self._policy_runtime is not None:
+            algos.extend(self._policy_runtime.algorithms())
+        return algos
+
+    @staticmethod
+    def _apply_rule(handle: StageHandle, rule) -> bool:
+        if isinstance(rule, HousekeepingRule):
+            return handle.hsk_rule(rule)
+        if isinstance(rule, DifferentiationRule):
+            return handle.dif_rule(rule)
+        return handle.enf_rule(rule)
+
+    def _algorithm_stats(
+        self, algorithm: ControlAlgorithm, stats: Dict[str, StageStats], now: float, gated: bool
+    ) -> Optional[Dict[str, StageStats]]:
+        """Cadence gating for the background loop: each algorithm steps at its
+        own ``loop_interval`` even when the loop ticks faster (the tick rate
+        is the min across algorithms + triggers). Skipped ticks are not lost —
+        their windows accumulate, so a slow algorithm sees one combined window
+        spanning its whole interval, not just the last tick's sliver. Returns
+        the stats to step with, or None when this tick is skipped. Ungated
+        (synchronous ``run_once()``) always steps with the tick's stats.
+        """
+        if not gated:
+            return stats
+        state = self._algo_states.get(algorithm)
+        if state is None:
+            state = {"last": None, "per_stage": {}}
+            self._algo_states[algorithm] = state
+        # fold this tick into the accumulator
+        merged_acc: Dict[str, StageStats] = state["per_stage"]
+        for name, st in stats.items():
+            prev = merged_acc.get(name)
+            merged_acc[name] = st if prev is None else st.merged_into(prev)
+        # small relative epsilon so accumulated float tick times (10 × 0.1s)
+        # cannot slip an extra tick past the cadence boundary
+        due = algorithm.loop_interval * (1.0 - 1e-6)
+        if state["last"] is not None and (now - state["last"]) < due:
+            return None
+        state["last"] = now
+        state["per_stage"] = {}
+        return merged_acc
+
+    def run_once(self, gated: bool = False) -> Dict[str, List[EnforcementRule]]:
+        now = self._clock.now()
         stats = {name: h.collect() for name, h in self._handles.items()}
         if self.keep_history:
             self.history.append(stats)
-        rules = self.algorithm.step(stats)
-        for stage_name, stage_rules in rules.items():
-            handle = self._handles.get(stage_name)
-            if handle is None:
+        merged: Dict[str, List[EnforcementRule]] = {}
+        # objects held by FIRED policy triggers: algorithm tuning is suppressed
+        # there until the trigger releases, so protective actions stick
+        pinned = (
+            self._policy_runtime.pinned_targets() if self._policy_runtime is not None else ()
+        )
+        for algorithm in self._algorithms():
+            step_stats = self._algorithm_stats(algorithm, stats, now, gated)
+            if step_stats is None:
                 continue
-            for rule in stage_rules:
-                handle.enf_rule(rule)
+            for stage_name, stage_rules in algorithm.step(step_stats).items():
+                handle = self._handles.get(stage_name)
+                if handle is None:
+                    continue
+                applied = []
+                for rule in stage_rules:
+                    if pinned and (stage_name, rule.channel, rule.object_id) in pinned:
+                        continue
+                    handle.enf_rule(rule)
+                    applied.append(rule)
+                merged.setdefault(stage_name, []).extend(applied)
+        if self._policy_runtime is not None:
+            for event in self._policy_runtime.on_collect(self._clock.now(), stats):
+                for stage_name, stage_rules in event.rules.items():
+                    handle = self._handles.get(stage_name)
+                    if handle is None:
+                        continue
+                    for rule in stage_rules:
+                        self._apply_rule(handle, rule)
         self.iterations += 1
-        return rules
+        return merged
 
     # -- background loop ----------------------------------------------------
+    def effective_loop_interval(self) -> float:
+        """Tick cadence of the background loop: the fastest cadence anyone
+        asked for (installed algorithms, the explicit plane interval, or —
+        whenever any trigger is installed — the default tick, so a slow
+        objective cannot starve its own policy's trigger windows).
+        Algorithms slower than the tick rate are cadence-gated per step."""
+        intervals = [a.loop_interval for a in self._algorithms()]
+        if self.loop_interval is not None:
+            intervals.append(self.loop_interval)
+        if self._policy_runtime is not None and self._policy_runtime.trigger_engine.triggers():
+            intervals.append(self.DEFAULT_LOOP_INTERVAL)
+        return min(intervals) if intervals else self.DEFAULT_LOOP_INTERVAL
+
     def start(self) -> "ControlPlane":
-        self.algorithm.setup(self._handles)
+        for algorithm in self._algorithms():
+            algorithm.setup(self._handles)
         self._stop.clear()
         self._thread = threading.Thread(target=self._loop, daemon=True, name="paio-control-plane")
         self._thread.start()
@@ -250,10 +449,10 @@ class ControlPlane:
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
-                self.run_once()
+                self.run_once(gated=True)
             except ConnectionError:  # a stage died: keep controlling the rest
                 pass
-            self._stop.wait(self.algorithm.loop_interval)
+            self._stop.wait(self.effective_loop_interval())
 
     def stop(self) -> None:
         self._stop.set()

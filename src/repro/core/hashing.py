@@ -54,14 +54,61 @@ def murmur3_32(data: bytes, seed: int = 0) -> int:
     return h
 
 
+# --------------------------------------------------------------------------- #
+# fixed-width classifier packing                                              #
+# --------------------------------------------------------------------------- #
+# Classifiers are packed to fixed-width 8-byte binary codes before hashing
+# (ints verbatim in two's complement; strings via a memoized 32-bit murmur,
+# tagged so an int can never alias a string code). Fixed-width packing is what
+# makes the *vectorized* batch tokenizer pay off: every row of a mask level
+# has the same byte length, so the batch murmur runs with no per-row string
+# building, no tail handling and no activity masking.
+_U64 = (1 << 64) - 1
+_STR_TAG = 1 << 63
+_STR_SEED = 0x5F3759DF
+#: memoized string → tagged code; classifier strings (request contexts,
+#: tenants) are low-cardinality, so this is a one-time cost per distinct value
+_STR_CODES: dict = {}
+
+
+def _part_code(p) -> int:
+    """8-byte code of one classifier part. Pure function of the value.
+
+    Digit strings code as their integer value — the previous ``str(p)``-based
+    hashing made ``"7"`` and ``7`` the same token, and wire clients (JSON
+    rules from external controllers) rely on that looseness; the coercion is
+    memoized so it costs one dict probe after the first sighting.
+    """
+    if type(p) is int:
+        return p & _U64
+    if isinstance(p, int) and not isinstance(p, bool):  # IntEnum etc.
+        return int(p) & _U64
+    s = p if type(p) is str else str(p)
+    code = _STR_CODES.get(s)
+    if code is None:
+        # only canonical int spellings alias their integer ("7" ≡ 7); forms
+        # like "01"/"007" keep their string identity — they were distinct
+        # tokens under the old str-join hashing and must stay distinct
+        if (s.isdigit() or (s[:1] == "-" and s[1:].isdigit())) and str(int(s)) == s:
+            code = int(s) & _U64
+        else:
+            code = _STR_TAG | murmur3_32(s.encode("utf-8"), _STR_SEED)
+        if len(_STR_CODES) < 65536:
+            _STR_CODES[s] = code
+    return code
+
+
+def _pack(parts: tuple) -> bytes:
+    return b"".join(_part_code(p).to_bytes(8, "little") for p in parts)
+
+
 def token_for(parts: tuple, seed: int = 0x5D5) -> int:
-    """Differentiation token: concatenate classifiers, murmur-hash to 32 bits.
+    """Differentiation token: pack classifiers to fixed width, murmur to 32 bits.
 
     ``parts`` is any tuple of ints/strings (a subset of Context classifiers as
     chosen by the stage's differentiation spec).
     """
-    raw = "\x1f".join(str(p) for p in parts).encode("utf-8")
-    return murmur3_32(raw, seed)
+    return murmur3_32(_pack(parts), seed)
 
 
 # --------------------------------------------------------------------------- #
@@ -133,11 +180,61 @@ def murmur3_32_batch(datas, seed: int = 0):
     return [int(x) for x in h]
 
 
+def _murmur3_32_fixed(words, n: int, n_words: int, seed: int):
+    """Murmur3_32 over ``n`` equal-length rows of ``n_words`` u32 words each.
+
+    No tails, no per-row activity masks — the fixed-width fast path the
+    classifier packing enables. ``words`` is ``[n, n_words]`` uint64 holding
+    u32 word values.
+    """
+    import numpy as np
+
+    h = np.full(n, seed & _MASK, dtype=np.uint64)
+    for j in range(n_words):
+        k = (words[:, j] * _C1) & _MASK
+        k = ((k << 15) | (k >> 17)) & _MASK
+        k = (k * _C2) & _MASK
+        h ^= k
+        h = ((h << 13) | (h >> 19)) & _MASK
+        h = (h * 5 + 0xE6546B64) & _MASK
+    h ^= np.uint64(n_words * 4)
+    h ^= h >> 16
+    h = (h * _FC1) & _MASK
+    h ^= h >> 13
+    h = (h * _FC2) & _MASK
+    h ^= h >> 16
+    return [int(x) for x in h]
+
+
 def token_for_batch(parts_list, seed: int = 0x5D5):
     """Batched :func:`token_for`: one vectorized murmur pass over all rows.
 
     ``parts_list`` is a sequence of classifier tuples; returns ``List[int]``
     tokens, elementwise equal to ``[token_for(p, seed) for p in parts_list]``.
+    Uniform-arity batches (the route-resolution case: one call per mask level)
+    take the fixed-width path — codes go straight into an ``[N, arity]``
+    uint64 matrix, no per-row byte strings at all.
     """
-    raws = ["\x1f".join(str(p) for p in parts).encode("utf-8") for parts in parts_list]
-    return murmur3_32_batch(raws, seed)
+    import numpy as np
+
+    n = len(parts_list)
+    if n == 0:
+        return []
+    arity = len(parts_list[0])
+    if any(len(p) != arity for p in parts_list):
+        # mixed arity (generic API use): per-row packing, variable-width path
+        return murmur3_32_batch([_pack(p) for p in parts_list], seed)
+    if arity == 0:
+        return [murmur3_32(b"", seed)] * n
+    codes = np.fromiter(
+        (_part_code(x) for parts in parts_list for x in parts),
+        dtype=np.uint64,
+        count=n * arity,
+    ).reshape(n, arity)
+    # each 8-byte code is two little-endian u32 words: low word first, in
+    # exactly the byte order _pack() emits
+    words = (codes & 0xFFFFFFFF), (codes >> np.uint64(32))
+    interleaved = np.empty((n, arity * 2), dtype=np.uint64)
+    interleaved[:, 0::2] = words[0]
+    interleaved[:, 1::2] = words[1]
+    return _murmur3_32_fixed(interleaved, n, arity * 2, seed)

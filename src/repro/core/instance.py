@@ -147,3 +147,29 @@ class ArrayInstance(Instance):
         result = self.enforce(RequestType.write, size=array.nbytes, request=array)
         sink(result.content if result.content is not None else array)
         return result
+
+    # -- batch submit (batched data plane) --------------------------------
+    def on_read_batch(
+        self, nbytes: Sequence[int], thunks: Sequence[Callable[[], np.ndarray]]
+    ) -> List[np.ndarray]:
+        """Admit a whole read burst through ``enforce_batch`` (one routing /
+        stats / rate-limit pass), then materialize the payloads."""
+        self.enforce_batch(RequestType.read, list(nbytes))
+        return [t() for t in thunks]
+
+    def on_write_batch(
+        self,
+        arrays: Sequence[np.ndarray],
+        sink: Callable[[int, Any], None],
+    ) -> List[Result]:
+        """Batch twin of ``on_write``: all arrays are enforced in one
+        ``enforce_batch`` pass (transformations installed on the channel run
+        their fused batch paths — e.g. one quantize kernel call for the whole
+        burst), then ``sink(i, payload)`` receives each enforced payload in
+        submission order."""
+        results = self.enforce_batch(
+            RequestType.write, [a.nbytes for a in arrays], list(arrays)
+        )
+        for i, (r, a) in enumerate(zip(results, arrays)):
+            sink(i, r.content if r.content is not None else a)
+        return results

@@ -25,7 +25,14 @@ WILDCARD = "*"
 
 @dataclass(frozen=True)
 class HousekeepingRule:
-    """op ∈ {create_channel, remove_channel, create_object, remove_object}."""
+    """op ∈ {create_channel, remove_channel, create_object, remove_object,
+    remove_route}.
+
+    ``remove_route`` (the inverse of a differentiation rule — required for a
+    clean policy uninstall) carries the original ``match`` in ``params`` and
+    removes the corresponding request→channel entry (or, with ``object_id``
+    set, the channel's request→object entry).
+    """
 
     op: str
     channel: str
@@ -78,6 +85,17 @@ class EnforcementRule:
 
     def to_wire(self) -> Dict[str, Any]:
         return {"rule": "enf", "channel": self.channel, "object_id": self.object_id, "state": self.state}
+
+
+def rules_to_wire(rules) -> list:
+    """Serialize a rule sequence to its wire (JSON-native) form — used by the
+    policy subsystem to persist compiled rule programs and by tests to assert
+    transport round-trips."""
+    return [r.to_wire() for r in rules]
+
+
+def rules_from_wire(msgs) -> list:
+    return [rule_from_wire(m) for m in msgs]
 
 
 def rule_from_wire(msg: Dict[str, Any]):

@@ -19,7 +19,7 @@ import os
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .channel import DEFAULT_OBJECT_ID, Channel, group_dispatch
+from .channel import DEFAULT_OBJECT_ID, Channel, group_dispatch, routing_without
 from .clock import Clock, DEFAULT_CLOCK
 from .context import Context
 from .hashing import token_for, token_for_batch
@@ -90,6 +90,13 @@ class Stage:
             routing.sort(key=lambda e: -len(e[0]))
             self._routing = routing
             self._route_cache = {}  # routing changed: resolved routes stale
+
+    def remove_channel_route(self, mask: Tuple[str, ...], key: Tuple[Any, ...]) -> bool:
+        """Uninstall one request→channel mapping (policy teardown path)."""
+        with self._mutate:
+            self._routing, removed = routing_without(self._routing, mask, token_for(key))
+            self._route_cache = {}
+        return removed
 
     def select_channel(self, ctx: Context) -> str:
         # resolved-route memo: murmur hashing of classifier strings is the
@@ -236,6 +243,17 @@ class Stage:
                 return False
             chan.remove_object(rule.object_id or DEFAULT_OBJECT_ID)
             return True
+        if rule.op == "remove_route":
+            # inverse of dif_rule: params carries the original match
+            dr = DifferentiationRule(
+                channel=rule.channel, match=rule.params.get("match") or {}, object_id=rule.object_id
+            )
+            if rule.object_id is None:
+                return self.remove_channel_route(dr.mask(), dr.key())
+            chan = self._channels.get(rule.channel)
+            if chan is None:
+                return False
+            return chan.remove_object_route(dr.mask(), dr.key())
         return False
 
     def dif_rule(self, rule: DifferentiationRule) -> bool:

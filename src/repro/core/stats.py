@@ -34,11 +34,20 @@ class StatsSnapshot:
     #: requests currently blocked inside enforcement objects — lets control
     #: algorithms treat a starved-but-waiting flow as active
     inflight: int = 0
+    #: total scheduling delay imposed by enforcement objects over the window;
+    #: the policy trigger engine derives per-op wait (a latency proxy) from it
+    wait_seconds: float = 0.0
+
+    @property
+    def mean_wait_ms(self) -> float:
+        """Mean imposed wait per op over the window, milliseconds."""
+        return (self.wait_seconds / self.ops) * 1e3 if self.ops else 0.0
 
 
 class ChannelStats:
     __slots__ = (
-        "_lock", "_clock", "_ops", "_bytes", "_cum_ops", "_cum_bytes", "_window_start", "_inflight", "name"
+        "_lock", "_clock", "_ops", "_bytes", "_cum_ops", "_cum_bytes", "_window_start", "_inflight",
+        "_wait", "name"
     )
 
     def __init__(self, name: str, clock: Clock = DEFAULT_CLOCK) -> None:
@@ -50,6 +59,7 @@ class ChannelStats:
         self._cum_ops = 0
         self._cum_bytes = 0
         self._inflight = 0
+        self._wait = 0.0
         self._window_start = clock.now()
 
     def begin_op(self) -> None:
@@ -61,14 +71,16 @@ class ChannelStats:
         with self._lock:
             self._inflight += n
 
-    def record(self, size: int) -> None:
+    def record(self, size: int, wait: float = 0.0) -> None:
         with self._lock:
             self._ops += 1
             self._bytes += size
+            if wait:
+                self._wait += wait
             if self._inflight > 0:
                 self._inflight -= 1
 
-    def record_batch(self, ops: int, nbytes: int) -> None:
+    def record_batch(self, ops: int, nbytes: int, wait: float = 0.0) -> None:
         """Register ``ops`` enforced requests totalling ``nbytes`` under one
         lock acquisition — the batch hot path pays lock traffic per *batch*,
         not per request, while ``collect`` windows stay exactly equivalent to
@@ -76,6 +88,8 @@ class ChannelStats:
         with self._lock:
             self._ops += ops
             self._bytes += nbytes
+            if wait:
+                self._wait += wait
             if self._inflight > 0:
                 self._inflight = self._inflight - ops if self._inflight >= ops else 0
 
@@ -93,13 +107,40 @@ class ChannelStats:
                 cumulative_ops=self._cum_ops + self._ops,
                 cumulative_bytes=self._cum_bytes + self._bytes,
                 inflight=self._inflight,
+                wait_seconds=self._wait,
             )
             self._cum_ops += self._ops
             self._cum_bytes += self._bytes
             self._ops = 0
             self._bytes = 0
+            self._wait = 0.0
             self._window_start = now
         return snap
+
+
+def merge_snapshots(a: StatsSnapshot, b: StatsSnapshot) -> StatsSnapshot:
+    """Combine two consecutive windows of the same channel into one.
+
+    Counters add, the window spans both, rates are recomputed over the
+    combined window; point-in-time fields (cumulative totals, inflight) take
+    the later snapshot's values. Used by the control plane to accumulate
+    collect ticks for algorithms stepping slower than the loop.
+    """
+    window = a.window_seconds + b.window_seconds
+    ops = a.ops + b.ops
+    nbytes = a.bytes + b.bytes
+    return StatsSnapshot(
+        channel=b.channel,
+        ops=ops,
+        bytes=nbytes,
+        window_seconds=window,
+        throughput=nbytes / max(window, 1e-9),
+        iops=ops / max(window, 1e-9),
+        cumulative_ops=b.cumulative_ops,
+        cumulative_bytes=b.cumulative_bytes,
+        inflight=b.inflight,
+        wait_seconds=a.wait_seconds + b.wait_seconds,
+    )
 
 
 @dataclass
@@ -107,6 +148,14 @@ class StageStats:
     """Aggregate view over all channels of a stage."""
 
     per_channel: Dict[str, StatsSnapshot] = field(default_factory=dict)
+
+    def merged_into(self, acc: "StageStats") -> "StageStats":
+        """Fold this (newer) window into accumulator ``acc``."""
+        out = dict(acc.per_channel)
+        for name, snap in self.per_channel.items():
+            prev = out.get(name)
+            out[name] = snap if prev is None else merge_snapshots(prev, snap)
+        return StageStats(per_channel=out)
 
     @property
     def total_bytes(self) -> int:

@@ -50,6 +50,12 @@ class SyntheticTokenSource:
         return self.batch * self.seq * 4
 
 
+#: request context carried by dataset-preparation shard writes (free-form
+#: context string, paper §3.3 — lets a policy throttle shard prep against
+#: the foreground fetch flow)
+DATA_PREP = "bg_data_prep"
+
+
 class FileTokenSource:
     """Memory-mapped token shards on disk (one flat int32 stream per shard)."""
 
@@ -66,6 +72,34 @@ class FileTokenSource:
             f.write(arr.tobytes())
             f.flush()
             os.fsync(f.fileno())
+
+    @staticmethod
+    def write_shards(
+        paths: list[str],
+        token_arrays: list[np.ndarray],
+        stage: Optional[Stage] = None,
+        channel_context: str = DATA_PREP,
+    ) -> None:
+        """Write a shard set through the Instance batch submit API.
+
+        With a stage attached, all shard writes are admitted as ONE
+        ``enforce_batch`` pass (per-write routing/stats/rate-limit cost paid
+        once per burst) under the ``bg_data_prep`` request context, so a
+        control-plane policy can cap shard preparation against foreground
+        fetches. Without a stage this is a plain loop over ``write_shard``.
+        """
+        if len(paths) != len(token_arrays):
+            raise ValueError(f"{len(paths)} paths vs {len(token_arrays)} arrays")
+        arrays = [np.asarray(t, np.int32) for t in token_arrays]
+        if stage is None:
+            for path, arr in zip(paths, arrays):
+                FileTokenSource.write_shard(path, arr)
+            return
+        instance = ArrayInstance(stage)
+        with propagate_context(channel_context):
+            instance.on_write_batch(
+                arrays, lambda i, payload: FileTokenSource.write_shard(paths[i], payload)
+            )
 
     def read(self, index: int) -> np.ndarray:
         need = self.batch * self.seq

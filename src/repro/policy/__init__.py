@@ -1,0 +1,73 @@
+"""Declarative policy subsystem (Crystal-style control for the PAIO data plane).
+
+Policies — not code — define what the storage data plane does: which flows
+exist (differentiation), how they are provisioned (enforcement objects), what
+closed-loop objective governs them (fair share / tail latency) and which
+metrics-driven triggers adapt them at runtime. The pipeline:
+
+    text DSL / JSON  ──parse──▶  Policy  ──compile──▶  wire rules + triggers
+                                             │
+                               ControlPlane.install_policy (local or UDS)
+
+See :mod:`repro.policy.dsl` for the language, :mod:`repro.policy.compile`
+for validation/lowering and :mod:`repro.policy.triggers` for the windowed
+trigger engine.
+"""
+from .compile import (
+    BUILTIN_METRICS,
+    DEMOTE_FACTOR,
+    CompiledPolicy,
+    compile_policy,
+)
+from .dsl import (
+    Action,
+    Condition,
+    Flow,
+    Objective,
+    ObjectSpec,
+    Policy,
+    PolicyError,
+    TriggerSpec,
+    load_policy,
+    load_policy_file,
+    parse_duration,
+    parse_policy_text,
+    parse_quantity,
+    policy_from_dict,
+    policy_to_dict,
+)
+from .engine import PolicyRuntime, stats_to_samples
+from .triggers import (
+    CompiledTrigger,
+    SlidingWindow,
+    TriggerEngine,
+    TriggerEvent,
+)
+
+__all__ = [
+    "BUILTIN_METRICS",
+    "DEMOTE_FACTOR",
+    "Action",
+    "CompiledPolicy",
+    "CompiledTrigger",
+    "Condition",
+    "Flow",
+    "Objective",
+    "ObjectSpec",
+    "Policy",
+    "PolicyError",
+    "PolicyRuntime",
+    "SlidingWindow",
+    "TriggerEngine",
+    "TriggerEvent",
+    "TriggerSpec",
+    "compile_policy",
+    "load_policy",
+    "load_policy_file",
+    "parse_duration",
+    "parse_policy_text",
+    "parse_quantity",
+    "policy_from_dict",
+    "policy_to_dict",
+    "stats_to_samples",
+]

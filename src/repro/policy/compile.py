@@ -1,0 +1,434 @@
+"""Policy compiler: lower a typed :class:`Policy` to wire-serializable rules.
+
+Compilation is where a policy meets reality: every flow, action, trigger and
+objective is resolved against the registered stages' ``stage_info()`` so that
+unknown stages, channels, enforcement objects, classifiers and metrics fail
+**at compile time** — never in the control loop. The output is a
+:class:`CompiledPolicy`:
+
+* ``install``  — ordered housekeeping + differentiation rules per stage,
+* ``teardown`` — the inverse rules (remove routes/objects/channels we made),
+* ``triggers`` — :class:`CompiledTrigger` entries for the trigger engine with
+  their fire/release rules already lowered,
+* ``algorithm`` — a ControlAlgorithm when the policy declares an objective
+  (fair share / tail latency), built through the algorithms' ``from_policy``
+  constructors so hand-coded and policy-driven control are the same code.
+
+Everything in ``install``/``teardown``/trigger rules is a plain rule dataclass
+(:mod:`repro.core.rules`), so a compiled policy applies identically through a
+local handle or the UNIX-socket transport.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from repro.core.objects import OBJECT_KINDS
+from repro.core.rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+
+from .dsl import (
+    Action,
+    Condition,
+    Flow,
+    ObjectSpec,
+    Policy,
+    PolicyError,
+    TriggerSpec,
+    parse_quantity,
+)
+from .triggers import CompiledTrigger
+
+#: builtin per-channel metric fields derivable from StatsSnapshot collects
+BUILTIN_METRICS = ("throughput", "iops", "wait_ms", "inflight", "ops", "bytes")
+#: accepted aliases for builtin metric names
+METRIC_ALIASES = {
+    "bandwidth": "throughput",
+    "latency_ms": "wait_ms",
+    **{m: m for m in BUILTIN_METRICS},
+}
+
+#: a demoted flow's DRL runs at provisioned_rate / DEMOTE_FACTOR (floor 1.0)
+DEMOTE_FACTOR = 10.0
+
+
+@dataclass
+class _FlowBinding:
+    """A flow resolved to its physical location + DRL provisioning."""
+
+    flow: Flow
+    stage: str
+    channel: str
+    drl_object_id: Optional[str] = None
+    provisioned_rate: Optional[float] = None
+    demote_rate: Optional[float] = None
+
+
+@dataclass
+class CompiledPolicy:
+    policy: Policy
+    install: Dict[str, List[Any]] = field(default_factory=dict)
+    teardown: Dict[str, List[Any]] = field(default_factory=dict)
+    triggers: List[CompiledTrigger] = field(default_factory=list)
+    algorithm: Optional[Any] = None
+
+    @property
+    def name(self) -> str:
+        return self.policy.name
+
+    def stages(self) -> List[str]:
+        out = set(self.install) | set(self.teardown)
+        for t in self.triggers:
+            out.update(t.fire_rules)
+            out.update(t.release_rules)
+        return sorted(out)
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "policy": self.policy.name,
+            "stages": self.stages(),
+            "flows": [f.name for f in self.policy.flows],
+            "triggers": [t.qualified_name for t in self.triggers],
+            "objective": self.policy.objective.kind if self.policy.objective else None,
+        }
+
+
+def compile_policy(
+    policy: Policy,
+    infos: Optional[Mapping[str, Mapping[str, Any]]] = None,
+    default_stage: Optional[str] = None,
+) -> CompiledPolicy:
+    """Lower ``policy`` to rules, validating against ``infos`` when given.
+
+    ``infos`` maps stage name → ``stage_info()`` dict (from either transport).
+    When ``infos`` is None the compile is *offline*: structure is checked but
+    existence of stages/channels is deferred to install time.
+    """
+    cp = CompiledPolicy(policy=policy)
+    bindings = _bind_flows(policy, infos, default_stage)
+
+    for b in bindings.values():
+        _lower_flow(cp, b, infos)
+
+    for spec in policy.triggers:
+        cp.triggers.append(_lower_trigger(policy, spec, bindings, infos, default_stage))
+
+    if policy.objective is not None:
+        cp.algorithm = _lower_objective(policy, bindings)
+    return cp
+
+
+# --------------------------------------------------------------------------- #
+# flows                                                                        #
+# --------------------------------------------------------------------------- #
+def _resolve_stage(
+    policy: Policy,
+    flow_stage: Optional[str],
+    infos: Optional[Mapping[str, Any]],
+    default_stage: Optional[str],
+    what: str,
+) -> str:
+    stage = flow_stage or policy.stage or default_stage
+    if stage is None:
+        if infos is not None and len(infos) == 1:
+            return next(iter(infos))
+        raise PolicyError(
+            f"{what}: no stage named (set the policy 'stage', the flow 'stage', "
+            "or register exactly one stage)"
+        )
+    if infos is not None and stage not in infos:
+        raise PolicyError(f"{what}: unknown stage {stage!r} (registered: {sorted(infos)})")
+    return stage
+
+
+def _bind_flows(
+    policy: Policy,
+    infos: Optional[Mapping[str, Any]],
+    default_stage: Optional[str],
+) -> Dict[str, _FlowBinding]:
+    bindings: Dict[str, _FlowBinding] = {}
+    for flow in policy.flows:
+        stage = _resolve_stage(policy, flow.stage, infos, default_stage, f"flow {flow.name!r}")
+        b = _FlowBinding(flow=flow, stage=stage, channel=flow.channel_name())
+        for obj in flow.objects:
+            if obj.kind not in OBJECT_KINDS:
+                raise PolicyError(
+                    f"flow {flow.name!r}: unknown object kind {obj.kind!r} "
+                    f"(known: {sorted(OBJECT_KINDS)})"
+                )
+            _dry_construct(flow, obj)
+            if obj.kind == "drl":
+                params = obj.params_dict()
+                if "rate" not in params:
+                    raise PolicyError(f"flow {flow.name!r}: drl object needs a 'rate'")
+                b.drl_object_id = obj.object_id
+                b.provisioned_rate = parse_quantity(params["rate"])
+                b.demote_rate = parse_quantity(
+                    params.get("demote_rate") or max(b.provisioned_rate / DEMOTE_FACTOR, 1.0)
+                )
+        bindings[flow.name] = b
+    return bindings
+
+
+def _dry_construct(flow: Flow, obj: ObjectSpec) -> None:
+    """Validate enforcement-object params by constructing a throwaway
+    instance, so a typo'd or bad-valued param fails at compile time instead
+    of mid-install (which would leave partial stage state). ImportError is
+    deliberately not treated as a compile error: an object whose optional
+    dependency is missing fails identically at install, and compiling a
+    policy should not require the dependency."""
+    params = obj.params_dict()
+    params.pop("demote_rate", None)
+    try:
+        OBJECT_KINDS[obj.kind](**params)
+    except (TypeError, ValueError) as exc:
+        raise PolicyError(
+            f"flow {flow.name!r}: bad params for {obj.kind!r} object "
+            f"{obj.object_id!r}: {exc}"
+        ) from None
+    except ImportError:
+        pass
+
+
+def _lower_flow(
+    cp: CompiledPolicy, b: _FlowBinding, infos: Optional[Mapping[str, Any]]
+) -> None:
+    install = cp.install.setdefault(b.stage, [])
+    teardown: List[Any] = []
+    existing = (infos or {}).get(b.stage, {}).get("channels", {}) if infos is not None else {}
+    channel_exists = b.channel in existing
+
+    if not channel_exists:
+        install.append(HousekeepingRule(op="create_channel", channel=b.channel))
+    for obj in b.flow.objects:
+        params = obj.params_dict()
+        params.pop("demote_rate", None)  # compile-time knob, not an obj_init param
+        if channel_exists:
+            have = existing.get(b.channel, {}).get("objects", {})
+            prior = have.get(obj.object_id)
+            if prior is not None and prior.get("kind") not in (None, "noop"):
+                raise PolicyError(
+                    f"flow {b.flow.name!r}: object {obj.object_id!r} already exists on "
+                    f"channel {b.channel!r} (kind {prior.get('kind')!r}); refusing to replace"
+                )
+        install.append(
+            HousekeepingRule(
+                op="create_object",
+                channel=b.channel,
+                object_id=obj.object_id,
+                object_kind=obj.kind,
+                params=params,
+            )
+        )
+        if channel_exists:  # channel outlives the policy: remove objects one by one
+            teardown.append(
+                HousekeepingRule(op="remove_object", channel=b.channel, object_id=obj.object_id)
+            )
+    match = b.flow.match_dict()
+    install.append(DifferentiationRule(channel=b.channel, match=match))
+    teardown.append(
+        HousekeepingRule(op="remove_route", channel=b.channel, params={"match": match})
+    )
+    if not channel_exists:
+        teardown.append(HousekeepingRule(op="remove_channel", channel=b.channel))
+    cp.teardown.setdefault(b.stage, []).extend(teardown)
+
+
+# --------------------------------------------------------------------------- #
+# actions                                                                      #
+# --------------------------------------------------------------------------- #
+def _resolve_action_flow(
+    policy: Policy, bindings: Dict[str, _FlowBinding], ref: Optional[str], what: str
+) -> _FlowBinding:
+    if ref is None:
+        raise PolicyError(f"{what}: action needs a target flow")
+    if ref in bindings:
+        return bindings[ref]
+    if "=" in ref:  # "tenant=analytics" → the flow with exactly that match
+        from .dsl import _canon_match  # noqa: PLC0415 — shared canonicalization
+
+        key, _, val = ref.partition("=")
+        want = _canon_match({key: val})
+        for b in bindings.values():
+            if b.flow.match == want:
+                return b
+    raise PolicyError(
+        f"{what}: unknown flow {ref!r} (declared: {sorted(bindings)})"
+    )
+
+
+def _lower_action(
+    policy: Policy,
+    bindings: Dict[str, _FlowBinding],
+    action: Action,
+    what: str,
+    infos: Optional[Mapping[str, Any]],
+) -> Tuple[str, List[Any]]:
+    """Returns (stage, rules) for one action."""
+    if action.op == "set":
+        b = _resolve_action_flow(policy, bindings, action.flow, what)
+        state = action.state_dict()
+        if not state:
+            raise PolicyError(f"{what}: 'set' action with empty state")
+        _check_object(infos, b, action.object_id, what)
+        return b.stage, [
+            EnforcementRule(channel=b.channel, object_id=action.object_id, state=state)
+        ]
+    if action.op in ("demote", "promote"):
+        b = _resolve_action_flow(policy, bindings, action.flow, what)
+        if b.drl_object_id is None:
+            raise PolicyError(
+                f"{what}: {action.op} targets flow {b.flow.name!r} which provisions no DRL "
+                "(add 'limit bandwidth …' to the flow)"
+            )
+        rate = b.demote_rate if action.op == "demote" else b.provisioned_rate
+        return b.stage, [
+            EnforcementRule(channel=b.channel, object_id=b.drl_object_id, state={"rate": rate})
+        ]
+    raise PolicyError(f"{what}: unknown action op {action.op!r}")
+
+
+def _check_object(
+    infos: Optional[Mapping[str, Any]], b: _FlowBinding, object_id: str, what: str
+) -> None:
+    """An action's target object must be provisioned by the policy or already
+    live on the stage (when stage info is available to check)."""
+    if any(o.object_id == object_id for o in b.flow.objects):
+        return
+    if infos is None:
+        return
+    have = infos.get(b.stage, {}).get("channels", {}).get(b.channel, {}).get("objects", {})
+    if object_id not in have:
+        raise PolicyError(
+            f"{what}: object {object_id!r} not provisioned on flow {b.flow.name!r} "
+            f"and not present on stage {b.stage!r} channel {b.channel!r}"
+        )
+
+
+# --------------------------------------------------------------------------- #
+# triggers                                                                     #
+# --------------------------------------------------------------------------- #
+def _resolve_metric_key(
+    policy: Policy,
+    cond: Condition,
+    bindings: Dict[str, _FlowBinding],
+    infos: Optional[Mapping[str, Any]],
+    default_stage: Optional[str],
+    what: str,
+) -> str:
+    if "." in cond.metric:  # fully-qualified registry key — pluggable, pass through
+        return cond.metric
+    canon = METRIC_ALIASES.get(cond.metric)
+    if canon is None:
+        raise PolicyError(
+            f"{what}: unknown metric {cond.metric!r} "
+            f"(builtins: {sorted(set(METRIC_ALIASES))}; registry metrics use dotted names)"
+        )
+    if cond.flow is not None:
+        b = _resolve_action_flow(policy, bindings, cond.flow, what)
+        return f"{b.stage}.{b.channel}.{canon}"
+    stage = _resolve_stage(policy, None, infos, default_stage, what)
+    return f"{stage}.{canon}"
+
+
+def _lower_trigger(
+    policy: Policy,
+    spec: TriggerSpec,
+    bindings: Dict[str, _FlowBinding],
+    infos: Optional[Mapping[str, Any]],
+    default_stage: Optional[str],
+) -> CompiledTrigger:
+    what = f"trigger {spec.name!r}"
+    metric_key = _resolve_metric_key(policy, spec.when, bindings, infos, default_stage, what)
+    fire: Dict[str, List[Any]] = {}
+    release: Dict[str, List[Any]] = {}
+    for action in spec.do:
+        stage, rules = _lower_action(policy, bindings, action, what, infos)
+        fire.setdefault(stage, []).extend(rules)
+    for action in spec.release:
+        stage, rules = _lower_action(policy, bindings, action, what, infos)
+        release.setdefault(stage, []).extend(rules)
+    return CompiledTrigger(
+        policy=policy.name,
+        name=spec.name,
+        metric_key=metric_key,
+        agg=spec.when.agg,
+        op=spec.when.op,
+        value=spec.when.value,
+        window=spec.when.window,
+        hysteresis=spec.hysteresis,
+        cooldown=spec.cooldown,
+        fire_rules=fire,
+        release_rules=release,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# objectives                                                                   #
+# --------------------------------------------------------------------------- #
+def _flow_specs(bindings: Dict[str, _FlowBinding]) -> Dict[str, Any]:
+    from repro.core.algorithms import FlowSpec
+
+    return {
+        name: FlowSpec(stage=b.stage, channel=b.channel, object_id=b.drl_object_id or "0")
+        for name, b in bindings.items()
+    }
+
+
+def _lower_objective(policy: Policy, bindings: Dict[str, _FlowBinding]):
+    from repro.core.algorithms import FairShareControl, TailLatencyControl
+
+    from .dsl import parse_duration, parse_quantity
+
+    obj = policy.objective
+    params = obj.params_dict()
+    what = f"objective {obj.kind!r}"
+    flows = _flow_specs(bindings)
+
+    if obj.kind in ("fairshare", "fair_share", "max_min_fair_share"):
+        demands_raw = params.get("demands")
+        if not demands_raw:
+            raise PolicyError(f"{what}: needs 'demands' (flow → guaranteed bandwidth)")
+        demands: Dict[str, float] = {}
+        for name, qty in dict(demands_raw).items():
+            if name not in bindings:
+                raise PolicyError(f"{what}: demand for undeclared flow {name!r}")
+            demands[name] = parse_quantity(qty)
+        capacity = params.get("capacity") or params.get("max_bandwidth")
+        if capacity is None:
+            raise PolicyError(f"{what}: needs 'capacity'")
+        return FairShareControl.from_policy(
+            {
+                "demands": demands,
+                "capacity": parse_quantity(capacity),
+                "loop_interval": parse_duration(params.get("loop_interval", 0.1)),
+            },
+            {n: flows[n] for n in demands},
+        )
+
+    if obj.kind in ("tail_latency", "silk"):
+        roles = {}
+        for role in ("fg", "flush", "l0"):
+            ref = params.get(role)
+            if ref is None or ref not in bindings:
+                raise PolicyError(f"{what}: needs '{role}' naming a declared flow")
+            roles[role] = flows[ref]
+        ln_refs = params.get("ln") or []
+        if isinstance(ln_refs, str):
+            ln_refs = [r for r in ln_refs.split(",") if r]
+        for r in ln_refs:
+            if r not in bindings:
+                raise PolicyError(f"{what}: 'ln' names undeclared flow {r!r}")
+        capacity = params.get("capacity") or params.get("kvs_bandwidth")
+        if capacity is None:
+            raise PolicyError(f"{what}: needs 'capacity'")
+        return TailLatencyControl.from_policy(
+            {
+                **roles,
+                "ln": [flows[r] for r in ln_refs],
+                "capacity": parse_quantity(capacity),
+                "min_bandwidth": parse_quantity(params.get("min_bandwidth", params.get("min", 10 * (1 << 20)))),
+                "loop_interval": parse_duration(params.get("loop_interval", 0.1)),
+            }
+        )
+
+    raise PolicyError(f"{what}: unknown objective kind (known: fairshare, tail_latency)")

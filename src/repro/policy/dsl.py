@@ -1,0 +1,628 @@
+"""Declarative policy DSL (the missing Crystal-style layer over PAIO rules).
+
+A *policy* is what an administrator writes; *rules* are what stages execute.
+Policies are dict/JSON-native — the canonical form is a plain dict parsed into
+typed, frozen dataclasses by :func:`policy_from_dict` — with a compact text
+front-end (:func:`parse_policy_text`) for the common cases::
+
+    policy serve_guard stage serve
+    for tenant=analytics: limit bandwidth 100MiB/s
+    for request_context=bg_compaction_LN as compaction: limit bandwidth 50MiB/s
+    when p99_latency_ms > 50 window 2s cooldown 1s release 35: demote compaction
+    objective fairshare capacity 600MiB/s demands analytics=400MiB/s,compaction=200MiB/s
+
+Statement kinds:
+
+* ``for <classifier>=<value>[ ...] [as <name>]: <action>[; <action>]`` —
+  declares a *flow*: a channel fed by a differentiation match, provisioned
+  with enforcement objects (``limit bandwidth`` creates a DRL).
+* ``when <metric> <op> <number> [...]: <action>[; <action>]`` — a
+  metrics-driven *trigger* evaluated by the control plane every collect tick,
+  with sliding-window aggregation, hysteresis and cooldown.
+* ``objective <kind> ...`` — a closed-loop control objective (max-min fair
+  share / tail-latency) compiled to the existing ControlAlgorithm classes.
+
+The DSL is deliberately *not* Turing-complete: everything lowers to the wire
+rule types of :mod:`repro.core.rules`, so a policy can always be shipped to a
+remote stage over the UDS transport with identical semantics.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.core.context import RequestType
+from repro.core.rules import CLASSIFIERS
+
+
+class PolicyError(ValueError):
+    """Raised on parse or compile errors — policies fail loudly, at load time."""
+
+
+# --------------------------------------------------------------------------- #
+# quantities                                                                   #
+# --------------------------------------------------------------------------- #
+_QTY_RE = re.compile(
+    r"^\s*(?P<num>-?\d+(?:\.\d+)?)\s*(?P<unit>[KMGT]i?B|B)?\s*(?P<per>/s)?\s*$",
+    re.IGNORECASE,
+)
+_TIME_RE = re.compile(r"^\s*(?P<num>-?\d+(?:\.\d+)?)\s*(?P<unit>ms|us|s|m|h)?\s*$")
+
+_BYTE_SCALE = {
+    "b": 1,
+    "kib": 1 << 10, "kb": 1000,
+    "mib": 1 << 20, "mb": 1000**2,
+    "gib": 1 << 30, "gb": 1000**3,
+    "tib": 1 << 40, "tb": 1000**4,
+}
+_TIME_SCALE = {"us": 1e-6, "ms": 1e-3, "s": 1.0, "m": 60.0, "h": 3600.0}
+
+
+def parse_quantity(value: Any) -> float:
+    """Parse a byte-rate / byte / bare-number quantity: ``"100MiB/s"`` →
+    104857600.0, ``"4KiB"`` → 4096.0, ``250`` → 250.0."""
+    if isinstance(value, (int, float)):
+        return float(value)
+    m = _QTY_RE.match(str(value))
+    if not m:
+        raise PolicyError(f"bad quantity {value!r} (expected e.g. 100MiB/s, 4KiB, 250)")
+    num = float(m.group("num"))
+    unit = (m.group("unit") or "").lower()
+    return num * _BYTE_SCALE.get(unit, 1)
+
+
+def parse_duration(value: Any) -> float:
+    """Parse a duration into seconds: ``"500ms"`` → 0.5, ``2`` → 2.0."""
+    if isinstance(value, (int, float)):
+        return float(value)
+    m = _TIME_RE.match(str(value))
+    if not m:
+        raise PolicyError(f"bad duration {value!r} (expected e.g. 500ms, 2s)")
+    return float(m.group("num")) * _TIME_SCALE.get((m.group("unit") or "s").lower(), 1.0)
+
+
+#: accepted classifier aliases in policy matches (DSL sugar → Context field)
+CLASSIFIER_ALIASES = {
+    "workflow": "workflow_id",
+    "context": "request_context",
+    "type": "request_type",
+    **{c: c for c in CLASSIFIERS},
+}
+
+
+def _canon_match(match: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    out = []
+    for key, val in match.items():
+        canon = CLASSIFIER_ALIASES.get(key)
+        if canon is None:
+            raise PolicyError(
+                f"unknown classifier {key!r} in match (known: {sorted(set(CLASSIFIER_ALIASES))})"
+            )
+        if canon == "request_type" and isinstance(val, str):
+            # symbolic verbs ("read", "write", …) must land on the same int
+            # code the data plane hashes, or the route would silently never hit
+            if val.isdigit():
+                val = int(val)
+            else:
+                try:
+                    val = int(RequestType[val])
+                except KeyError:
+                    raise PolicyError(
+                        f"unknown request_type {val!r} "
+                        f"(known: {[t.name for t in RequestType]})"
+                    ) from None
+        if canon == "workflow_id" and isinstance(val, str) and val.lstrip("-").isdigit():
+            val = int(val)
+        out.append((canon, val))
+    return tuple(sorted(out))
+
+
+# --------------------------------------------------------------------------- #
+# typed policy model                                                           #
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class ObjectSpec:
+    """One enforcement object provisioned on a flow's channel."""
+
+    kind: str
+    object_id: str = "0"
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+@dataclass(frozen=True)
+class Flow:
+    """A named flow: classifier match → dedicated channel + objects."""
+
+    name: str
+    match: Tuple[Tuple[str, Any], ...]
+    stage: Optional[str] = None  # None → the policy's default stage
+    channel: Optional[str] = None  # None → flow name
+    objects: Tuple[ObjectSpec, ...] = ()
+
+    def match_dict(self) -> Dict[str, Any]:
+        return dict(self.match)
+
+    def channel_name(self) -> str:
+        return self.channel or self.name
+
+
+@dataclass(frozen=True)
+class Action:
+    """One triggered (or provisioning) action against a flow's objects.
+
+    ``op``:
+      * ``set``     — push ``state`` into the target object (enf rule),
+      * ``demote``  — throttle the flow's DRL to its demote floor,
+      * ``promote`` — restore the flow's provisioned DRL rate.
+    """
+
+    op: str
+    flow: Optional[str] = None
+    object_id: str = "0"
+    state: Tuple[Tuple[str, Any], ...] = ()
+
+    def state_dict(self) -> Dict[str, Any]:
+        return dict(self.state)
+
+
+_AGGS = ("last", "mean", "min", "max", "rate", "p50", "p95", "p99")
+_OPS = (">", ">=", "<", "<=", "==", "!=")
+
+
+@dataclass(frozen=True)
+class Condition:
+    """A windowed metric predicate: ``agg(metric over window) op value``."""
+
+    metric: str
+    op: str
+    value: float
+    agg: str = "last"
+    flow: Optional[str] = None  # builtin metrics resolve against this flow
+    window: float = 1.0
+
+
+@dataclass(frozen=True)
+class TriggerSpec:
+    """when-condition → actions, with hysteresis + cooldown (no flapping)."""
+
+    name: str
+    when: Condition
+    do: Tuple[Action, ...]
+    release: Tuple[Action, ...] = ()
+    #: release band width, in metric units: a fired ``>`` trigger only resets
+    #: once agg drops below ``value - hysteresis`` (mirrored for ``<``)
+    hysteresis: float = 0.0
+    #: minimum seconds between consecutive fires
+    cooldown: float = 0.0
+
+
+@dataclass(frozen=True)
+class Objective:
+    """Closed-loop objective lowered to a ControlAlgorithm (fairshare / …)."""
+
+    kind: str
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+
+@dataclass(frozen=True)
+class Policy:
+    name: str
+    stage: Optional[str] = None
+    flows: Tuple[Flow, ...] = ()
+    triggers: Tuple[TriggerSpec, ...] = ()
+    objective: Optional[Objective] = None
+
+    def flow(self, name: str) -> Optional[Flow]:
+        for f in self.flows:
+            if f.name == name:
+                return f
+        return None
+
+
+# --------------------------------------------------------------------------- #
+# dict/JSON form                                                               #
+# --------------------------------------------------------------------------- #
+def _freeze(d: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted(d.items()))
+
+
+def _object_from_dict(d: Mapping[str, Any]) -> ObjectSpec:
+    if "kind" not in d:
+        raise PolicyError(f"object spec missing 'kind': {d!r}")
+    params = dict(d.get("params") or {})
+    for key in ("rate", "demote_rate"):
+        if key in params:
+            params[key] = parse_quantity(params[key])
+    return ObjectSpec(
+        kind=str(d["kind"]),
+        object_id=str(d.get("id", d.get("object_id", "0"))),
+        params=_freeze(params),
+    )
+
+
+def _action_from_dict(d: Mapping[str, Any]) -> Action:
+    op = d.get("op") or d.get("action")
+    if op not in ("set", "demote", "promote"):
+        raise PolicyError(f"unknown action op {op!r} (known: set, demote, promote)")
+    state = dict(d.get("state") or {})
+    if "rate" in state:
+        state["rate"] = parse_quantity(state["rate"])
+    return Action(
+        op=op,
+        flow=d.get("flow"),
+        object_id=str(d.get("object_id", "0")),
+        state=_freeze(state),
+    )
+
+
+def _condition_from_dict(d: Mapping[str, Any]) -> Condition:
+    metric, agg = str(d.get("metric", "")), str(d.get("agg", "last"))
+    if not metric:
+        raise PolicyError("trigger condition missing 'metric'")
+    metric, prefix_agg = _split_agg_prefix(metric)
+    if prefix_agg is not None:
+        agg = prefix_agg if agg == "last" else agg
+    if agg not in _AGGS:
+        raise PolicyError(f"unknown aggregation {agg!r} (known: {_AGGS})")
+    op = str(d.get("op", ">"))
+    if op not in _OPS:
+        raise PolicyError(f"unknown comparison {op!r} (known: {_OPS})")
+    return Condition(
+        metric=metric,
+        op=op,
+        value=parse_quantity(d.get("value", 0)),
+        agg=agg,
+        flow=d.get("flow"),
+        window=parse_duration(d.get("window", 1.0)),
+    )
+
+
+def _trigger_from_dict(d: Mapping[str, Any], index: int) -> TriggerSpec:
+    if "when" not in d:
+        raise PolicyError(f"trigger missing 'when': {d!r}")
+    do = tuple(_action_from_dict(a) for a in d.get("do") or ())
+    if not do:
+        raise PolicyError(f"trigger {d.get('name', index)!r} has no 'do' actions")
+    return TriggerSpec(
+        name=str(d.get("name", f"trigger{index}")),
+        when=_condition_from_dict(d["when"]),
+        do=do,
+        release=tuple(_action_from_dict(a) for a in d.get("release") or ()),
+        hysteresis=parse_quantity(d.get("hysteresis", 0)),
+        cooldown=parse_duration(d.get("cooldown", 0)),
+    )
+
+
+def policy_from_dict(d: Mapping[str, Any]) -> Policy:
+    """Parse the canonical dict/JSON form into a typed :class:`Policy`."""
+    if not isinstance(d, Mapping):
+        raise PolicyError(f"policy must be a mapping, got {type(d).__name__}")
+    name = d.get("policy") or d.get("name")
+    if not name:
+        raise PolicyError("policy missing 'policy' (its name)")
+    flows = []
+    seen = set()
+    for fd in d.get("flows") or ():
+        if "match" not in fd or "name" not in fd:
+            raise PolicyError(f"flow needs 'name' and 'match': {fd!r}")
+        if fd["name"] in seen:
+            raise PolicyError(f"duplicate flow name {fd['name']!r}")
+        seen.add(fd["name"])
+        flows.append(
+            Flow(
+                name=str(fd["name"]),
+                match=_canon_match(fd["match"]),
+                stage=fd.get("stage"),
+                channel=fd.get("channel"),
+                objects=tuple(_object_from_dict(o) for o in fd.get("objects") or ()),
+            )
+        )
+    objective = None
+    if d.get("objective"):
+        od = dict(d["objective"])
+        kind = od.pop("kind", None)
+        if not kind:
+            raise PolicyError("objective missing 'kind'")
+        objective = Objective(kind=str(kind), params=_freeze(od))
+    return Policy(
+        name=str(name),
+        stage=d.get("stage"),
+        flows=tuple(flows),
+        triggers=tuple(_trigger_from_dict(td, i) for i, td in enumerate(d.get("triggers") or ())),
+        objective=objective,
+    )
+
+
+def policy_to_dict(p: Policy) -> Dict[str, Any]:
+    """Canonical dict form (JSON-serializable; round-trips via policy_from_dict)."""
+    d: Dict[str, Any] = {"policy": p.name}
+    if p.stage:
+        d["stage"] = p.stage
+    if p.flows:
+        d["flows"] = [
+            {
+                "name": f.name,
+                "match": f.match_dict(),
+                **({"stage": f.stage} if f.stage else {}),
+                **({"channel": f.channel} if f.channel else {}),
+                "objects": [
+                    {"kind": o.kind, "id": o.object_id, "params": o.params_dict()}
+                    for o in f.objects
+                ],
+            }
+            for f in p.flows
+        ]
+    if p.triggers:
+        d["triggers"] = [
+            {
+                "name": t.name,
+                "when": {
+                    "metric": t.when.metric,
+                    "op": t.when.op,
+                    "value": t.when.value,
+                    "agg": t.when.agg,
+                    **({"flow": t.when.flow} if t.when.flow else {}),
+                    "window": t.when.window,
+                },
+                "do": [_action_to_dict(a) for a in t.do],
+                **({"release": [_action_to_dict(a) for a in t.release]} if t.release else {}),
+                "hysteresis": t.hysteresis,
+                "cooldown": t.cooldown,
+            }
+            for t in p.triggers
+        ]
+    if p.objective:
+        d["objective"] = {"kind": p.objective.kind, **p.objective.params_dict()}
+    return d
+
+
+def _action_to_dict(a: Action) -> Dict[str, Any]:
+    out: Dict[str, Any] = {"op": a.op}
+    if a.flow:
+        out["flow"] = a.flow
+    if a.object_id != "0":
+        out["object_id"] = a.object_id
+    if a.state:
+        out["state"] = a.state_dict()
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# compact text front-end                                                       #
+# --------------------------------------------------------------------------- #
+#: ``p99_latency_ms`` style shorthand → (metric, agg)
+_AGG_PREFIX_RE = re.compile(r"^(p50|p95|p99|mean|max|min|rate)_(.+)$")
+
+
+def _split_agg_prefix(metric: str) -> Tuple[str, Optional[str]]:
+    m = _AGG_PREFIX_RE.match(metric)
+    if m and "." not in metric:
+        return m.group(2), m.group(1)
+    return metric, None
+
+
+def _parse_text_action(text: str, own_flow: Optional[str]) -> Action:
+    toks = text.split()
+    if not toks:
+        raise PolicyError("empty action")
+    verb = toks[0]
+    if verb == "limit":
+        # limit bandwidth 100MiB/s [on <flow>[.<oid>]]
+        if len(toks) < 3 or toks[1] not in ("bandwidth", "rate", "iops"):
+            raise PolicyError(f"bad limit action {text!r} (limit bandwidth <qty> [on <flow>])")
+        flow, oid = _parse_on_clause(toks[3:], text, own_flow)
+        return Action(op="set", flow=flow, object_id=oid, state=_freeze({"rate": parse_quantity(toks[2])}))
+    if verb == "set":
+        # set key=value[,key=value] [on <flow>[.<oid>]]
+        if len(toks) < 2:
+            raise PolicyError(f"bad set action {text!r}")
+        state: Dict[str, Any] = {}
+        for kv in toks[1].split(","):
+            if "=" not in kv:
+                raise PolicyError(f"bad set action {text!r} (need key=value)")
+            k, v = kv.split("=", 1)
+            try:
+                state[k] = parse_quantity(v)
+            except PolicyError:
+                state[k] = v
+        flow, oid = _parse_on_clause(toks[2:], text, own_flow)
+        return Action(op="set", flow=flow, object_id=oid, state=_freeze(state))
+    if verb in ("demote", "promote"):
+        # demote <flow> | demote <classifier>=<value> (resolved at compile)
+        target = toks[1] if len(toks) > 1 else own_flow
+        if target is None:
+            raise PolicyError(f"{verb} needs a flow: {text!r}")
+        return Action(op=verb, flow=target)
+    raise PolicyError(f"unknown action verb {verb!r} in {text!r}")
+
+
+def _parse_on_clause(toks, text: str, own_flow: Optional[str]):
+    if not toks:
+        return own_flow, "0"
+    if toks[0] != "on" or len(toks) != 2:
+        raise PolicyError(f"bad action tail {toks!r} in {text!r} (expected: on <flow>[.<oid>])")
+    flow, _, oid = toks[1].partition(".")
+    return flow, oid or "0"
+
+
+def _flow_name_from_match(match: Tuple[Tuple[str, Any], ...]) -> str:
+    return "_".join(str(v) for _, v in match) or "all"
+
+
+_WHEN_RE = re.compile(
+    r"^when\s+(?P<metric>\S+?)(?:@(?P<flow>\S+))?\s+(?P<op>>=|<=|==|!=|>|<)\s+(?P<value>\S+)"
+    r"(?P<mods>(?:\s+(?:window|cooldown|release|agg)\s+\S+)*)\s*$"
+)
+_MOD_RE = re.compile(r"(window|cooldown|release|agg)\s+(\S+)")
+
+
+def parse_policy_text(text: str, name: str = "policy") -> Policy:
+    """Parse the compact line-oriented front-end into a :class:`Policy`."""
+    d: Dict[str, Any] = {"policy": name, "flows": [], "triggers": []}
+    for lineno, raw in enumerate(text.splitlines(), 1):
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        try:
+            _parse_text_line(line, d)
+        except PolicyError as exc:
+            raise PolicyError(f"line {lineno}: {exc}") from None
+    return policy_from_dict(d)
+
+
+def _parse_text_line(line: str, d: Dict[str, Any]) -> None:
+    if line.startswith("policy "):
+        toks = line.split()
+        d["policy"] = toks[1]
+        if len(toks) >= 4 and toks[2] == "stage":
+            d["stage"] = toks[3]
+        return
+    if line.startswith("stage "):
+        d["stage"] = line.split(None, 1)[1].strip()
+        return
+    if line.startswith("for "):
+        head, _, tail = line[4:].partition(":")
+        if not tail.strip():
+            raise PolicyError(f"'for' statement needs ': <action>': {line!r}")
+        toks = head.split()
+        alias = None
+        if "as" in toks:
+            i = toks.index("as")
+            if i + 1 >= len(toks):
+                raise PolicyError(f"'as' needs a name: {line!r}")
+            alias = toks[i + 1]
+            toks = toks[:i]
+        match: Dict[str, Any] = {}
+        for kv in toks:
+            if "=" not in kv:
+                raise PolicyError(f"bad match term {kv!r} (need classifier=value)")
+            k, v = kv.split("=", 1)
+            match[k] = v
+        canon = _canon_match(match)
+        flow_name = alias or _flow_name_from_match(canon)
+        objects = []
+        for a_text in tail.split(";"):
+            a_text = a_text.strip()
+            if not a_text:
+                continue
+            act = _parse_text_action(a_text, flow_name)
+            if act.op == "set" and (act.flow in (None, flow_name)) and "rate" in act.state_dict():
+                # provisioning sugar: a rate limit on the flow's own channel
+                # becomes a DRL object, not a runtime enf rule
+                objects.append({"kind": "drl", "id": act.object_id, "params": act.state_dict()})
+            else:
+                raise PolicyError(
+                    f"'for' statements only provision their own flow (got {a_text!r}); "
+                    "use 'when' for runtime actions"
+                )
+        d["flows"].append(
+            {"name": flow_name, "match": dict(canon), "objects": objects}
+        )
+        return
+    if line.startswith("when "):
+        head, _, tail = line.partition(":")
+        if not tail.strip():
+            raise PolicyError(f"'when' statement needs ': <action>': {line!r}")
+        m = _WHEN_RE.match(head.strip())
+        if not m:
+            raise PolicyError(
+                f"bad 'when' head {head.strip()!r} "
+                "(when <metric>[@flow] <op> <value> [window <t>] [cooldown <t>] [release <v>] [agg <a>])"
+            )
+        when: Dict[str, Any] = {
+            "metric": m.group("metric"),
+            "op": m.group("op"),
+            "value": m.group("value"),
+        }
+        if m.group("flow"):
+            when["flow"] = m.group("flow")
+        trig: Dict[str, Any] = {"when": when, "name": f"trigger{len(d['triggers'])}"}
+        for mod, val in _MOD_RE.findall(m.group("mods") or ""):
+            if mod == "window":
+                when["window"] = val
+            elif mod == "cooldown":
+                trig["cooldown"] = val
+            elif mod == "agg":
+                when["agg"] = val
+            elif mod == "release":
+                # release <v>: hysteresis = |value - v| and auto release actions
+                trig["hysteresis"] = abs(parse_quantity(when["value"]) - parse_quantity(val))
+        actions = [
+            _parse_text_action(a.strip(), None) for a in tail.split(";") if a.strip()
+        ]
+        trig["do"] = [_action_to_dict(a) for a in actions]
+        # demote actions auto-pair with promote on release (and vice versa)
+        releases = [
+            {"op": "promote", "flow": a.flow} for a in actions if a.op == "demote"
+        ] + [{"op": "demote", "flow": a.flow} for a in actions if a.op == "promote"]
+        if releases:
+            trig["release"] = releases
+        d["triggers"].append(trig)
+        return
+    if line.startswith("objective "):
+        toks = line.split()
+        od: Dict[str, Any] = {"kind": toks[1]}
+        i = 2
+        while i < len(toks):
+            key = toks[i]
+            if i + 1 >= len(toks):
+                raise PolicyError(f"objective key {key!r} needs a value")
+            val = toks[i + 1]
+            if key in ("demands", "flows"):
+                sub: Dict[str, Any] = {}
+                for kv in val.split(","):
+                    k, _, v = kv.partition("=")
+                    if not v:
+                        raise PolicyError(f"bad objective {key} term {kv!r}")
+                    sub[k] = v
+                od[key] = sub
+            else:
+                od[key] = val
+            i += 2
+        d["objective"] = od
+        return
+    raise PolicyError(f"unrecognized statement: {line!r}")
+
+
+# --------------------------------------------------------------------------- #
+# loading                                                                      #
+# --------------------------------------------------------------------------- #
+def load_policy(source: Any, name: Optional[str] = None) -> Policy:
+    """Parse a policy from whatever the caller has.
+
+    Accepts a :class:`Policy` (returned as-is), a dict (canonical form), a
+    path to a ``.json`` / ``.pol`` file, or raw DSL text.
+    """
+    if isinstance(source, Policy):
+        return source
+    if isinstance(source, Mapping):
+        return policy_from_dict(source)
+    text = str(source)
+    if "\n" not in text and text.strip().endswith((".json", ".pol", ".policy")):
+        return load_policy_file(text.strip())
+    stripped = text.lstrip()
+    if stripped.startswith("{"):
+        return policy_from_dict(json.loads(text))
+    return parse_policy_text(text, name=name or "policy")
+
+
+def load_policy_file(path: str) -> Policy:
+    import os
+
+    with open(path) as f:
+        text = f.read()
+    base = os.path.basename(path).rsplit(".", 1)[0]
+    if path.endswith(".json"):
+        try:
+            return policy_from_dict(json.loads(text))
+        except json.JSONDecodeError as exc:
+            raise PolicyError(f"{path}: invalid JSON: {exc}") from None
+    return parse_policy_text(text, name=base)

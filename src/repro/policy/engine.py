@@ -1,0 +1,141 @@
+"""Policy runtime: installed-policy store + metrics bridge + trigger loop.
+
+The runtime is owned by the control plane and driven from its feedback loop:
+every ``collect`` tick the runtime (1) converts stage statistics into metric
+gauges in the :class:`~repro.telemetry.metrics.MetricRegistry` (under
+``<stage>.<channel>.<field>`` and ``<stage>.<field>`` names), (2) takes one
+coherent registry sample — picking up any custom metrics other subsystems
+registered — and (3) feeds the trigger engine, returning the wire rules for
+whatever fired or released. The control plane ships those rules through its
+stage handles, so triggers behave identically for embedded and UDS stages.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Mapping, Optional
+
+from repro.core.stats import StageStats
+from repro.telemetry.metrics import MetricRegistry
+
+from .compile import CompiledPolicy
+from .triggers import TriggerEngine, TriggerEvent
+
+
+def stats_to_samples(stats: Mapping[str, StageStats]) -> Dict[str, float]:
+    """Flatten per-stage statistics into metric gauges.
+
+    Per channel: ``<stage>.<channel>.{throughput,iops,wait_ms,inflight,ops,bytes}``.
+    Per stage (aggregates): ``<stage>.{throughput,iops,wait_ms,inflight,ops,bytes}``
+    with ``wait_ms`` ops-weighted across channels.
+    """
+    out: Dict[str, float] = {}
+    for stage, st in stats.items():
+        tot_ops = tot_bytes = 0
+        tot_tput = tot_iops = tot_wait = 0.0
+        tot_inflight = 0
+        for name, snap in st.per_channel.items():
+            prefix = f"{stage}.{name}."
+            out[prefix + "throughput"] = snap.throughput
+            out[prefix + "iops"] = snap.iops
+            out[prefix + "wait_ms"] = snap.mean_wait_ms
+            out[prefix + "inflight"] = float(snap.inflight)
+            out[prefix + "ops"] = float(snap.ops)
+            out[prefix + "bytes"] = float(snap.bytes)
+            tot_ops += snap.ops
+            tot_bytes += snap.bytes
+            tot_tput += snap.throughput
+            tot_iops += snap.iops
+            tot_wait += snap.wait_seconds
+            tot_inflight += snap.inflight
+        out[f"{stage}.throughput"] = tot_tput
+        out[f"{stage}.iops"] = tot_iops
+        out[f"{stage}.wait_ms"] = (tot_wait / tot_ops) * 1e3 if tot_ops else 0.0
+        out[f"{stage}.inflight"] = float(tot_inflight)
+        out[f"{stage}.ops"] = float(tot_ops)
+        out[f"{stage}.bytes"] = float(tot_bytes)
+    return out
+
+
+class PolicyRuntime:
+    """Installed policies + the trigger engine, one per control plane."""
+
+    def __init__(self, registry: Optional[MetricRegistry] = None) -> None:
+        self.registry = registry or MetricRegistry()
+        self.trigger_engine = TriggerEngine()
+        self._policies: Dict[str, CompiledPolicy] = {}
+        self._stats_keys: set = set()  # gauges owned by the last stats tick
+        self._lock = threading.Lock()
+
+    # -- lifecycle ---------------------------------------------------------
+    def install(self, compiled: CompiledPolicy) -> None:
+        with self._lock:
+            if compiled.name in self._policies:
+                raise ValueError(f"policy {compiled.name!r} already installed")
+            self._policies[compiled.name] = compiled
+        for trigger in compiled.triggers:
+            self.trigger_engine.add(trigger)
+
+    def remove(self, name: str):
+        """Uninstall ``name``; returns ``(compiled, fired)`` where ``fired``
+        are the triggers that were FIRED at removal (popped atomically from
+        the engine, so the control loop cannot release them concurrently) —
+        callers apply their release rules so fired enforcement state does not
+        outlive the policy."""
+        with self._lock:
+            compiled = self._policies.pop(name, None)
+        if compiled is None:
+            raise KeyError(f"policy {name!r} is not installed")
+        fired = self.trigger_engine.remove_policy(name)
+        return compiled, fired
+
+    def get(self, name: str) -> Optional[CompiledPolicy]:
+        with self._lock:
+            return self._policies.get(name)
+
+    def list(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            policies = list(self._policies.values())
+        states = self.trigger_engine.states()
+        out = []
+        for cp in policies:
+            summary = cp.summary()
+            summary["trigger_states"] = {
+                t.qualified_name: states.get(t.qualified_name, "armed") for t in cp.triggers
+            }
+            summary["algorithms"] = type(cp.algorithm).__name__ if cp.algorithm else None
+            out.append(summary)
+        return out
+
+    def algorithms(self) -> List[Any]:
+        with self._lock:
+            return [cp.algorithm for cp in self._policies.values() if cp.algorithm is not None]
+
+    def pinned_targets(self) -> set:
+        """Targets owned by currently-fired triggers — see
+        :meth:`TriggerEngine.pinned_targets`."""
+        return self.trigger_engine.pinned_targets()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._policies)
+
+    # -- feedback-loop tick ------------------------------------------------
+    def on_collect(
+        self, now: float, stats: Mapping[str, StageStats]
+    ) -> List[TriggerEvent]:
+        """One tick: push stats into the registry, sample, evaluate triggers.
+
+        Stage gauges are replaced wholesale each tick: a channel that
+        disappeared (policy teardown, stage removal) takes its gauges with it,
+        so triggers see the metric as *absent* (state frozen) rather than as
+        a stale constant. Returns the trigger transitions; the caller applies
+        each event's ``rules`` (stage → wire rules) through its stage handles.
+        """
+        gauges = stats_to_samples(stats)
+        for stale in self._stats_keys - set(gauges):
+            self.registry.unregister(stale)
+        self._stats_keys = set(gauges)
+        for key, value in gauges.items():
+            self.registry.set_gauge(key, value)
+        samples = self.registry.sample()
+        return self.trigger_engine.observe(now, samples)

@@ -1,0 +1,253 @@
+"""Metrics-driven trigger engine (Crystal's dynamic-policy actor, PAIO-ified).
+
+The control plane feeds every collect tick into the engine: stage statistics
+become metric samples, samples accumulate in per-trigger sliding windows, and
+windowed predicates (``agg(metric over window) op threshold``) decide when a
+trigger *fires* (apply its actions' rules) or *releases* (apply the release
+rules). Two mechanisms keep an oscillating metric from flapping rules on and
+off every tick:
+
+* **hysteresis** — a fired ``>`` trigger only resets once the aggregate drops
+  below ``threshold - hysteresis`` (mirrored for ``<``), and
+* **cooldown** — a minimum time between consecutive fires.
+
+The engine is transport-agnostic: it evaluates pure state and returns the wire
+rules to apply; the control plane ships them through whichever StageHandle
+(local or UDS) hosts the target stage.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+
+# --------------------------------------------------------------------------- #
+# sliding windows                                                              #
+# --------------------------------------------------------------------------- #
+class SlidingWindow:
+    """Time-bounded sample window with the DSL's aggregations.
+
+    Samples are (timestamp, value) pairs; aggregation prunes anything older
+    than ``window`` seconds before computing. Percentiles use the
+    nearest-rank method over the retained samples.
+    """
+
+    __slots__ = ("window", "_buf")
+
+    def __init__(self, window: float) -> None:
+        self.window = float(window)
+        self._buf: Deque[Tuple[float, float]] = deque()
+
+    def push(self, t: float, value: float) -> None:
+        self._buf.append((t, float(value)))
+        self._prune(t)
+
+    def _prune(self, now: float) -> None:
+        cutoff = now - self.window
+        buf = self._buf
+        while buf and buf[0][0] < cutoff:
+            buf.popleft()
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def aggregate(self, agg: str) -> Optional[float]:
+        """None when the window holds no samples (predicates stay idle)."""
+        buf = self._buf
+        if not buf:
+            return None
+        if agg == "last":
+            return buf[-1][1]
+        values = [v for _, v in buf]
+        if agg == "mean":
+            return sum(values) / len(values)
+        if agg == "min":
+            return min(values)
+        if agg == "max":
+            return max(values)
+        if agg == "rate":
+            # Δvalue/Δt over the window (for monotonically-growing counters)
+            if len(buf) < 2:
+                return 0.0
+            (t0, v0), (t1, v1) = buf[0], buf[-1]
+            return (v1 - v0) / max(t1 - t0, 1e-9)
+        if agg in ("p50", "p95", "p99"):
+            q = {"p50": 50.0, "p95": 95.0, "p99": 99.0}[agg]
+            values.sort()
+            k = min(int(q / 100.0 * len(values)), len(values) - 1)
+            return values[k]
+        raise ValueError(f"unknown aggregation {agg!r}")
+
+
+def compare(op: str, left: float, right: float) -> bool:
+    if op == ">":
+        return left > right
+    if op == ">=":
+        return left >= right
+    if op == "<":
+        return left < right
+    if op == "<=":
+        return left <= right
+    if op == "==":
+        return left == right
+    if op == "!=":
+        return left != right
+    raise ValueError(f"unknown comparison {op!r}")
+
+
+def release_condition(op: str, agg_value: float, threshold: float, hysteresis: float) -> bool:
+    """Has a fired trigger crossed back out of its (hysteresis-widened) band?
+
+    For ``>``/``>=`` the release point is ``threshold - hysteresis``; for
+    ``<``/``<=`` it is ``threshold + hysteresis``; equality ops release when
+    the predicate is simply false.
+    """
+    if op in (">", ">="):
+        return agg_value <= threshold - hysteresis
+    if op in ("<", "<="):
+        return agg_value >= threshold + hysteresis
+    return not compare(op, agg_value, threshold)
+
+
+# --------------------------------------------------------------------------- #
+# compiled triggers + engine                                                   #
+# --------------------------------------------------------------------------- #
+@dataclass
+class CompiledTrigger:
+    """A trigger lowered to wire rules, ready for evaluation.
+
+    ``fire_rules`` / ``release_rules`` map stage name → list of wire rule
+    objects (Housekeeping/Differentiation/Enforcement) to submit on the
+    transition.
+    """
+
+    policy: str
+    name: str
+    metric_key: str
+    agg: str
+    op: str
+    value: float
+    window: float
+    hysteresis: float
+    cooldown: float
+    fire_rules: Dict[str, List[Any]]
+    release_rules: Dict[str, List[Any]]
+
+    @property
+    def qualified_name(self) -> str:
+        return f"{self.policy}/{self.name}"
+
+
+@dataclass
+class TriggerEvent:
+    """One trigger transition the control plane must enact."""
+
+    trigger: CompiledTrigger
+    kind: str  # "fire" | "release"
+    at: float
+    agg_value: float
+    rules: Dict[str, List[Any]] = field(default_factory=dict)
+
+
+class _TriggerRuntime:
+    __slots__ = ("spec", "window", "fired", "last_fire")
+
+    def __init__(self, spec: CompiledTrigger) -> None:
+        self.spec = spec
+        self.window = SlidingWindow(spec.window)
+        self.fired = False
+        self.last_fire = -float("inf")
+
+
+class TriggerEngine:
+    """Evaluates all installed triggers against incoming metric samples."""
+
+    def __init__(self) -> None:
+        self._triggers: Dict[str, _TriggerRuntime] = {}
+        self._lock = threading.Lock()
+
+    # -- lifecycle ---------------------------------------------------------
+    def add(self, trigger: CompiledTrigger) -> None:
+        with self._lock:
+            self._triggers[trigger.qualified_name] = _TriggerRuntime(trigger)
+
+    def remove_policy(self, policy: str) -> List[CompiledTrigger]:
+        """Drop every trigger of ``policy``; returns the ones that were FIRED
+        (callers may want to apply their release rules on uninstall)."""
+        dropped: List[CompiledTrigger] = []
+        with self._lock:
+            for key in [k for k, rt in self._triggers.items() if rt.spec.policy == policy]:
+                rt = self._triggers.pop(key)
+                if rt.fired:
+                    dropped.append(rt.spec)
+        return dropped
+
+    def triggers(self) -> List[CompiledTrigger]:
+        with self._lock:
+            return [rt.spec for rt in self._triggers.values()]
+
+    def states(self) -> Dict[str, str]:
+        with self._lock:
+            return {
+                k: ("fired" if rt.fired else "armed") for k, rt in self._triggers.items()
+            }
+
+    def metric_keys(self) -> List[str]:
+        with self._lock:
+            return sorted({rt.spec.metric_key for rt in self._triggers.values()})
+
+    def pinned_targets(self) -> set:
+        """(stage, channel, object_id) triples currently held by FIRED triggers.
+
+        While a trigger is fired it owns the objects its fire rules configure:
+        the control plane suppresses algorithm enforcement rules for pinned
+        targets so a closed-loop objective cannot immediately overwrite a
+        protective action (e.g. re-raising a demoted flow's rate every tick).
+        """
+        pinned = set()
+        with self._lock:
+            runtimes = [rt for rt in self._triggers.values() if rt.fired]
+        for rt in runtimes:
+            for stage, rules in rt.spec.fire_rules.items():
+                for rule in rules:
+                    oid = getattr(rule, "object_id", None)
+                    if oid is not None and hasattr(rule, "state"):
+                        pinned.add((stage, rule.channel, oid))
+        return pinned
+
+    # -- evaluation --------------------------------------------------------
+    def observe(self, now: float, samples: Dict[str, float]) -> List[TriggerEvent]:
+        """Feed one tick of metric samples; returns the transitions to enact.
+
+        A trigger whose metric is absent from ``samples`` keeps its window
+        (and state) untouched — a temporarily missing metric must not release
+        a protective rule.
+        """
+        events: List[TriggerEvent] = []
+        with self._lock:
+            runtimes = list(self._triggers.values())
+        for rt in runtimes:
+            spec = rt.spec
+            value = samples.get(spec.metric_key)
+            if value is None:
+                continue
+            rt.window.push(now, value)
+            agg = rt.window.aggregate(spec.agg)
+            if agg is None:
+                continue
+            if not rt.fired:
+                if compare(spec.op, agg, spec.value) and (now - rt.last_fire) >= spec.cooldown:
+                    rt.fired = True
+                    rt.last_fire = now
+                    events.append(
+                        TriggerEvent(spec, "fire", now, agg, rules=spec.fire_rules)
+                    )
+            else:
+                if release_condition(spec.op, agg, spec.value, spec.hysteresis):
+                    rt.fired = False
+                    events.append(
+                        TriggerEvent(spec, "release", now, agg, rules=spec.release_rules)
+                    )
+        return events

@@ -41,6 +41,18 @@ class _Pending:
     tenant: Optional[str]
 
 
+@dataclasses.dataclass
+class _Live:
+    """One prefetched generation mid-decode (drain's lockstep loop state)."""
+
+    pending: _Pending
+    caches: object
+    next_tok: object
+    outs: List[List[int]]
+    batch: int
+    prompt_len: int
+
+
 class ServeEngine:
     """Single-host serving: fixed max batch, greedy decoding.
 
@@ -57,11 +69,18 @@ class ServeEngine:
         params,
         max_seq: int = 512,
         stage: Optional[Stage] = None,
+        drain_concurrency: int = 4,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.stage = stage
+        #: lockstep window of ``drain``: how many queued requests decode (and
+        #: hold KV caches) simultaneously. Peak drain memory is roughly
+        #: ``drain_concurrency × init_caches(cfg, b, max_seq)`` — size it to
+        #: the deployment; 1 restores the sequential (one-cache) envelope at
+        #: the cost of per-window decode-enforcement coalescing.
+        self.drain_concurrency = int(drain_concurrency)
         self._prefill = jax.jit(build_prefill_step(cfg))
         self._decode = jax.jit(build_decode_step(cfg), donate_argnums=1)
         self._queue: "queue.Queue[_Pending]" = queue.Queue()
@@ -104,10 +123,60 @@ class ServeEngine:
             ctxs[-1].tenant = p.tenant or "default"
         self.stage.enforce_batch(ctxs)
 
-    def drain(self) -> List[GenerationResult]:
-        """Drain the submit queue: batch-admit all queued requests through
-        ``Stage.enforce_batch``, then generate each (decode-step token costs
-        are still enforced per step, as in ``generate``)."""
+    def _enforce_step_batch(self, lives: List[_Live]) -> None:
+        """Coalesce one decode step's token costs across all live requests
+        into ONE ``enforce_batch`` pass: each live request contributes a
+        context carrying its tenant and its per-step cost (one token per
+        sequence), exactly what ``generate`` enforces per step — but the
+        stage routes/rate-limits the whole step at batch cost."""
+        if self.stage is None or not lives:
+            return
+        ctxs = []
+        for lv in lives:
+            ctx = build_context(
+                RequestType.get, size=lv.batch, request_context="", workflow_id=None
+            )
+            ctx.tenant = lv.pending.tenant or "default"
+            ctxs.append(ctx)
+        self.stage.enforce_batch(ctxs)
+
+    def _prefill_one(self, p: _Pending) -> _Live:
+        b, s0 = p.prompts.shape
+        caches = init_caches(self.cfg, b, self.max_seq, dtype=self.cfg.compute_dtype)
+        batch = {
+            "tokens": jnp.asarray(p.prompts, jnp.int32),
+            "positions": jnp.broadcast_to(jnp.arange(s0, dtype=jnp.int32), (b, s0)),
+        }
+        next_tok, caches = self._prefill(self.params, caches, batch)
+        outs = [[int(t)] for t in np.asarray(next_tok)[:, 0]]
+        return _Live(p, caches, next_tok, outs, b, s0)
+
+    def _decode_one_step(self, lv: _Live, step: int) -> None:
+        pos = jnp.full((lv.batch, 1), lv.prompt_len + step - 1, jnp.int32)
+        lv.next_tok, lv.caches = self._decode(
+            self.params, lv.caches, {"tokens": lv.next_tok, "positions": pos}
+        )
+        for i, t in enumerate(np.asarray(lv.next_tok)[:, 0]):
+            lv.outs[i].append(int(t))
+
+    def drain(self, max_concurrent: Optional[int] = None) -> List[GenerationResult]:
+        """Drain the submit queue with batched enforcement end to end.
+
+        Prefill admission for all queued requests is ONE ``enforce_batch``
+        call (``_admit_batch``); the decode loops then run in lockstep so each
+        decode *step* enforces its token costs across all live requests in one
+        ``enforce_batch`` pass instead of one ``enforce`` per request per
+        step. Token accounting per tenant is identical to sequential
+        ``generate`` calls; only the lock/route/dispatch cost is amortized.
+
+        Every lockstepped request holds its KV caches live simultaneously, so
+        the queue is processed in windows of ``max_concurrent`` requests
+        (default: the engine's ``drain_concurrency``) — memory is bounded by
+        the window, not the (unbounded) queue depth.
+        """
+        window_size = max(
+            self.drain_concurrency if max_concurrent is None else max_concurrent, 1
+        )
         pending: List[_Pending] = []
         while True:
             try:
@@ -118,15 +187,23 @@ class ServeEngine:
             return []
         self._admit_batch(pending)
         results: List[GenerationResult] = []
-        for p in pending:
-            results.extend(
-                self.generate(
-                    p.prompts,
-                    max_new_tokens=p.max_new_tokens,
-                    tenant=p.tenant,
-                    _prefill_admitted=True,
+        for at in range(0, len(pending), window_size):
+            window = pending[at : at + window_size]
+            lives = [self._prefill_one(p) for p in window]
+            step = 1
+            while True:
+                active = [lv for lv in lives if step < lv.pending.max_new_tokens]
+                if not active:
+                    break
+                self._enforce_step_batch(active)
+                for lv in active:
+                    self._decode_one_step(lv, step)
+                step += 1
+            for lv in lives:
+                results.extend(
+                    GenerationResult(tokens=o, prompt_len=lv.prompt_len, tenant=lv.pending.tenant)
+                    for o in lv.outs
                 )
-            )
         return results
 
     def generate(
@@ -136,22 +213,12 @@ class ServeEngine:
         tenant: Optional[str] = None,
         _prefill_admitted: bool = False,
     ) -> List[GenerationResult]:
+        prompts = np.asarray(prompts)
         b, s0 = prompts.shape
-        caches = init_caches(self.cfg, b, self.max_seq, dtype=self.cfg.compute_dtype)
-        batch = {
-            "tokens": jnp.asarray(prompts, jnp.int32),
-            "positions": jnp.broadcast_to(jnp.arange(s0, dtype=jnp.int32), (b, s0)),
-        }
         if not _prefill_admitted:  # drain() already batch-admitted prefill cost
             self._enforce(tenant, b * s0)  # prefill cost: prompt tokens
-        next_tok, caches = self._prefill(self.params, caches, batch)
-        outs = [[int(t)] for t in np.asarray(next_tok)[:, 0]]
+        lv = self._prefill_one(_Pending(prompts, int(max_new_tokens), tenant))
         for step in range(1, max_new_tokens):
-            pos = jnp.full((b, 1), s0 + step - 1, jnp.int32)
             self._enforce(tenant, b)  # one token per sequence
-            next_tok, caches = self._decode(
-                self.params, caches, {"tokens": next_tok, "positions": pos}
-            )
-            for i, t in enumerate(np.asarray(next_tok)[:, 0]):
-                outs[i].append(int(t))
-        return [GenerationResult(tokens=o, prompt_len=s0, tenant=tenant) for o in outs]
+            self._decode_one_step(lv, step)
+        return [GenerationResult(tokens=o, prompt_len=s0, tenant=tenant) for o in lv.outs]

@@ -1,3 +1,3 @@
-from .metrics import ProcIOReader, StepTimer
+from .metrics import MetricRegistry, ProcIOReader, StepTimer
 
-__all__ = ["ProcIOReader", "StepTimer"]
+__all__ = ["MetricRegistry", "ProcIOReader", "StepTimer"]

@@ -1,11 +1,13 @@
-"""Telemetry: /proc I/O counters (paper §4.3's control-plane side channel)
-and step-time tracking for the straggler monitor."""
+"""Telemetry: /proc I/O counters (paper §4.3's control-plane side channel),
+step-time tracking for the straggler monitor, and the pluggable metric
+registry the policy trigger engine samples (Crystal-style: metrics are
+injected at runtime, controllers subscribe by name)."""
 from __future__ import annotations
 
 import threading
 import time
 from collections import deque
-from typing import Deque, Dict, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 
 class ProcIOReader:
@@ -34,6 +36,74 @@ class ProcIOReader:
         d = {k: now.get(k, 0) - self._last.get(k, 0) for k in now}
         self._last = now
         return d
+
+
+class MetricRegistry:
+    """Named metric sources the control plane samples every collect tick.
+
+    A *source* is a zero-arg callable returning the metric's current value
+    (a gauge). Stage statistics are pushed into the registry by the policy
+    runtime under ``<stage>.<channel>.<field>`` names; anything else (step
+    timers, /proc counters, model-serving queue depths) registers a callable
+    and becomes addressable from policy trigger predicates by name.
+    """
+
+    def __init__(self) -> None:
+        self._sources: Dict[str, Callable[[], float]] = {}
+        self._gauges: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def register(self, name: str, source: Callable[[], float]) -> None:
+        with self._lock:
+            self._sources[name] = source
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            self._sources.pop(name, None)
+            self._gauges.pop(name, None)
+
+    def set_gauge(self, name: str, value: float) -> None:
+        """Push-style update (used for per-collect stage statistics)."""
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(set(self._sources) | set(self._gauges))
+
+    def sample(self) -> Dict[str, float]:
+        """One coherent sample of every metric (pull sources + pushed gauges).
+
+        A source that raises is skipped for this tick (a dead metric must not
+        take down the control loop) — its last pushed value, if any, remains.
+        """
+        with self._lock:
+            sources = list(self._sources.items())
+            out = dict(self._gauges)
+        for name, fn in sources:
+            try:
+                out[name] = float(fn())
+            except Exception:  # noqa: BLE001 — sampling is best-effort
+                continue
+        return out
+
+    def register_step_timer(self, name: str, timer: "StepTimer") -> None:
+        """Bridge a StepTimer: exposes ``<name>.mean_ms`` and ``<name>.p99_ms``."""
+        self.register(f"{name}.mean_ms", lambda: timer.mean() * 1e3)
+        self.register(f"{name}.p99_ms", lambda: timer.percentile(99) * 1e3)
+
+    def register_proc_io(self, name: str = "proc_io", pid: Optional[int] = None) -> None:
+        """Bridge /proc I/O counters: ``<name>.read_bytes`` / ``<name>.write_bytes``
+        report the delta since the previous sample (a per-tick rate source).
+        Each metric gets its own reader so the two delta streams stay
+        independent no matter how often either is sampled."""
+
+        def _mk(key: str) -> Callable[[], float]:
+            reader = ProcIOReader(pid)
+            return lambda: float(reader.delta().get(key, 0))
+
+        self.register(f"{name}.read_bytes", _mk("read_bytes"))
+        self.register(f"{name}.write_bytes", _mk("write_bytes"))
 
 
 class StepTimer:

@@ -189,6 +189,45 @@ class TestBatchEquivalence:
         snap = st.collect().per_channel["fg"]
         assert (snap.ops, snap.bytes) == (3, 112)
 
+    def test_array_instance_write_batch(self):
+        from repro.core import ArrayInstance
+
+        st = _mixed_stage(VirtualClock())
+        inst = ArrayInstance(st, workflow_of=lambda: 1)
+        arrays = [np.full((8,), i, np.float32) for i in range(3)]
+        written = {}
+        inst.on_write_batch(arrays, lambda i, payload: written.__setitem__(i, payload))
+        assert sorted(written) == [0, 1, 2]
+        for i in range(3):
+            assert np.array_equal(written[i], arrays[i])
+        snap = st.collect().per_channel["fg"]
+        assert (snap.ops, snap.bytes) == (3, 3 * 32)
+
+    def test_array_instance_read_batch(self):
+        from repro.core import ArrayInstance
+
+        st = _mixed_stage(VirtualClock())
+        inst = ArrayInstance(st, workflow_of=lambda: 1)
+        out = inst.on_read_batch([64, 64], [lambda: np.zeros(16), lambda: np.ones(16)])
+        assert out[1][0] == 1.0
+        snap = st.collect().per_channel["fg"]
+        assert (snap.ops, snap.bytes) == (2, 128)
+
+    def test_write_shards_enforced_through_stage(self, tmp_path):
+        from repro.data.pipeline import DATA_PREP, FileTokenSource
+
+        clk = VirtualClock()
+        st = Stage("io", clock=clk)
+        st.hsk_rule(HousekeepingRule(op="create_channel", channel="prep"))
+        st.dif_rule(DifferentiationRule(channel="prep", match={"request_context": DATA_PREP}))
+        paths = [str(tmp_path / f"s{i}.bin") for i in range(3)]
+        arrays = [np.arange(50, dtype=np.int32) + i for i in range(3)]
+        FileTokenSource.write_shards(paths, arrays, stage=st)
+        src = FileTokenSource(paths, batch=1, seq=10)
+        assert np.array_equal(src.read(0).reshape(-1), arrays[0][:10])
+        snap = st.collect().per_channel["prep"]
+        assert (snap.ops, snap.bytes) == (3, 3 * 200)
+
 
 # --------------------------------------------------------------------------- #
 # token bucket admission under batch consume                                   #

@@ -76,6 +76,36 @@ class TestServeEngine:
         assert snaps["tenant_b"].cumulative_bytes == 2 * 4 + 2
         assert engine.drain() == []  # queue emptied
 
+    def test_drain_coalesces_decode_steps(self, small_model):
+        """Decode-step enforcement is coalesced across queued requests: one
+        enforce_batch per decode step carrying every live request's cost (plus
+        the single prefill admission), not one enforce per request per step."""
+        cfg, params = small_model
+        stage = Stage("serve")
+        for t in ("tenant_a", "tenant_b"):
+            stage.hsk_rule(HousekeepingRule(op="create_channel", channel=t))
+            stage.dif_rule(DifferentiationRule(channel=t, match={"tenant": t}))
+        calls = []
+        original = stage.enforce_batch
+
+        def spy(ctxs, requests=None):
+            calls.append([(c.tenant, c.size) for c in ctxs])
+            return original(ctxs, requests)
+
+        stage.enforce_batch = spy
+        engine = ServeEngine(cfg, params, max_seq=32, stage=stage)
+        engine.submit(np.zeros((1, 4), dtype=np.int32), max_new_tokens=3, tenant="tenant_a")
+        engine.submit(np.zeros((2, 4), dtype=np.int32), max_new_tokens=2, tenant="tenant_b")
+        engine.drain()
+        # 1 admission + decode steps 1 (both live) and 2 (only tenant_a)
+        assert calls[0] == [("tenant_a", 4), ("tenant_b", 8)]
+        assert calls[1] == [("tenant_a", 1), ("tenant_b", 2)]
+        assert calls[2] == [("tenant_a", 1)]
+        assert len(calls) == 3
+        snaps = stage.collect().per_channel
+        assert snaps["tenant_a"].cumulative_bytes == 4 + 1 + 1
+        assert snaps["tenant_b"].cumulative_bytes == 8 + 2
+
     def test_admit_batch_builds_tenant_contexts(self, small_model):
         cfg, params = small_model
         stage = Stage("serve")
