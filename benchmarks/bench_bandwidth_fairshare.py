@@ -129,6 +129,9 @@ def run_setup(
     elif mode == "paio":
         algo = FairShareControl(flows={}, demands={}, max_bandwidth=disk_bw, loop_interval=0.05)
         cp = ControlPlane(algo)
+        # stage gauges are published by the policy runtime's collect hook;
+        # touch it so the hand-coded setup is observable on the exporter too
+        _ = cp.policy_runtime
         for spec in instances:
             st = Stage(spec.name)
             st.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
@@ -192,7 +195,21 @@ def main() -> None:
         help="policy file driving the paio setup (e.g. examples/policies/fairshare.json); "
         "replaces the hand-coded stage provisioning + FairShareControl construction",
     )
+    ap.add_argument(
+        "--export",
+        type=int,
+        default=None,
+        metavar="PORT",
+        help="serve Prometheus-text metrics (stage gauges, policy versions, trigger "
+        "states) on this port for the duration of the run; 0 binds an ephemeral port",
+    )
     args = ap.parse_args()
+    exporter = None
+    if args.export is not None:
+        from repro.telemetry import start_exporter
+
+        exporter = start_exporter(port=args.export)
+        print(f"metrics exporter listening on {exporter.url}")
     specs = default_instances(args.scale)
     print(f"disk={1024*args.scale:.0f} MiB/s; demands " + ", ".join(f"{s.name}={s.demand/MiB:.0f}MiB/s" for s in specs))
     if args.policy:
@@ -212,6 +229,8 @@ def main() -> None:
             + " ".join(f"{bw[s.name]/MiB:>10.1f}" for s in specs)
             + f"   {'ALL MET' if met else 'VIOLATED':>9}  {makespan:>6.1f}"
         )
+    if exporter is not None:
+        exporter.stop()
 
 
 if __name__ == "__main__":

@@ -57,33 +57,71 @@ def validate_example_policies(policy_dir: str) -> List[str]:
     return errors
 
 
+def _scrape_fired(url: str) -> bool:
+    """One scrape of the exporter: is any reaction_probe trigger FIRED?"""
+    import urllib.request
+
+    from repro.telemetry import parse_prometheus
+
+    with urllib.request.urlopen(url, timeout=2.0) as resp:
+        metrics = parse_prometheus(resp.read().decode())
+    return any(
+        name.startswith("paio_trigger_fired") and 'policy="reaction_probe"' in name and value == 1.0
+        for name, value in metrics.items()
+    )
+
+
 def measure_reaction(
-    trials: int, interval: float, threshold: float = 1000.0, capped: float = 10 * MiB
+    trials: int,
+    interval: float,
+    threshold: float = 1000.0,
+    capped: float = 10 * MiB,
+    scrape: bool = False,
 ) -> Dict[str, float]:
+    """Trigger-to-enforcement latency, observed one of two ways:
+
+    * in-process (default): poll the DRL's live rate until the capped rate
+      lands — the ground truth;
+    * ``scrape=True``: poll the Prometheus exporter endpoint over HTTP for
+      ``paio_trigger_fired{policy="reaction_probe",...} 1`` — the number an
+      external monitoring system would measure. Expected to match in-process
+      within noise (the gauge publishes on the same tick that applies the
+      enforcement rule; HTTP adds sub-ms).
+    """
     from repro.core import ControlPlane, Stage
+    from repro.telemetry import MetricRegistry
 
     latencies: List[float] = []
     policy_text = POLICY_TEXT.format(threshold=threshold, capped=capped)
     for _ in range(trials):
         stage = Stage("app")
-        cp = ControlPlane(loop_interval=interval)
+        # per-trial registry: trigger gauges from the previous trial's plane
+        # must not satisfy this trial's scrape
+        cp = ControlPlane(loop_interval=interval, registry=MetricRegistry())
         cp.register_stage(stage)
         cp.install_policy(policy_text)
         drl = stage.channel("fg").get_object("0")
         baseline = drl.rate
+        exporter = cp.serve_metrics() if scrape else None
         cp.start()
         try:
             time.sleep(interval * 1.5)  # loop ticking; stats window established
             t0 = time.monotonic()
             stage.channel("fg").stats.record(int(4 * MiB))  # burst crosses T
             deadline = t0 + interval * 20 + 1.0
-            while drl.rate == baseline:
+
+            def reacted() -> bool:
+                return _scrape_fired(exporter.url) if scrape else drl.rate != baseline
+
+            while not reacted():
                 if time.monotonic() > deadline:
                     raise RuntimeError("trigger never fired — policy loop broken")
                 time.sleep(interval / 100)
             latencies.append(time.monotonic() - t0)
         finally:
-            cp.stop()
+            cp.close()  # stop + release the trial's registry names
+            if exporter is not None:
+                exporter.stop()
     latencies.sort()
     n = len(latencies)
     return {
@@ -99,6 +137,12 @@ def measure_reaction(
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI mode: validate example policies + quick reaction check")
+    ap.add_argument(
+        "--scrape",
+        action="store_true",
+        help="also measure reaction latency by scraping the Prometheus exporter "
+        "endpoint over HTTP and compare against the in-process number",
+    )
     ap.add_argument("--trials", type=int, default=0, help="default: 5 smoke / 30 full")
     ap.add_argument("--interval", type=float, default=0.05, help="control-loop interval (s)")
     ap.add_argument("--policy-dir", default=os.path.join(os.path.dirname(__file__), "..", "examples", "policies"))
@@ -122,14 +166,31 @@ def main() -> int:
         f"interval={args.interval*1e3:.0f}ms trials={r['trials']} "
         f"{'UNDER' if ok else 'OVER'}-one-interval"
     )
+    scraped = None
+    if args.scrape:
+        scraped = measure_reaction(trials, args.interval, scrape=True)
+        delta_ms = (scraped["mean_s"] - r["mean_s"]) * 1e3
+        print(
+            f"policy_reaction_scraped_mean,{scraped['mean_s']*1e3:.2f}ms,"
+            f"p50={scraped['p50_s']*1e3:.2f}ms max={scraped['max_s']*1e3:.2f}ms "
+            f"delta_vs_inprocess={delta_ms:+.2f}ms"
+        )
     if args.json:
+        out = {"benchmark": "bench_policy_reaction", **r, "under_one_interval": ok}
+        if scraped is not None:
+            out["scraped"] = scraped
         with open(args.json, "w") as f:
-            json.dump({"benchmark": "bench_policy_reaction", **r, "under_one_interval": ok}, f, indent=2)
+            json.dump(out, f, indent=2)
         print(f"wrote {args.json}")
     # a mean beyond 2x the loop interval means the trigger path itself is
     # broken (the expected value is ~interval/2); fail loudly
     if r["mean_s"] > 2 * args.interval:
         print("reaction latency beyond 2x loop interval", file=sys.stderr)
+        return 1
+    # the exporter view must reproduce the in-process number within noise:
+    # one loop interval of slack absorbs scrape-phase misalignment
+    if scraped is not None and abs(scraped["mean_s"] - r["mean_s"]) > args.interval:
+        print("scraped reaction latency diverges from in-process by > 1 interval", file=sys.stderr)
         return 1
     return 0
 

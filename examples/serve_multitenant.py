@@ -7,8 +7,13 @@ guaranteeing tenant A 2× tenant B's token rate — comes from the checked-in
 policy file ``examples/policies/serve_multitenant.json``; this example only
 registers the stage and calls ``ControlPlane.install_policy``.
 
-Run: PYTHONPATH=src python examples/serve_multitenant.py
+Run: PYTHONPATH=src python examples/serve_multitenant.py [--export PORT]
+
+With ``--export`` the shared metrics exporter serves stage gauges, policy
+versions and serve-engine summaries on ``http://127.0.0.1:PORT/metrics``
+while the example runs (0 binds an ephemeral port, printed at startup).
 """
+import argparse
 import sys
 import os
 import time
@@ -27,6 +32,11 @@ POLICY_FILE = os.path.join(os.path.dirname(__file__), "policies", "serve_multite
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--export", type=int, default=None, metavar="PORT",
+                    help="serve Prometheus-text metrics on this port (0 = ephemeral)")
+    args = ap.parse_args()
+
     cfg = configs.get_reduced("llama3_2_1b")
     params = init_params(cfg, jax.random.PRNGKey(0))
 
@@ -35,6 +45,9 @@ def main() -> None:
     cp.register_stage(stage)
     name = cp.install_policy(POLICY_FILE)
     print(f"installed policy {name!r}: {cp.list_policies()[0]}")
+    exporter = cp.serve_metrics(port=args.export) if args.export is not None else None
+    if exporter is not None:
+        print(f"metrics exporter listening on {exporter.url}")
     cp.start()
 
     engine = ServeEngine(cfg, params, max_seq=64, stage=stage)
@@ -53,6 +66,8 @@ def main() -> None:
         if snap.cumulative_ops:
             print(f"channel {name}: ops={snap.cumulative_ops} bytes(tokens)={snap.cumulative_bytes}")
     cp.stop()
+    if exporter is not None:
+        exporter.stop()
     print("serve_multitenant OK")
 
 

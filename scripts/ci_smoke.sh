@@ -12,5 +12,8 @@ python -m pytest -x -q
 echo "== loopback bench smoke (enforce vs enforce_batch) =="
 python -m benchmarks.run --smoke
 
-echo "== policy smoke (example policies parse/compile + trigger reaction) =="
-python -m benchmarks.bench_policy_reaction --smoke
+echo "== policy smoke (example policies parse/compile + trigger reaction, exporter-scraped) =="
+python -m benchmarks.bench_policy_reaction --smoke --scrape
+
+echo "== observability smoke (exporter endpoint: policy version + p99 gauges) =="
+python scripts/scrape_smoke.py

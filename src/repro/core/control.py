@@ -225,9 +225,13 @@ class ControlPlane:
         algorithm: Optional[ControlAlgorithm] = None,
         clock: Clock = DEFAULT_CLOCK,
         loop_interval: Optional[float] = None,
+        registry=None,
     ) -> None:
         self.algorithm = algorithm
         self._clock = clock
+        #: metric registry the policy runtime publishes into; None → the
+        #: process-wide shared registry (repro.telemetry.get_registry)
+        self._registry = registry
         #: explicit plane-level tick cadence; None defers to the algorithms'
         #: own intervals. The loop *ticks* (collect + triggers) at the fastest
         #: requested cadence; each algorithm *steps* at its own loop_interval
@@ -264,10 +268,14 @@ class ControlPlane:
 
             with self._policy_lock:
                 if self._policy_runtime is None:
-                    self._policy_runtime = PolicyRuntime()
+                    self._policy_runtime = PolicyRuntime(
+                        registry=self._registry, clock=self._clock
+                    )
         return self._policy_runtime
 
-    def install_policy(self, source, stage: Optional[str] = None) -> str:
+    def install_policy(
+        self, source, stage: Optional[str] = None, replace: bool = False
+    ) -> str:
         """Parse, compile and install a policy; returns its name.
 
         ``source`` is anything :func:`repro.policy.load_policy` accepts — a
@@ -275,45 +283,146 @@ class ControlPlane:
         Compilation validates against live ``stage_info()`` from every
         registered handle, so a policy naming unknown stages/channels/objects
         fails here, before any rule is applied.
+
+        With ``replace=True`` an already-installed policy of the same name is
+        updated **atomically**: the new version is compiled, diffed against
+        the installed one, and the delta applied as a single swap under the
+        policy lock — entities in both versions are retuned in place
+        (``obj_config`` / object-slot swap), never removed and recreated, so
+        there is no instant at which a surviving flow is unenforced. The
+        policy's version (monotonic per control plane) bumps and is surfaced
+        in :meth:`list_policies` and as the exported
+        ``paio_policy_version`` metric. Semantics are identical for embedded
+        stages and stages reached over the UDS transport — the delta ships
+        through the same StageHandle interface as everything else.
         """
-        from repro.policy import compile_policy, load_policy
+        from repro.policy import compile_policy, infos_without_policy, load_policy
 
         policy = load_policy(source)
+        runtime = self.policy_runtime
         # fast-fail duplicate check (friendly error before compile touches the
         # channel layout); the authoritative check is under the lock below
-        if self.policy_runtime.get(policy.name) is not None:
-            raise ValueError(f"policy {policy.name!r} already installed")
+        if not replace and runtime.get(policy.name) is not None:
+            raise ValueError(
+                f"policy {policy.name!r} already installed (use replace=True to update atomically)"
+            )
         infos = {name: h.stage_info() for name, h in self._handles.items()}
+        current = runtime.get(policy.name) if replace else None
+        if current is not None:
+            # compile against the stages as they'd look without the old
+            # version: the new one re-claims (and takes ownership of) the
+            # entities the old version created
+            infos = infos_without_policy(infos, current)
         compiled = compile_policy(policy, infos, default_stage=stage)
-        runtime = self.policy_runtime
         with self._policy_lock:
-            # authoritative duplicate check: under the lock, before any rule
-            # lands, so concurrent installs cannot interleave half-applies
-            if runtime.get(policy.name) is not None:
-                raise ValueError(f"policy {policy.name!r} already installed")
-            try:
-                for stage_name, rules in compiled.install.items():
-                    handle = self._handles[stage_name]
-                    for rule in rules:
+            current = runtime.get(policy.name)
+            if current is not None and not replace:
+                raise ValueError(
+                    f"policy {policy.name!r} already installed (use replace=True to update atomically)"
+                )
+            if current is None:
+                self._install_fresh(runtime, compiled)
+            else:
+                self._replace_installed(runtime, current, compiled)
+        if compiled.algorithm is not None:
+            compiled.algorithm.setup(self._handles)
+        return policy.name
+
+    def _install_fresh(self, runtime, compiled) -> None:
+        """First-time install: apply the full install program, rolling back
+        on failure. Callers hold ``_policy_lock``."""
+        try:
+            for stage_name, rules in compiled.install.items():
+                handle = self._handles[stage_name]
+                for rule in rules:
+                    self._apply_rule(handle, rule)
+        except Exception as install_exc:
+            # roll back the partial install: teardown rules are safe to
+            # apply to whatever subset actually landed (remove ops on
+            # things never created are no-ops). A failing undo must not
+            # mask the install error — it is chained as __context__ and the
+            # remaining undo rules still run, so ``list_policies`` (which
+            # never saw this policy) stays consistent with the stages.
+            undo_error: Optional[Exception] = None
+            for stage_name, rules in compiled.teardown.items():
+                handle = self._handles.get(stage_name)
+                if handle is None:
+                    continue
+                for rule in rules:
+                    try:
                         self._apply_rule(handle, rule)
-            except Exception:
-                # roll back the partial install: teardown rules are safe to
-                # apply to whatever subset actually landed (remove ops on
-                # things never created are no-ops)
-                for stage_name, rules in compiled.teardown.items():
+                    except Exception as exc:  # noqa: BLE001 — best-effort undo
+                        if undo_error is None:
+                            undo_error = exc
+            if undo_error is not None:
+                install_exc.__context__ = undo_error
+            raise
+        runtime.install(compiled)
+
+    def _replace_installed(self, runtime, current, compiled) -> None:
+        """Atomic in-place update: release trigger-held state, apply the
+        install-set delta, and only THEN swap the runtime entry (version
+        bump, old triggers out / new triggers in armed). Callers hold
+        ``_policy_lock``.
+
+        Rules-before-swap mirrors the fresh-install ordering: the new
+        version's triggers cannot arm (and fire from the loop thread) before
+        the entities their rules target exist. It also makes failure cheap:
+        a mid-delta error undoes the applied prefix in reverse and re-raises
+        with any undo failure chained as ``__context__`` — the runtime was
+        never touched, so ``list_policies`` still shows the old version at
+        its original version number, and still-fired old triggers still own
+        the clamps the rollback re-applied.
+        """
+        from repro.policy import diff_policies
+
+        delta = diff_policies(current, compiled)
+        fired = runtime.trigger_engine.fired_for(compiled.name)
+        applied: List = []
+        try:
+            # fired old triggers first release what they pushed (exactly as
+            # remove_policy would), so trigger-held enforcement state cannot
+            # leak into the new version — whose triggers start armed — and a
+            # release can never overwrite a rate the delta sets next. Undo of
+            # a release is the trigger's fire rules: a failed replace must
+            # put the protective clamp back, not leave it lifted. Re-clamp
+            # undos are registered BEFORE the release applies, so a failure
+            # mid-release still rolls back to the clamped state.
+            for t in fired:
+                for stage_name, rules in t.fire_rules.items():
+                    for rule in rules:
+                        applied.append((stage_name, rule))
+                for stage_name, rules in t.release_rules.items():
                     handle = self._handles.get(stage_name)
                     if handle is None:
                         continue
                     for rule in rules:
-                        try:
-                            self._apply_rule(handle, rule)
-                        except Exception:  # noqa: BLE001 — best-effort undo
-                            break
-                raise
-            runtime.install(compiled)
-        if compiled.algorithm is not None:
-            compiled.algorithm.setup(self._handles)
-        return policy.name
+                        self._apply_rule(handle, rule)
+            for stage_name, rule, undo in delta.ops:
+                handle = self._handles.get(stage_name)
+                if handle is None:
+                    continue
+                self._apply_rule(handle, rule)
+                applied.append((stage_name, undo))
+        except Exception as replace_exc:
+            undo_error: Optional[Exception] = None
+            for stage_name, undo in reversed(applied):
+                handle = self._handles.get(stage_name)
+                if handle is None:
+                    continue
+                undo_rules = undo if isinstance(undo, (list, tuple)) else (undo,)
+                for u in undo_rules:
+                    if u is None:
+                        continue
+                    try:
+                        self._apply_rule(handle, u)
+                    except Exception as exc:  # noqa: BLE001 — best-effort undo
+                        if undo_error is None:
+                            undo_error = exc
+            if undo_error is not None:
+                replace_exc.__context__ = undo_error
+            raise
+        runtime.replace(compiled)
 
     def remove_policy(self, name: str) -> None:
         """Uninstall a policy: its triggers stop evaluating, its objective
@@ -337,9 +446,23 @@ class ControlPlane:
                             break
 
     def list_policies(self) -> List[Dict[str, Any]]:
+        """Installed-policy summaries, including each policy's monotonic
+        ``version`` (bumped by every install or atomic replace) and live
+        trigger states — identical over both transports."""
         if self._policy_runtime is None:
             return []
         return self._policy_runtime.list()
+
+    # -- observability ------------------------------------------------------
+    def serve_metrics(self, port: int = 0, host: str = "127.0.0.1"):
+        """Start a Prometheus-text exporter over this plane's metric registry
+        (by default the process-wide shared one — stage/channel gauges,
+        policy versions, trigger states, serve-engine counters). Returns the
+        started :class:`~repro.telemetry.exporter.MetricsExporter`; read the
+        bound port off ``.port`` (``port=0`` binds an ephemeral one)."""
+        from repro.telemetry.exporter import MetricsExporter
+
+        return MetricsExporter(registry=self.policy_runtime.registry, host=host, port=port).start()
 
     # -- single iteration (usable synchronously from tests/benchmarks) -----
     def _algorithms(self) -> List[ControlAlgorithm]:
@@ -361,7 +484,9 @@ class ControlPlane:
     ) -> Optional[Dict[str, StageStats]]:
         """Cadence gating for the background loop: each algorithm steps at its
         own ``loop_interval`` even when the loop ticks faster (the tick rate
-        is the min across algorithms + triggers). Skipped ticks are not lost —
+        is the min across algorithms + triggers). ``now`` is the plane
+        clock's time — monotonic by default, so a wall-clock step can neither
+        starve nor double-step a gated algorithm. Skipped ticks are not lost —
         their windows accumulate, so a slow algorithm sees one combined window
         spanning its whole interval, not just the last tick's sliver. Returns
         the stats to step with, or None when this tick is skipped. Ungated
@@ -414,13 +539,21 @@ class ControlPlane:
                     applied.append(rule)
                 merged.setdefault(stage_name, []).extend(applied)
         if self._policy_runtime is not None:
-            for event in self._policy_runtime.on_collect(self._clock.now(), stats):
-                for stage_name, stage_rules in event.rules.items():
-                    handle = self._handles.get(stage_name)
-                    if handle is None:
-                        continue
-                    for rule in stage_rules:
-                        self._apply_rule(handle, rule)
+            # trigger evaluation + rule application run under the policy
+            # lock: a concurrent install_policy(replace=True) must not
+            # interleave with an old trigger firing/releasing, or its rules
+            # could land AFTER the delta and override the new version
+            with self._policy_lock:
+                for event in self._policy_runtime.on_collect(self._clock.now(), stats):
+                    for stage_name, stage_rules in event.rules.items():
+                        handle = self._handles.get(stage_name)
+                        if handle is None:
+                            continue
+                        for rule in stage_rules:
+                            self._apply_rule(handle, rule)
+                # gauges publish only after the events' rules landed: a
+                # scraped paio_trigger_fired 1 means enforced, not just latched
+                self._policy_runtime.publish_trigger_states()
         self.iterations += 1
         return merged
 
@@ -459,3 +592,12 @@ class ControlPlane:
         if self._thread is not None:
             self._thread.join(timeout=5.0)
             self._thread = None
+
+    def close(self) -> None:
+        """Tear the plane down for good: stop the loop and release every
+        name it published into the (possibly shared, process-wide) metric
+        registry — a discarded plane must not leave its stage gauges, policy
+        versions and trigger states on the exporter forever."""
+        self.stop()
+        if self._policy_runtime is not None:
+            self._policy_runtime.close()

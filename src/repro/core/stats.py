@@ -7,14 +7,26 @@ loops (Algorithms 1–2) rely on.
 
 Counters are updated on the stage hot path, so the fast path is two integer
 adds under a lock that is never held across I/O.
+
+All window arithmetic runs on the injected :class:`Clock` (monotonic by
+default — ``time.monotonic_ns``): a wall-clock step (NTP, suspend/resume)
+cannot stretch or invert a collect window. ``time.time()`` is reserved for
+user-facing timestamps and appears nowhere in interval math.
 """
 from __future__ import annotations
 
 import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Deque, Dict
+
+from repro.telemetry.metrics import quantile as _quantile
 
 from .clock import Clock, DEFAULT_CLOCK
+
+#: per-op wait observations retained for percentile telemetry (sliding over
+#: the most recent ops, independent of collect windows)
+WAIT_SAMPLE_WINDOW = 512
 
 
 @dataclass
@@ -37,6 +49,12 @@ class StatsSnapshot:
     #: total scheduling delay imposed by enforcement objects over the window;
     #: the policy trigger engine derives per-op wait (a latency proxy) from it
     wait_seconds: float = 0.0
+    #: per-op imposed-wait percentiles (ms) over the channel's most recent
+    #: ops (a sliding sample window, not the collect window); batch-enforced
+    #: requests contribute their per-op mean as one observation
+    wait_p50_ms: float = 0.0
+    wait_p95_ms: float = 0.0
+    wait_p99_ms: float = 0.0
 
     @property
     def mean_wait_ms(self) -> float:
@@ -47,7 +65,7 @@ class StatsSnapshot:
 class ChannelStats:
     __slots__ = (
         "_lock", "_clock", "_ops", "_bytes", "_cum_ops", "_cum_bytes", "_window_start", "_inflight",
-        "_wait", "name"
+        "_wait", "_wait_ms_samples", "_wait_ms_sorted", "_wait_gen", "name"
     )
 
     def __init__(self, name: str, clock: Clock = DEFAULT_CLOCK) -> None:
@@ -60,6 +78,12 @@ class ChannelStats:
         self._cum_bytes = 0
         self._inflight = 0
         self._wait = 0.0
+        self._wait_ms_samples: Deque[float] = deque(maxlen=WAIT_SAMPLE_WINDOW)
+        #: sorted view of the sample window, rebuilt lazily on collect (None
+        #: = dirty); the rebuild sorts OUTSIDE the hot-path lock and only
+        #: caches back if no record landed meanwhile (generation check)
+        self._wait_ms_sorted: "list[float] | None" = []
+        self._wait_gen = 0
         self._window_start = clock.now()
 
     def begin_op(self) -> None:
@@ -75,6 +99,9 @@ class ChannelStats:
         with self._lock:
             self._ops += 1
             self._bytes += size
+            self._wait_ms_samples.append(wait * 1e3)
+            self._wait_ms_sorted = None
+            self._wait_gen += 1
             if wait:
                 self._wait += wait
             if self._inflight > 0:
@@ -88,6 +115,12 @@ class ChannelStats:
         with self._lock:
             self._ops += ops
             self._bytes += nbytes
+            # one percentile observation per batch (the per-op mean): keeps
+            # the hot path O(1) in batch size; document as approximate
+            if ops:
+                self._wait_ms_samples.append((wait / ops) * 1e3)
+                self._wait_ms_sorted = None
+                self._wait_gen += 1
             if wait:
                 self._wait += wait
             if self._inflight > 0:
@@ -97,25 +130,40 @@ class ChannelStats:
         now = self._clock.now()
         with self._lock:
             window = max(now - self._window_start, 1e-9)
-            snap = StatsSnapshot(
-                channel=self.name,
-                ops=self._ops,
-                bytes=self._bytes,
-                window_seconds=window,
-                throughput=self._bytes / window,
-                iops=self._ops / window,
-                cumulative_ops=self._cum_ops + self._ops,
-                cumulative_bytes=self._cum_bytes + self._bytes,
-                inflight=self._inflight,
-                wait_seconds=self._wait,
-            )
-            self._cum_ops += self._ops
-            self._cum_bytes += self._bytes
+            waits = self._wait_ms_sorted
+            gen = self._wait_gen
+            raw = list(self._wait_ms_samples) if waits is None else None
+            ops, nbytes, wait = self._ops, self._bytes, self._wait
+            cum_ops, cum_bytes = self._cum_ops + ops, self._cum_bytes + nbytes
+            inflight = self._inflight
+            self._cum_ops, self._cum_bytes = cum_ops, cum_bytes
             self._ops = 0
             self._bytes = 0
             self._wait = 0.0
             self._window_start = now
-        return snap
+        if raw is not None:
+            # the O(n log n) sort runs OUTSIDE the hot-path lock; cache the
+            # sorted view only if no record landed while we sorted
+            raw.sort()
+            waits = raw
+            with self._lock:
+                if self._wait_gen == gen:
+                    self._wait_ms_sorted = raw
+        return StatsSnapshot(
+            channel=self.name,
+            ops=ops,
+            bytes=nbytes,
+            window_seconds=window,
+            throughput=nbytes / window,
+            iops=ops / window,
+            cumulative_ops=cum_ops,
+            cumulative_bytes=cum_bytes,
+            inflight=inflight,
+            wait_seconds=wait,
+            wait_p50_ms=_quantile(waits, 0.5),
+            wait_p95_ms=_quantile(waits, 0.95),
+            wait_p99_ms=_quantile(waits, 0.99),
+        )
 
 
 def merge_snapshots(a: StatsSnapshot, b: StatsSnapshot) -> StatsSnapshot:
@@ -140,6 +188,11 @@ def merge_snapshots(a: StatsSnapshot, b: StatsSnapshot) -> StatsSnapshot:
         cumulative_bytes=b.cumulative_bytes,
         inflight=b.inflight,
         wait_seconds=a.wait_seconds + b.wait_seconds,
+        # percentiles slide over recent ops and cannot be merged exactly;
+        # the later snapshot already covers the combined window's tail
+        wait_p50_ms=b.wait_p50_ms,
+        wait_p95_ms=b.wait_p95_ms,
+        wait_p99_ms=b.wait_p99_ms,
     )
 
 

@@ -247,12 +247,12 @@ def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str = "experiments/
     }
 
     # 1) the real scanned program: proves sharding + memory fit
-    t0 = time.time()
+    t0 = time.monotonic()
     lowered = _lower_cell(cfg, cell, mesh, rules, microbatches)
-    result["lower_s"] = round(time.time() - t0, 1)
-    t1 = time.time()
+    result["lower_s"] = round(time.monotonic() - t0, 1)
+    t1 = time.monotonic()
     compiled = lowered.compile()
-    result["compile_s"] = round(time.time() - t1, 1)
+    result["compile_s"] = round(time.monotonic() - t1, 1)
     mem = compiled.memory_analysis()
     mem_stats = {
         k: int(getattr(mem, k, 0) or 0)
@@ -265,9 +265,9 @@ def run_cell(arch: str, shape: str, mesh_name: str, out_dir: str = "experiments/
     result["collective_counts_scanned_hlo"] = raw_cost["_coll_counts"]
 
     # 2) probe-corrected cost totals
-    t2 = time.time()
+    t2 = time.monotonic()
     total, detail = _probe_costs(cfg, cell, mesh, rules, microbatches)
-    result["probe_s"] = round(time.time() - t2, 1)
+    result["probe_s"] = round(time.monotonic() - t2, 1)
     result["cost"] = total
     result["cost_detail"] = detail
 

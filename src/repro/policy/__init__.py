@@ -17,7 +17,10 @@ from .compile import (
     BUILTIN_METRICS,
     DEMOTE_FACTOR,
     CompiledPolicy,
+    PolicyDelta,
     compile_policy,
+    diff_policies,
+    infos_without_policy,
 )
 from .dsl import (
     Action,
@@ -55,6 +58,7 @@ __all__ = [
     "Objective",
     "ObjectSpec",
     "Policy",
+    "PolicyDelta",
     "PolicyError",
     "PolicyRuntime",
     "SlidingWindow",
@@ -62,6 +66,8 @@ __all__ = [
     "TriggerEvent",
     "TriggerSpec",
     "compile_policy",
+    "diff_policies",
+    "infos_without_policy",
     "load_policy",
     "load_policy_file",
     "parse_duration",

@@ -432,3 +432,250 @@ def _lower_objective(policy: Policy, bindings: Dict[str, _FlowBinding]):
         )
 
     raise PolicyError(f"{what}: unknown objective kind (known: fairshare, tail_latency)")
+
+
+# --------------------------------------------------------------------------- #
+# atomic replace: stage-info pruning + install-set diffing                     #
+# --------------------------------------------------------------------------- #
+#: per-kind params that ``obj_config`` applies faithfully — a same-kind object
+#: update whose changed params all fall in this set lowers to an in-place
+#: EnforcementRule retune. Anything else (unknown kinds, non-configurable
+#: params like a DRL ``min_rate``, merge-only params like a priority gate's
+#: ``priority_of``, or a param *added or removed* between versions — neither
+#: direction is expressible through obj_config) falls back to an
+#: atomic object-slot swap: ``create_object`` replaces the slot in one store,
+#: so the data path sees old-then-new with no gap — at the cost of internal
+#: state (e.g. accumulated token debt) restarting fresh.
+RETUNE_KEYS: Dict[str, frozenset] = {
+    "drl": frozenset({"rate", "refill_period"}),
+    "noop": frozenset({"copy_content"}),
+    "priority_gate": frozenset({"low_hold"}),
+}
+
+def _retunable(kind: Optional[str], old_params: Mapping[str, Any], new_params: Mapping[str, Any]) -> bool:
+    if set(old_params) != set(new_params):
+        # a param removed (or ADDED — its rollback would need to unset it,
+        # which obj_config cannot express) forces the slot-swap path
+        return False
+    changed = {k for k in old_params if old_params[k] != new_params[k]}
+    return changed <= RETUNE_KEYS.get(kind or "", frozenset())
+
+
+def _freeze_match(match: Mapping[str, Any]) -> Tuple[Tuple[str, Any], ...]:
+    return tuple(sorted(match.items()))
+
+
+def _install_key(rule: Any) -> Optional[Tuple]:
+    """Identity of the data-plane entity an install rule creates."""
+    if isinstance(rule, HousekeepingRule):
+        if rule.op == "create_channel":
+            return ("chan", rule.channel)
+        if rule.op == "create_object":
+            return ("obj", rule.channel, rule.object_id)
+        return None
+    if isinstance(rule, DifferentiationRule):
+        return ("route", rule.channel, _freeze_match(rule.match), rule.object_id)
+    return None
+
+
+def _teardown_key(rule: Any) -> Optional[Tuple]:
+    """Identity of the entity a teardown rule destroys (mirror of
+    :func:`_install_key`, so removals can be matched against carried-over
+    installs)."""
+    if isinstance(rule, HousekeepingRule):
+        if rule.op == "remove_channel":
+            return ("chan", rule.channel)
+        if rule.op == "remove_object":
+            return ("obj", rule.channel, rule.object_id)
+        if rule.op == "remove_route":
+            return ("route", rule.channel, _freeze_match(rule.params.get("match") or {}), rule.object_id)
+    return None
+
+
+def _undo_for_install(rule: Any) -> Any:
+    """The inverse of one install rule (rollback of a half-applied delta)."""
+    if isinstance(rule, HousekeepingRule):
+        if rule.op == "create_channel":
+            return HousekeepingRule(op="remove_channel", channel=rule.channel)
+        if rule.op == "create_object":
+            return HousekeepingRule(op="remove_object", channel=rule.channel, object_id=rule.object_id)
+    if isinstance(rule, DifferentiationRule):
+        return HousekeepingRule(
+            op="remove_route", channel=rule.channel, object_id=rule.object_id,
+            params={"match": dict(rule.match)},
+        )
+    return None
+
+
+def infos_without_policy(
+    infos: Mapping[str, Mapping[str, Any]], owned: CompiledPolicy
+) -> Dict[str, Dict[str, Any]]:
+    """A copy of live ``stage_info()`` maps with every channel/object created
+    by ``owned`` removed — what the stages would look like had the policy
+    never been installed. Compiling a *replacement* policy against this view
+    (instead of the live one) means (a) the new version re-claims entities
+    the old version owns without tripping the refusing-to-replace check, and
+    (b) ownership transfers: the new compile emits create/teardown rules for
+    them, which the delta then reconciles against what already exists.
+    """
+    # keys are stage-qualified: the old policy owning channel "io" on stage
+    # s1 must not strip a same-named (foreign) channel from stage s2's view
+    owned_keys = {
+        (stage, k)
+        for stage, rules in owned.install.items()
+        for r in rules
+        if (k := _install_key(r)) is not None
+    }
+    out: Dict[str, Dict[str, Any]] = {}
+    for stage, info in infos.items():
+        channels = {}
+        for ch_name, ch in (info.get("channels") or {}).items():
+            if (stage, ("chan", ch_name)) in owned_keys:
+                continue
+            objects = {
+                oid: o
+                for oid, o in (ch.get("objects") or {}).items()
+                if (stage, ("obj", ch_name, oid)) not in owned_keys
+            }
+            channels[ch_name] = {**ch, "objects": objects}
+        out[stage] = {**info, "channels": channels}
+    return out
+
+
+@dataclass
+class PolicyDelta:
+    """The minimal rule program turning installed policy state ``old`` into
+    ``new`` with zero enforcement gap. ``ops`` is an ordered list of
+    ``(stage, rule, undo)``: adds and in-place updates first (an
+    unchanged entity is never touched; a same-kind object update lowers to
+    an ``EnforcementRule`` so the live object is retuned, not recreated),
+    then removals of entities only the old version owned. ``undo``
+    (None, one rule, or a list of rules — a removed channel's undo must
+    re-create the channel AND its objects) reverts that op if a later one
+    fails."""
+
+    ops: List[Tuple[str, Any, Optional[Any]]] = field(default_factory=list)
+
+
+def diff_policies(old: CompiledPolicy, new: CompiledPolicy) -> PolicyDelta:
+    """Compute the delta applied by ``install_policy(..., replace=True)``.
+
+    Contract (the zero-gap property): at every instant during application,
+    every entity present in *either* version is live and configured per the
+    old or the new policy — entities shared by both versions are updated in
+    place (``obj_config`` / atomic object-slot swap), never removed and
+    recreated.
+    """
+    delta = PolicyDelta()
+    old_by_stage: Dict[str, Dict[Tuple, Any]] = {}
+    # stage routing tables are keyed by (mask, classifier-token) and are
+    # channel-BLIND: a route's identity for diffing purposes is its match (+
+    # object_id), not its target channel. A flow re-homed to a new channel is
+    # an overwrite of the same entry, and the old remove_route must be
+    # suppressed or it would delete the entry the new version just installed.
+    old_routes_by_stage: Dict[str, Dict[Tuple, Any]] = {}
+    for stage, rules in old.install.items():
+        table = old_by_stage.setdefault(stage, {})
+        routes = old_routes_by_stage.setdefault(stage, {})
+        for r in rules:
+            k = _install_key(r)
+            if k is not None:
+                table[k] = r
+                if k[0] == "route":
+                    routes[(k[2], k[3])] = r
+
+    new_keys_by_stage: Dict[str, set] = {}
+    new_routes_by_stage: Dict[str, set] = {}
+    for stage, rules in new.install.items():
+        keys = new_keys_by_stage[stage] = {
+            k for r in rules if (k := _install_key(r)) is not None
+        }
+        new_routes_by_stage[stage] = {(k[2], k[3]) for k in keys if k[0] == "route"}
+        old_by_key = old_by_stage.get(stage, {})
+        old_routes = old_routes_by_stage.get(stage, {})
+        for rule in rules:
+            key = _install_key(rule)
+            old_rule = old_by_key.get(key) if key is not None else None
+            if old_rule == rule:
+                continue  # identical entity: never touched, zero gap
+            if key is not None and key[0] == "route" and old_rule is None:
+                prior = old_routes.get((key[2], key[3]))
+                if prior is not None:
+                    # re-homed flow: installing the new route overwrites the
+                    # old entry in place (no gap); undo re-points it back to
+                    # the old channel rather than deleting it
+                    delta.ops.append((stage, rule, prior))
+                    continue
+            if old_rule is not None and key[0] == "obj":
+                if old_rule.object_kind == rule.object_kind and _retunable(
+                    rule.object_kind, old_rule.params, rule.params
+                ):
+                    # same object, config-applicable param change: retune the
+                    # live object in place (state continuity preserved)
+                    delta.ops.append(
+                        (
+                            stage,
+                            EnforcementRule(
+                                channel=rule.channel, object_id=rule.object_id, state=dict(rule.params)
+                            ),
+                            EnforcementRule(
+                                channel=rule.channel,
+                                object_id=rule.object_id,
+                                state=dict(old_rule.params),
+                            ),
+                        )
+                    )
+                    continue
+                # kind change, or params obj_config cannot apply faithfully:
+                # create_object atomically swaps the channel's object slot
+                # (the data path sees old until the swap, then new — no gap)
+                delta.ops.append((stage, rule, old_rule))
+                continue
+            delta.ops.append((stage, rule, _undo_for_install(rule)))
+
+    # removals: entities the old version created that the new one does not
+    # claim — expressed through the old teardown program so ordering (routes
+    # before objects before channels) is preserved. Applied last, so a flow
+    # being dropped stays governed by the old rules until everything new is
+    # in place.
+    for stage, rules in old.teardown.items():
+        new_keys = new_keys_by_stage.get(stage, set())
+        new_routes = new_routes_by_stage.get(stage, set())
+        old_by_key = old_by_stage.get(stage, {})
+        covered: set = set()
+        for td in rules:
+            key = _teardown_key(td)
+            if key is None or key in new_keys:
+                continue
+            if key[0] == "route" and (key[2], key[3]) in new_routes:
+                # the match is claimed by the new version (possibly under a
+                # different channel): remove_route is channel-blind and would
+                # delete the entry the delta just installed
+                continue
+            covered.add(key)
+            undo: Any = old_by_key.get(key)
+            if key[0] == "chan":
+                # undoing a channel removal must restore its objects too —
+                # owned channels carry no per-object teardown (the channel
+                # removal subsumes them), so nothing else re-creates them
+                undo = [undo] + [
+                    r for k, r in old_by_key.items() if k[0] == "obj" and k[1] == key[1]
+                ]
+            delta.ops.append((stage, td, undo))
+        # objects dropped from a SURVIVING channel have no teardown rule to
+        # reuse (owned channels' removal subsumes their objects, but here the
+        # channel lives on): synthesize the remove_object, or the stale
+        # object would keep enforcing forever
+        for key, old_rule in old_by_key.items():
+            if key[0] != "obj" or key in new_keys or key in covered:
+                continue
+            if ("chan", key[1]) in covered:
+                continue  # whole channel is going away; object dies with it
+            delta.ops.append(
+                (
+                    stage,
+                    HousekeepingRule(op="remove_object", channel=key[1], object_id=key[2]),
+                    old_rule,
+                )
+            )
+    return delta

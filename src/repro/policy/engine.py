@@ -2,78 +2,214 @@
 
 The runtime is owned by the control plane and driven from its feedback loop:
 every ``collect`` tick the runtime (1) converts stage statistics into metric
-gauges in the :class:`~repro.telemetry.metrics.MetricRegistry` (under
-``<stage>.<channel>.<field>`` and ``<stage>.<field>`` names), (2) takes one
-coherent registry sample — picking up any custom metrics other subsystems
-registered — and (3) feeds the trigger engine, returning the wire rules for
-whatever fired or released. The control plane ships those rules through its
-stage handles, so triggers behave identically for embedded and UDS stages.
+gauges in the shared :class:`~repro.telemetry.metrics.MetricRegistry` (under
+``<stage>.<channel>.<field>`` and ``<stage>.<field>`` names, with export
+descriptors so the exporter renders them as ``paio_channel_*`` /
+``paio_stage_*`` families), (2) takes one coherent registry sample — picking
+up any custom metrics other subsystems registered — and (3) feeds the trigger
+engine, returning the wire rules for whatever fired or released. The control
+plane ships those rules through its stage handles, so triggers behave
+identically for embedded and UDS stages.
+
+Installed policies are **versioned**: every install or atomic replace bumps a
+runtime-wide monotonic version counter, surfaced in ``list()`` and exported
+as ``paio_policy_version{policy=...}``; trigger fired/armed state exports as
+``paio_trigger_fired{policy=...,trigger=...}`` so protective actions are
+observable from outside the process.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, Dict, List, Mapping, Optional
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.stats import StageStats
-from repro.telemetry.metrics import MetricRegistry
+from repro.telemetry.metrics import MetricRegistry, get_registry
 
 from .compile import CompiledPolicy
 from .triggers import TriggerEngine, TriggerEvent
 
+#: per-channel StatsSnapshot fields published as gauges
+CHANNEL_FIELDS = (
+    "throughput", "iops", "wait_ms", "inflight", "ops", "bytes",
+    "wait_p50_ms", "wait_p95_ms", "wait_p99_ms",
+)
 
-def stats_to_samples(stats: Mapping[str, StageStats]) -> Dict[str, float]:
+
+class _StatKeys:
+    """Pre-built gauge key strings for one (stage, channel) — the per-tick
+    f-string churn at O(stages × channels × fields) was the allocator hot
+    spot of the 50 ms control loop (ROADMAP PR-2 lever)."""
+
+    __slots__ = CHANNEL_FIELDS
+
+    def __init__(self, prefix: str) -> None:
+        for f in CHANNEL_FIELDS:
+            setattr(self, f, prefix + f)
+
+
+def stats_to_samples(
+    stats: Mapping[str, StageStats],
+    out: Optional[Dict[str, float]] = None,
+    key_cache: Optional[Dict[Tuple[str, Optional[str]], _StatKeys]] = None,
+) -> Dict[str, float]:
     """Flatten per-stage statistics into metric gauges.
 
-    Per channel: ``<stage>.<channel>.{throughput,iops,wait_ms,inflight,ops,bytes}``.
-    Per stage (aggregates): ``<stage>.{throughput,iops,wait_ms,inflight,ops,bytes}``
-    with ``wait_ms`` ops-weighted across channels.
+    Per channel: ``<stage>.<channel>.{throughput,iops,wait_ms,inflight,ops,
+    bytes,wait_p50_ms,wait_p95_ms,wait_p99_ms}``. Per stage (aggregates):
+    the same fields under ``<stage>.<field>`` with ``wait_ms`` ops-weighted
+    and the wait percentiles taken as the max across channels (a conservative
+    tail bound — exact cross-channel percentiles are not mergeable).
+
+    ``out`` and ``key_cache`` let a steady-state caller (the policy runtime's
+    50 ms loop) reuse its sample dict and key strings instead of reallocating
+    one dict plus hundreds of f-strings per tick; both default to fresh
+    objects so one-shot calls behave as before.
     """
-    out: Dict[str, float] = {}
+    out = {} if out is None else out
+    out.clear()
+    cache = {} if key_cache is None else key_cache
     for stage, st in stats.items():
         tot_ops = tot_bytes = 0
         tot_tput = tot_iops = tot_wait = 0.0
         tot_inflight = 0
+        max_p50 = max_p95 = max_p99 = 0.0
         for name, snap in st.per_channel.items():
-            prefix = f"{stage}.{name}."
-            out[prefix + "throughput"] = snap.throughput
-            out[prefix + "iops"] = snap.iops
-            out[prefix + "wait_ms"] = snap.mean_wait_ms
-            out[prefix + "inflight"] = float(snap.inflight)
-            out[prefix + "ops"] = float(snap.ops)
-            out[prefix + "bytes"] = float(snap.bytes)
+            keys = cache.get((stage, name))
+            if keys is None:
+                keys = cache[(stage, name)] = _StatKeys(f"{stage}.{name}.")
+            out[keys.throughput] = snap.throughput
+            out[keys.iops] = snap.iops
+            out[keys.wait_ms] = snap.mean_wait_ms
+            out[keys.inflight] = float(snap.inflight)
+            out[keys.ops] = float(snap.ops)
+            out[keys.bytes] = float(snap.bytes)
+            out[keys.wait_p50_ms] = snap.wait_p50_ms
+            out[keys.wait_p95_ms] = snap.wait_p95_ms
+            out[keys.wait_p99_ms] = snap.wait_p99_ms
             tot_ops += snap.ops
             tot_bytes += snap.bytes
             tot_tput += snap.throughput
             tot_iops += snap.iops
             tot_wait += snap.wait_seconds
             tot_inflight += snap.inflight
-        out[f"{stage}.throughput"] = tot_tput
-        out[f"{stage}.iops"] = tot_iops
-        out[f"{stage}.wait_ms"] = (tot_wait / tot_ops) * 1e3 if tot_ops else 0.0
-        out[f"{stage}.inflight"] = float(tot_inflight)
-        out[f"{stage}.ops"] = float(tot_ops)
-        out[f"{stage}.bytes"] = float(tot_bytes)
+            if snap.wait_p50_ms > max_p50:
+                max_p50 = snap.wait_p50_ms
+            if snap.wait_p95_ms > max_p95:
+                max_p95 = snap.wait_p95_ms
+            if snap.wait_p99_ms > max_p99:
+                max_p99 = snap.wait_p99_ms
+        keys = cache.get((stage, None))
+        if keys is None:
+            keys = cache[(stage, None)] = _StatKeys(f"{stage}.")
+        out[keys.throughput] = tot_tput
+        out[keys.iops] = tot_iops
+        out[keys.wait_ms] = (tot_wait / tot_ops) * 1e3 if tot_ops else 0.0
+        out[keys.inflight] = float(tot_inflight)
+        out[keys.ops] = float(tot_ops)
+        out[keys.bytes] = float(tot_bytes)
+        out[keys.wait_p50_ms] = max_p50
+        out[keys.wait_p95_ms] = max_p95
+        out[keys.wait_p99_ms] = max_p99
     return out
 
 
-class PolicyRuntime:
-    """Installed policies + the trigger engine, one per control plane."""
+def _export_descriptor(entry: Tuple[str, Optional[str]], fld: str):
+    stage, channel = entry
+    if channel is None:
+        return f"paio_stage_{fld}", {"stage": stage}
+    return f"paio_channel_{fld}", {"stage": stage, "channel": channel}
 
-    def __init__(self, registry: Optional[MetricRegistry] = None) -> None:
-        self.registry = registry or MetricRegistry()
-        self.trigger_engine = TriggerEngine()
+
+class PolicyRuntime:
+    """Installed policies + the trigger engine, one per control plane.
+
+    Publishes into the **process-wide** registry by default
+    (:func:`repro.telemetry.get_registry`), so one exporter endpoint covers
+    every control plane and serve engine in the process; pass an explicit
+    ``registry`` for isolation.
+    """
+
+    def __init__(self, registry: Optional[MetricRegistry] = None, clock=None) -> None:
+        self.registry = registry if registry is not None else get_registry()
+        #: the control plane forwards its clock so every time domain agrees:
+        #: observe() ticks, cooldown stamps and restore_fired() all use the
+        #: same (possibly virtual) clock — mixing domains would pin cooldowns
+        self.trigger_engine = TriggerEngine(clock=clock)
         self._policies: Dict[str, CompiledPolicy] = {}
+        self._versions: Dict[str, int] = {}
+        self._version_counter = 0  #: bumps on every install/replace
         self._stats_keys: set = set()  # gauges owned by the last stats tick
+        self._trigger_keys: set = set()  # trigger-state gauges we own
+        #: reused per-tick sample buffer + key-string cache (alloc churn fix)
+        self._samples_buf: Dict[str, float] = {}
+        self._key_cache: Dict[Tuple[str, Optional[str]], _StatKeys] = {}
+        #: (stage, channel) entries whose export descriptors are registered
+        self._described_entries: set = set()
         self._lock = threading.Lock()
 
     # -- lifecycle ---------------------------------------------------------
-    def install(self, compiled: CompiledPolicy) -> None:
+    def _publish_version(self, name: str, version: int) -> None:
+        key = f"policy.{name}.version"
+        self.registry.set_gauge(key, float(version))
+        self.registry.describe(key, "paio_policy_version", {"policy": name})
+        # derived from the registry itself (count of version gauges), so
+        # multiple control planes sharing the process-wide registry cannot
+        # clobber each other with per-plane counts. (Re)registered on every
+        # install — two O(1) dict stores — so another runtime's close()
+        # dropping the shared source can never leave it missing for good
+        registry = self.registry
+        registry.register(
+            "policies.installed",
+            lambda: float(registry.gauge_count("policy.", ".version")),
+        )
+        registry.describe("policies.installed", "paio_policies_installed")
+
+    def install(self, compiled: CompiledPolicy) -> int:
+        """Register ``compiled``; returns its (runtime-monotonic) version."""
         with self._lock:
             if compiled.name in self._policies:
                 raise ValueError(f"policy {compiled.name!r} already installed")
             self._policies[compiled.name] = compiled
+            self._version_counter += 1
+            version = self._versions[compiled.name] = self._version_counter
+            self._publish_version(compiled.name, version)
         for trigger in compiled.triggers:
             self.trigger_engine.add(trigger)
+        return version
+
+    def replace(self, compiled: CompiledPolicy) -> Tuple[CompiledPolicy, List[Any], int]:
+        """Swap the stored policy named ``compiled.name`` in one step — the
+        runtime never passes through a no-policy state. Old triggers leave
+        the engine, new triggers enter armed with empty windows, and the
+        version bumps. The control plane calls this only after the new
+        version's rules are fully applied (it reads fired state up front via
+        ``trigger_engine.fired_for``), so a failed replace never touches the
+        runtime. Returns ``(old, fired_old_triggers, version)``.
+        """
+        with self._lock:
+            old = self._policies.get(compiled.name)
+            if old is None:
+                raise KeyError(f"policy {compiled.name!r} is not installed")
+            self._policies[compiled.name] = compiled
+            self._version_counter += 1
+            version = self._versions[compiled.name] = self._version_counter
+            self._publish_version(compiled.name, version)
+        fired = self.trigger_engine.remove_policy(compiled.name)
+        # old triggers' state gauges go now (a renamed/dropped trigger must
+        # not export paio_trigger_fired forever on a synchronous plane); the
+        # new version's gauges publish on the next collect tick
+        self._prune_trigger_gauges(compiled.name)
+        for trigger in compiled.triggers:
+            self.trigger_engine.add(trigger)
+        return old, fired, version
+
+    def _prune_trigger_gauges(self, policy_name: str) -> None:
+        prefix = f"trigger.{policy_name}/"
+        with self._lock:  # _trigger_keys is shared with the loop thread
+            pruned = {k for k in self._trigger_keys if k.startswith(prefix)}
+            self._trigger_keys -= pruned
+        for key in pruned:
+            self.registry.unregister(key)
 
     def remove(self, name: str):
         """Uninstall ``name``; returns ``(compiled, fired)`` where ``fired``
@@ -83,9 +219,18 @@ class PolicyRuntime:
         outlive the policy."""
         with self._lock:
             compiled = self._policies.pop(name, None)
+            if compiled is not None:
+                self._versions.pop(name, None)
+                # the policies.installed source derives its count from the
+                # remaining policy.*.version gauges — nothing else to update
+                self.registry.unregister(f"policy.{name}.version")
         if compiled is None:
             raise KeyError(f"policy {name!r} is not installed")
         fired = self.trigger_engine.remove_policy(name)
+        # drop the removed policy's trigger-state gauges NOW — a plane driven
+        # synchronously (or with its loop stopped) would otherwise export
+        # paio_trigger_fired 1 forever for a policy that no longer exists
+        self._prune_trigger_gauges(name)
         return compiled, fired
 
     def get(self, name: str) -> Optional[CompiledPolicy]:
@@ -95,10 +240,12 @@ class PolicyRuntime:
     def list(self) -> List[Dict[str, Any]]:
         with self._lock:
             policies = list(self._policies.values())
+            versions = dict(self._versions)
         states = self.trigger_engine.states()
         out = []
         for cp in policies:
             summary = cp.summary()
+            summary["version"] = versions.get(cp.name)
             summary["trigger_states"] = {
                 t.qualified_name: states.get(t.qualified_name, "armed") for t in cp.triggers
             }
@@ -115,11 +262,49 @@ class PolicyRuntime:
         :meth:`TriggerEngine.pinned_targets`."""
         return self.trigger_engine.pinned_targets()
 
+    def close(self) -> None:
+        """Release every registry name this runtime owns (stats gauges,
+        trigger states, policy versions) — for planes publishing into the
+        shared registry that are being torn down for good."""
+        with self._lock:
+            owned = self._stats_keys | self._trigger_keys
+            self._trigger_keys = set()
+        self._stats_keys = set()
+        for key in owned:
+            self.registry.unregister(key)
+        with self._lock:
+            names = list(self._versions)
+        for name in names:
+            self.registry.unregister(f"policy.{name}.version")
+        # the policies.installed source is shared infra across runtimes on
+        # one registry: drop it only when no version gauges remain at all
+        if not any(
+            n.startswith("policy.") and n.endswith(".version") for n in self.registry.names()
+        ):
+            self.registry.unregister("policies.installed")
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._policies)
 
     # -- feedback-loop tick ------------------------------------------------
+    def publish_trigger_states(self) -> None:
+        states = self.trigger_engine.states()
+        with self._lock:  # _trigger_keys is shared with remove/replace paths
+            prev = set(self._trigger_keys)
+            keys = {f"trigger.{qualified}.fired" for qualified in states}
+            self._trigger_keys = keys
+        for qualified, state in states.items():
+            policy, _, trigger = qualified.partition("/")
+            key = f"trigger.{qualified}.fired"
+            self.registry.set_gauge(key, 1.0 if state == "fired" else 0.0)
+            if key not in prev:
+                self.registry.describe(
+                    key, "paio_trigger_fired", {"policy": policy, "trigger": trigger}
+                )
+        for stale in prev - keys:
+            self.registry.unregister(stale)
+
     def on_collect(
         self, now: float, stats: Mapping[str, StageStats]
     ) -> List[TriggerEvent]:
@@ -131,11 +316,34 @@ class PolicyRuntime:
         a stale constant. Returns the trigger transitions; the caller applies
         each event's ``rules`` (stage → wire rules) through its stage handles.
         """
-        gauges = stats_to_samples(stats)
-        for stale in self._stats_keys - set(gauges):
-            self.registry.unregister(stale)
-        self._stats_keys = set(gauges)
-        for key, value in gauges.items():
-            self.registry.set_gauge(key, value)
+        gauges = stats_to_samples(stats, out=self._samples_buf, key_cache=self._key_cache)
+        keys = set(gauges)
+        stale_keys = self._stats_keys - keys
+        if stale_keys:
+            for stale in stale_keys:
+                self.registry.unregister(stale)
+            # evict key-string cache entries for vanished channels too, or a
+            # long-lived plane churning per-tenant channels leaks one
+            # _StatKeys per channel name ever seen
+            live = {(stage, ch) for stage, st in stats.items() for ch in st.per_channel}
+            live.update((stage, None) for stage in stats)
+            for gone in [k for k in self._key_cache if k not in live]:
+                del self._key_cache[gone]
+                self._described_entries.discard(gone)
+        # describe once per (stage, channel): the identity is known at key
+        # creation, so this is O(new channels), not a scan over fresh keys
+        for entry, sk in self._key_cache.items():
+            if entry in self._described_entries:
+                continue
+            for fld in CHANNEL_FIELDS:
+                self.registry.describe(getattr(sk, fld), *_export_descriptor(entry, fld))
+            self._described_entries.add(entry)
+        self._stats_keys = keys
+        self.registry.update_gauges(gauges)
         samples = self.registry.sample()
+        # trigger-state gauges are NOT published here — the control plane
+        # calls publish_trigger_states() after it has applied the returned
+        # events' rules, so a scraped "fired" always means the enforcement
+        # actually landed (and the scraped reaction latency includes rule
+        # application, not just predicate evaluation)
         return self.trigger_engine.observe(now, samples)

@@ -22,6 +22,9 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
+from repro.core.clock import Clock, DEFAULT_CLOCK
+from repro.telemetry.metrics import quantile
+
 
 # --------------------------------------------------------------------------- #
 # sliding windows                                                              #
@@ -74,14 +77,16 @@ class SlidingWindow:
             (t0, v0), (t1, v1) = buf[0], buf[-1]
             return (v1 - v0) / max(t1 - t0, 1e-9)
         if agg in ("p50", "p95", "p99"):
-            q = {"p50": 50.0, "p95": 95.0, "p99": 99.0}[agg]
             values.sort()
-            k = min(int(q / 100.0 * len(values)), len(values) - 1)
-            return values[k]
+            return quantile(values, {"p50": 0.5, "p95": 0.95, "p99": 0.99}[agg])
         raise ValueError(f"unknown aggregation {agg!r}")
 
 
 def compare(op: str, left: float, right: float) -> bool:
+    """DSL comparison semantics, exactly as the operators read: ``>`` is
+    *strictly* greater — an aggregate landing exactly on the threshold does
+    NOT fire a ``>`` trigger (use ``>=`` for fire-at-threshold), mirrored
+    for ``<`` vs ``<=``."""
     if op == ">":
         return left > right
     if op == ">=":
@@ -162,10 +167,19 @@ class _TriggerRuntime:
 
 
 class TriggerEngine:
-    """Evaluates all installed triggers against incoming metric samples."""
+    """Evaluates all installed triggers against incoming metric samples.
 
-    def __init__(self) -> None:
+    All interval math (window eviction, cooldown, hysteresis timing) runs on
+    the ``now`` values fed to :meth:`observe` — the control plane passes its
+    monotonic clock's time, so a wall-clock step (NTP, suspend/resume) can
+    neither evict a live window nor pin a cooldown. When ``observe`` is
+    called without ``now``, the engine's own injectable ``clock`` supplies
+    it (tests inject a fake clock here to prove clock-jump immunity).
+    """
+
+    def __init__(self, clock: Optional[Clock] = None) -> None:
         self._triggers: Dict[str, _TriggerRuntime] = {}
+        self._clock = clock if clock is not None else DEFAULT_CLOCK
         self._lock = threading.Lock()
 
     # -- lifecycle ---------------------------------------------------------
@@ -187,6 +201,17 @@ class TriggerEngine:
     def triggers(self) -> List[CompiledTrigger]:
         with self._lock:
             return [rt.spec for rt in self._triggers.values()]
+
+    def fired_for(self, policy: str) -> List[CompiledTrigger]:
+        """Read-only snapshot of ``policy``'s currently-FIRED triggers
+        (the atomic-replace path releases their state before re-provisioning
+        without yet removing them from the engine)."""
+        with self._lock:
+            return [
+                rt.spec
+                for rt in self._triggers.values()
+                if rt.fired and rt.spec.policy == policy
+            ]
 
     def states(self) -> Dict[str, str]:
         with self._lock:
@@ -218,13 +243,16 @@ class TriggerEngine:
         return pinned
 
     # -- evaluation --------------------------------------------------------
-    def observe(self, now: float, samples: Dict[str, float]) -> List[TriggerEvent]:
+    def observe(self, now: Optional[float], samples: Dict[str, float]) -> List[TriggerEvent]:
         """Feed one tick of metric samples; returns the transitions to enact.
 
-        A trigger whose metric is absent from ``samples`` keeps its window
-        (and state) untouched — a temporarily missing metric must not release
-        a protective rule.
+        ``now`` must come from a monotonic time source (pass None to use the
+        engine's clock). A trigger whose metric is absent from ``samples``
+        keeps its window (and state) untouched — a temporarily missing metric
+        must not release a protective rule.
         """
+        if now is None:
+            now = self._clock.now()
         events: List[TriggerEvent] = []
         with self._lock:
             runtimes = list(self._triggers.values())

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -23,6 +24,7 @@ from repro.core import RequestType, Stage, build_context, propagate_tenant
 from repro.launch.steps import build_decode_step, build_prefill_step
 from repro.models import init_caches
 from repro.models.model import ArchConfig
+from repro.telemetry.metrics import MetricRegistry, get_registry
 
 
 @dataclasses.dataclass
@@ -70,11 +72,17 @@ class ServeEngine:
         max_seq: int = 512,
         stage: Optional[Stage] = None,
         drain_concurrency: int = 4,
+        registry: Optional[MetricRegistry] = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.stage = stage
+        #: serve statistics publish into the shared process-wide registry by
+        #: default — one exporter endpoint covers serving and storage planes;
+        #: pass an explicit registry for isolation
+        self._registry = registry if registry is not None else get_registry()
+        self._described: set = set()
         #: lockstep window of ``drain``: how many queued requests decode (and
         #: hold KV caches) simultaneously. Peak drain memory is roughly
         #: ``drain_concurrency × init_caches(cfg, b, max_seq)`` — size it to
@@ -84,6 +92,33 @@ class ServeEngine:
         self._prefill = jax.jit(build_prefill_step(cfg))
         self._decode = jax.jit(build_decode_step(cfg), donate_argnums=1)
         self._queue: "queue.Queue[_Pending]" = queue.Queue()
+
+    def _describe_once(self, key: str, family: str, labels=None) -> None:
+        # descriptors are immutable per key: describe once, not per decode
+        # step (the registry lock + labels dict per call is avoidable churn)
+        if key not in self._described:
+            self._registry.describe(key, family, labels)
+            self._described.add(key)
+
+    def _publish(self, tenant: Optional[str], n_tokens: int, elapsed_s: float) -> None:
+        """One completed generation's telemetry: per-tenant token counter plus
+        a windowed generation-latency summary (p50/p95/p99 on the exporter).
+        ``elapsed_s`` is the wall time the request experienced end to end —
+        drain() passes its lockstep window's full duration for every request
+        in the window (they all finish when the window does), so the summary
+        means the same thing for queued and direct generations."""
+        tenant = tenant or "default"
+        key = f"serve.{tenant}.tokens"
+        self._registry.inc(key, float(n_tokens))
+        self._describe_once(key, "paio_serve_tokens", {"tenant": tenant})
+        self._registry.observe("serve.generate_ms", elapsed_s * 1e3)
+        self._describe_once("serve.generate_ms", "paio_serve_generate_ms")
+
+    def _publish_step(self, elapsed_s: float) -> None:
+        """One decode step's wall time (drain: the lockstep step across all
+        live requests; generate: the single request's step)."""
+        self._registry.observe("serve.decode_step_ms", elapsed_s * 1e3)
+        self._describe_once("serve.decode_step_ms", "paio_serve_decode_step_ms")
 
     def _enforce(self, tenant: Optional[str], n_tokens: int) -> None:
         if self.stage is None:
@@ -187,6 +222,7 @@ class ServeEngine:
             return []
         self._admit_batch(pending)
         results: List[GenerationResult] = []
+        t0 = time.monotonic()  # queue wait across earlier windows counts too
         for at in range(0, len(pending), window_size):
             window = pending[at : at + window_size]
             lives = [self._prefill_one(p) for p in window]
@@ -195,11 +231,18 @@ class ServeEngine:
                 active = [lv for lv in lives if step < lv.pending.max_new_tokens]
                 if not active:
                     break
+                ts = time.monotonic()
                 self._enforce_step_batch(active)
                 for lv in active:
                     self._decode_one_step(lv, step)
+                self._publish_step(time.monotonic() - ts)
                 step += 1
+            elapsed = time.monotonic() - t0
             for lv in lives:
+                # each request experiences its window's duration PLUS the
+                # time spent queued behind earlier windows of this drain —
+                # publish that full span, not a per-request split
+                self._publish(lv.pending.tenant, sum(len(o) for o in lv.outs), elapsed)
                 results.extend(
                     GenerationResult(tokens=o, prompt_len=lv.prompt_len, tenant=lv.pending.tenant)
                     for o in lv.outs
@@ -215,10 +258,14 @@ class ServeEngine:
     ) -> List[GenerationResult]:
         prompts = np.asarray(prompts)
         b, s0 = prompts.shape
+        t0 = time.monotonic()
         if not _prefill_admitted:  # drain() already batch-admitted prefill cost
             self._enforce(tenant, b * s0)  # prefill cost: prompt tokens
         lv = self._prefill_one(_Pending(prompts, int(max_new_tokens), tenant))
         for step in range(1, max_new_tokens):
+            ts = time.monotonic()
             self._enforce(tenant, b)  # one token per sequence
             self._decode_one_step(lv, step)
+            self._publish_step(time.monotonic() - ts)
+        self._publish(tenant, sum(len(o) for o in lv.outs), time.monotonic() - t0)
         return [GenerationResult(tokens=o, prompt_len=s0, tenant=tenant) for o in lv.outs]

@@ -1,3 +1,38 @@
-from .metrics import MetricRegistry, ProcIOReader, StepTimer
+from .metrics import (
+    MetricRegistry,
+    MetricSample,
+    ProcIOReader,
+    StepTimer,
+    get_registry,
+    quantile,
+    set_registry,
+)
 
-__all__ = ["MetricRegistry", "ProcIOReader", "StepTimer"]
+#: exporter names resolve lazily (module __getattr__): the data plane imports
+#: repro.telemetry for the registry; it must not pay for http.server unless
+#: something actually starts/renders an exporter
+_EXPORTER_NAMES = frozenset(
+    {"MetricsExporter", "parse_prometheus", "render_prometheus", "start_exporter"}
+)
+
+__all__ = [
+    "MetricRegistry",
+    "MetricSample",
+    "MetricsExporter",
+    "ProcIOReader",
+    "StepTimer",
+    "get_registry",
+    "parse_prometheus",
+    "quantile",
+    "render_prometheus",
+    "set_registry",
+    "start_exporter",
+]
+
+
+def __getattr__(name: str):
+    if name in _EXPORTER_NAMES:
+        from . import exporter
+
+        return getattr(exporter, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

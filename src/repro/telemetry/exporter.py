@@ -1,0 +1,184 @@
+"""Prometheus-style text exposition for the shared metric registry.
+
+Two consumption paths, same rendering:
+
+* :func:`render_prometheus` — pure function registry → exposition text, the
+  ``collect()`` API for benchmarks/tests that want the metrics in-process;
+* :class:`MetricsExporter` — a plain-HTTP daemon thread serving the text on
+  ``/metrics`` (and ``/``), so policies, stage statistics and benchmarks are
+  observable from *outside* the process with nothing but ``curl``.
+
+Naming scheme (documented in README § Observability):
+
+* described metrics render under their export family + labels, e.g.
+  ``paio_channel_wait_p99_ms{stage="serve",channel="tenant_a"}``;
+* undescribed dotted registry names are sanitized verbatim:
+  ``train.step.p99_ms`` → ``paio_train_step_p99_ms``;
+* counters get the conventional ``_total`` suffix, summaries render
+  ``{quantile="0.5|0.95|0.99"}`` rows plus ``_count`` / ``_sum``.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, List, Optional
+
+from .metrics import MetricRegistry, MetricSample, get_registry
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+_NAME_SANITIZE = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def family_name(sample: MetricSample) -> str:
+    """Prometheus family for a sample: its descriptor family, or the
+    sanitized dotted name prefixed ``paio_``."""
+    fam = sample.family
+    if fam is None:
+        fam = "paio_" + _NAME_SANITIZE.sub("_", sample.name)
+    if fam[0].isdigit():
+        fam = "_" + fam
+    return fam
+
+
+def _escape_label(value: str) -> str:
+    return value.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _labels_text(labels: Dict[str, str], extra: str = "") -> str:
+    parts = [f'{k}="{_escape_label(str(v))}"' for k, v in sorted(labels.items())]
+    if extra:
+        parts.append(extra)
+    return "{" + ",".join(parts) + "}" if parts else ""
+
+
+def _fmt(value: float) -> str:
+    # integral floats render without the trailing .0 (Prometheus-idiomatic)
+    return str(int(value)) if float(value).is_integer() else repr(float(value))
+
+
+def render_prometheus(registry: Optional[MetricRegistry] = None) -> str:
+    """Render one coherent scrape of ``registry`` (default: the process-wide
+    one) in Prometheus text exposition format v0.0.4."""
+    registry = registry if registry is not None else get_registry()
+    samples = registry.collect()
+    # group by family so each gets exactly one # TYPE header
+    by_family: Dict[str, List[MetricSample]] = {}
+    for s in samples:
+        by_family.setdefault(family_name(s), []).append(s)
+    lines: List[str] = []
+    for fam in sorted(by_family):
+        group = by_family[fam]
+        kind = group[0].kind
+        if kind == "counter":
+            lines.append(f"# TYPE {fam}_total counter")
+            for s in group:
+                lines.append(f"{fam}_total{_labels_text(s.labels)} {_fmt(s.value)}")
+        elif kind == "summary":
+            lines.append(f"# TYPE {fam} summary")
+            for s in group:
+                for ql, qv in s.quantiles.items():
+                    qlabel = 'quantile="%s"' % ql
+                    lines.append(f"{fam}{_labels_text(s.labels, qlabel)} {_fmt(qv)}")
+                lines.append(f"{fam}_count{_labels_text(s.labels)} {s.count}")
+                lines.append(f"{fam}_sum{_labels_text(s.labels)} {_fmt(s.sum)}")
+        else:
+            lines.append(f"# TYPE {fam} gauge")
+            for s in group:
+                lines.append(f"{fam}{_labels_text(s.labels)} {_fmt(s.value)}")
+    return "\n".join(lines) + "\n"
+
+
+def parse_prometheus(text: str) -> Dict[str, float]:
+    """Minimal exposition parser for tests/benchmarks scraping the endpoint:
+    returns ``{metric_with_labels: value}`` (comments skipped). Not a full
+    grammar — good for exact-line lookups and float parsing."""
+    out: Dict[str, float] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        try:
+            out[name] = float(value)
+        except ValueError:
+            continue
+    return out
+
+
+class MetricsExporter:
+    """Serves ``render_prometheus(registry)`` over plain HTTP.
+
+    ``port=0`` binds an ephemeral port (read it back from ``.port`` /
+    ``.url``). The server thread is a daemon: it never blocks interpreter
+    exit, and ``stop()`` shuts it down deterministically for tests.
+    """
+
+    def __init__(
+        self,
+        registry: Optional[MetricRegistry] = None,
+        host: str = "127.0.0.1",
+        port: int = 0,
+    ) -> None:
+        self.registry = registry if registry is not None else get_registry()
+        self._host = host
+        self._want_port = port
+        self._server: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # -- the collect() API (no HTTP) ---------------------------------------
+    def collect(self) -> str:
+        return render_prometheus(self.registry)
+
+    @property
+    def port(self) -> int:
+        if self._server is None:
+            raise RuntimeError("exporter not started")
+        return self._server.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self._host}:{self.port}/metrics"
+
+    def start(self) -> "MetricsExporter":
+        exporter = self
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:  # noqa: N802 — http.server API
+                if self.path.split("?", 1)[0] not in ("/", "/metrics"):
+                    self.send_error(404)
+                    return
+                body = exporter.collect().encode()
+                self.send_response(200)
+                self.send_header("Content-Type", CONTENT_TYPE)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args) -> None:  # scrapes are not log events
+                pass
+
+        self._server = ThreadingHTTPServer((self._host, self._want_port), Handler)
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True, name="paio-metrics-exporter"
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._server = None
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+def start_exporter(
+    port: int = 0, host: str = "127.0.0.1", registry: Optional[MetricRegistry] = None
+) -> MetricsExporter:
+    """Convenience: build + start an exporter over the shared registry."""
+    return MetricsExporter(registry=registry, host=host, port=port).start()

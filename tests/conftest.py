@@ -1,0 +1,15 @@
+"""Shared fixtures: per-test isolation of the process-wide metric registry.
+
+Control planes and serve engines publish into the shared registry by default
+(so one exporter endpoint covers the process); tests must not see each
+other's gauges, so every test gets a fresh registry swapped in.
+"""
+import pytest
+
+from repro.telemetry import MetricRegistry, set_registry
+
+
+@pytest.fixture(autouse=True)
+def _fresh_metric_registry():
+    set_registry(MetricRegistry())
+    yield

@@ -815,3 +815,523 @@ class TestWaitStats:
         st.hsk_rule(HousekeepingRule(op="create_channel", channel="w"))
         st.dif_rule(DifferentiationRule(channel="w", match={"workflow_id": "7"}))
         assert st.select_channel(Context(7, RequestType.read, 1)) == "w"
+
+
+# --------------------------------------------------------------------------- #
+# atomic versioned replace (install_policy(..., replace=True))                 #
+# --------------------------------------------------------------------------- #
+REPLACE_V1 = """
+policy guard stage serve
+for tenant=a as fa: limit bandwidth 100MiB/s
+for tenant=b as fb: limit bandwidth 50MiB/s
+"""
+
+REPLACE_V2 = """
+policy guard stage serve
+for tenant=a as fa: limit bandwidth 200MiB/s
+for tenant=c as fc: limit bandwidth 10MiB/s
+"""
+
+
+class TestAtomicReplace:
+    def _plane(self):
+        clk = VirtualClock()
+        st = Stage("serve", clock=clk)
+        cp = ControlPlane(clock=clk)
+        cp.register_stage(st)
+        return st, cp
+
+    def test_replace_retunes_in_place_and_bumps_version(self):
+        st, cp = self._plane()
+        cp.install_policy(REPLACE_V1)
+        (p,) = cp.list_policies()
+        assert p["version"] == 1
+        drl_before = st.channel("fa").get_object("0")
+        assert drl_before.rate == 100 * MiB
+
+        cp.install_policy(REPLACE_V2, replace=True)
+        (p,) = cp.list_policies()
+        assert p["version"] == 2
+        assert sorted(p["flows"]) == ["fa", "fc"]
+        # the surviving flow's live object was retuned, not recreated — the
+        # zero-gap mechanism for carried-over entities
+        drl_after = st.channel("fa").get_object("0")
+        assert drl_after is drl_before
+        assert drl_after.rate == 200 * MiB
+        # dropped flow torn down, new flow provisioned
+        assert st.channel("fb") is None
+        assert st.channel("fc").get_object("0").rate == 10 * MiB
+        ctx_c = Context(1, RequestType.read, 1, "", tenant="c")
+        assert st.select_channel(ctx_c) == "fc"
+        assert st.select_channel(Context(1, RequestType.read, 1, "", tenant="b")) == "default"
+
+    def test_replace_without_flag_still_rejected(self):
+        st, cp = self._plane()
+        cp.install_policy(REPLACE_V1)
+        with pytest.raises(ValueError, match="replace=True"):
+            cp.install_policy(REPLACE_V2)
+
+    def test_replace_acts_as_install_when_absent(self):
+        st, cp = self._plane()
+        cp.install_policy(REPLACE_V1, replace=True)
+        assert cp.list_policies()[0]["version"] == 1
+        assert st.channel("fa").get_object("0").rate == 100 * MiB
+
+    def test_zero_enforcement_gap_under_traffic(self):
+        """Traffic flowing through the stage during repeated replaces must be
+        governed by exactly the old or the new rule set at every instant:
+        the flow's route always resolves, its object slot always holds a DRL,
+        and the observed rate is always one of the two versions'."""
+        import threading as _threading
+
+        st = Stage("serve")  # real clock: huge rates, so nothing blocks
+        cp = ControlPlane()
+        cp.register_stage(st)
+        cp.install_policy(REPLACE_V1)
+        allowed = {100 * MiB, 200 * MiB}
+        ctx = Context(1, RequestType.read, 64, "", tenant="a")
+        stop = _threading.Event()
+        violations: list = []
+        observed: set = set()
+
+        def driver() -> None:
+            # any exception IS a violation (e.g. channel momentarily absent):
+            # record it rather than dying silently and vacuously passing
+            try:
+                while not stop.is_set():
+                    chan_name = st.select_channel(ctx)
+                    if chan_name != "fa":
+                        violations.append(("route", chan_name))
+                        continue
+                    chan = st.channel("fa")
+                    obj = chan.get_object("0") if chan is not None else None
+                    if obj is None or obj.kind != "drl":
+                        violations.append(("object", obj))
+                        continue
+                    rate = obj.rate
+                    if rate not in allowed:
+                        violations.append(("rate", rate))
+                    observed.add(rate)
+                    st.enforce(ctx)
+            except Exception as exc:  # noqa: BLE001
+                violations.append(("crash", repr(exc)))
+
+        threads = [_threading.Thread(target=driver) for _ in range(2)]
+        for t in threads:
+            t.start()
+        try:
+            import time as _time
+
+            deadline = _time.monotonic() + 5.0
+            while not observed and _time.monotonic() < deadline:
+                _time.sleep(0.001)  # drivers demonstrably running before flips
+            for i in range(30):
+                cp.install_policy(REPLACE_V2 if i % 2 == 0 else REPLACE_V1, replace=True)
+                _time.sleep(0.001)
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=10.0)
+        assert violations == []
+        assert observed == allowed  # traffic really saw both versions
+        assert cp.list_policies()[0]["version"] == 31
+
+    def test_replace_over_uds_transport(self):
+        clk = VirtualClock()
+        st = Stage("serve", clock=clk)
+        with tempfile.TemporaryDirectory() as d:
+            server = StageServer(st, f"{d}/paio.sock").start()
+            try:
+                cp = ControlPlane(clock=clk)
+                cp.connect("serve", f"{d}/paio.sock")
+                cp.install_policy(REPLACE_V1)
+                drl_before = st.channel("fa").get_object("0")
+                cp.install_policy(REPLACE_V2, replace=True)
+                (p,) = cp.list_policies()
+                assert p["version"] == 2
+                assert sorted(p["flows"]) == ["fa", "fc"]
+                # same in-place semantics as the local transport
+                assert st.channel("fa").get_object("0") is drl_before
+                assert st.channel("fa").get_object("0").rate == 200 * MiB
+                assert st.channel("fb") is None
+                assert st.channel("fc") is not None
+            finally:
+                server.stop()
+
+    def test_replace_failure_restores_old_version(self):
+        st, cp = self._plane()
+        cp.install_policy(REPLACE_V1)
+        handle = cp._handles["serve"]
+        original = handle.hsk_rule
+
+        def flaky(rule):
+            if getattr(rule, "channel", None) == "fc":
+                raise RuntimeError("stage rejected rule")
+            return original(rule)
+
+        handle.hsk_rule = flaky
+        with pytest.raises(RuntimeError, match="stage rejected rule"):
+            cp.install_policy(REPLACE_V2, replace=True)
+        handle.hsk_rule = original
+        # the old version is still the installed one and still governs —
+        # at its ORIGINAL version (a failed replace must not advance what
+        # an external monitor watches)
+        (p,) = cp.list_policies()
+        assert sorted(p["flows"]) == ["fa", "fb"]
+        assert p["version"] == 1
+        assert st.channel("fa").get_object("0").rate == 100 * MiB
+        assert st.channel("fb").get_object("0").rate == 50 * MiB
+
+    def test_failed_replace_restores_fired_trigger_clamp(self):
+        """A fired trigger's protective clamp is released during replace (new
+        triggers start armed); if the delta then fails, rollback must put the
+        clamp BACK — not leave the flow running unprotected under the
+        'restored' old policy."""
+        clk = VirtualClock()
+        st = Stage("serve", clock=clk)
+        cp = ControlPlane(clock=clk)
+        cp.register_stage(st)
+        guarded = {
+            "policy": "g", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "params": {"rate": 100 * MiB}}]}],
+            "triggers": [{
+                "when": {"metric": "iops", "flow": "f", "op": ">", "value": 10},
+                "do": [{"op": "set", "flow": "f", "state": {"rate": 1.0}}],
+                "release": [{"op": "set", "flow": "f", "state": {"rate": 100 * MiB}}],
+            }],
+        }
+        cp.install_policy(guarded)
+        for _ in range(20):
+            st.channel("f").stats.record(1)
+        clk.sleep(0.1)
+        cp.run_once()
+        assert st.channel("f").get_object("0").rate == 1.0  # clamped
+
+        v2 = dict(guarded)
+        v2["flows"] = guarded["flows"] + [
+            {"name": "extra", "match": {"tenant": "b"},
+             "objects": [{"kind": "drl", "params": {"rate": 1e6}}]},
+        ]
+        handle = cp._handles["serve"]
+        original = handle.hsk_rule
+
+        def flaky(rule):
+            if getattr(rule, "channel", None) == "extra":
+                raise RuntimeError("stage rejected rule")
+            return original(rule)
+
+        handle.hsk_rule = flaky
+        with pytest.raises(RuntimeError):
+            cp.install_policy(v2, replace=True)
+        handle.hsk_rule = original
+        # old policy restored at its version, the clamp is back on, AND the
+        # restored trigger owns it (FIRED) — so it can still release
+        (p,) = cp.list_policies()
+        assert p["version"] == 1
+        assert st.channel("f").get_object("0").rate == 1.0
+        assert list(p["trigger_states"].values()) == ["fired"]
+        # traffic stops → the restored-fired trigger releases the clamp
+        clk.sleep(0.5)
+        cp.run_once()
+        assert st.channel("f").get_object("0").rate == 100 * MiB
+
+    def test_replace_non_configurable_param_swaps_slot(self):
+        """A changed param obj_config cannot apply faithfully (drl min_rate)
+        must swap the object slot atomically, not silently no-op a retune."""
+        st, cp = self._plane()
+        base = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "params": {"rate": 1e6, "min_rate": 1.0}}]}],
+        }
+        cp.install_policy(base)
+        before = st.channel("f").get_object("0")
+        v2 = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "params": {"rate": 1e6, "min_rate": 500.0}}]}],
+        }
+        cp.install_policy(v2, replace=True)
+        after = st.channel("f").get_object("0")
+        assert after is not before  # slot swap, not a dropped retune
+        assert after.min_rate == 500.0
+        # rate-only change on the same policy DOES retune in place
+        v3 = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "params": {"rate": 2e6, "min_rate": 500.0}}]}],
+        }
+        cp.install_policy(v3, replace=True)
+        assert st.channel("f").get_object("0") is after
+        assert st.channel("f").get_object("0").rate == 2e6
+
+    def test_version_exported_as_metric(self):
+        from repro.telemetry import render_prometheus
+
+        st, cp = self._plane()
+        cp.install_policy(REPLACE_V1)
+        cp.install_policy(REPLACE_V2, replace=True)
+        text = render_prometheus(cp.policy_runtime.registry)
+        assert 'paio_policy_version{policy="guard"} 2' in text
+        assert text.count("paio_policies_installed 1") == 1
+        cp.remove_policy("guard")
+        text = render_prometheus(cp.policy_runtime.registry)
+        assert "paio_policy_version" not in text
+        # exactly ONE installed-count row (a duplicate sample would make
+        # Prometheus reject the whole scrape)
+        installed_rows = [l for l in text.splitlines() if l.startswith("paio_policies_installed")]
+        assert installed_rows == ["paio_policies_installed 0"]
+
+    def test_failed_removal_rollback_restores_channel_with_objects(self):
+        """A rollback that re-creates a dropped flow's channel must restore
+        its enforcement objects too — a route pointing at a bare Noop channel
+        would be exactly the unenforced window replace=True forbids."""
+        st, cp = self._plane()
+        cp.install_policy(REPLACE_V1)  # flows fa (100MiB/s) + fb (50MiB/s)
+        only_fa = "policy guard stage serve\nfor tenant=a as fa: limit bandwidth 100MiB/s\n"
+        handle = cp._handles["serve"]
+        original = handle.hsk_rule
+
+        def flaky(rule):
+            # fail AFTER fb's route removal so its channel teardown (and the
+            # rollback of it) is exercised
+            if rule.op == "remove_channel" and rule.channel == "fb":
+                raise RuntimeError("stage rejected rule")
+            return original(rule)
+
+        handle.hsk_rule = flaky
+        with pytest.raises(RuntimeError):
+            cp.install_policy(only_fa, replace=True)
+        handle.hsk_rule = original
+        (p,) = cp.list_policies()
+        assert p["version"] == 1 and sorted(p["flows"]) == ["fa", "fb"]
+        # fb is fully restored: channel, its DRL, and its route
+        obj = st.channel("fb").get_object("0")
+        assert obj is not None and obj.kind == "drl" and obj.rate == 50 * MiB
+        assert st.select_channel(Context(1, RequestType.read, 1, "", tenant="b")) == "fb"
+
+    def test_object_dropped_from_surviving_channel_is_removed(self):
+        """An object the new version drops from a channel that survives the
+        replace must actually be removed — owned channels have no per-object
+        teardown to reuse, so the delta synthesizes it."""
+        st, cp = self._plane()
+        v1 = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [
+                           {"kind": "drl", "id": "0", "params": {"rate": 1e6}},
+                           {"kind": "checksum", "id": "1", "params": {}},
+                       ]}],
+        }
+        cp.install_policy(v1)
+        assert sorted(st.channel("f").object_ids()) == ["0", "1"]
+        v2 = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "id": "0", "params": {"rate": 1e6}}]}],
+        }
+        cp.install_policy(v2, replace=True)
+        # same channel + untouched DRL, but the checksum object is gone —
+        # identical end state to a fresh install of v2
+        assert st.channel("f").object_ids() == ["0"]
+
+    def test_rehomed_flow_keeps_its_route(self):
+        """Stage routing is channel-blind (keyed by match): moving a flow to
+        a new channel in a replace is an overwrite of the same entry — the
+        old version's remove_route must NOT delete it afterwards, and a
+        failed replace must re-point it back, not leave it deleted."""
+        st, cp = self._plane()
+        cp.install_policy("policy g stage serve\nfor tenant=a as fa: limit bandwidth 100MiB/s\n")
+        v2 = "policy g stage serve\nfor tenant=a as fx: limit bandwidth 200MiB/s\n"
+        cp.install_policy(v2, replace=True)
+        ctx = Context(1, RequestType.read, 1, "", tenant="a")
+        assert st.select_channel(ctx) == "fx"  # still enforced, new home
+        assert st.channel("fa") is None
+        assert st.channel("fx").get_object("0").rate == 200 * MiB
+
+        # failure mid-replace: the route must re-point to the CURRENT channel
+        v3 = (
+            "policy g stage serve\n"
+            "for tenant=a as fy: limit bandwidth 300MiB/s\n"
+            "for tenant=b as extra: limit bandwidth 1MiB/s\n"
+        )
+        handle = cp._handles["serve"]
+        original = handle.hsk_rule
+
+        def flaky(rule):
+            if getattr(rule, "channel", None) == "extra":
+                raise RuntimeError("stage rejected rule")
+            return original(rule)
+
+        handle.hsk_rule = flaky
+        with pytest.raises(RuntimeError):
+            cp.install_policy(v3, replace=True)
+        handle.hsk_rule = original
+        ctx2 = Context(2, RequestType.read, 1, "", tenant="a")
+        assert st.select_channel(ctx2) == "fx"  # restored, not unrouted
+
+    def test_added_param_forces_slot_swap(self):
+        """A param ADDED by the new version is not retunable either — its
+        rollback would need to unset it, which obj_config cannot express."""
+        st, cp = self._plane()
+        v1 = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "params": {"rate": 1e6}}]}],
+        }
+        cp.install_policy(v1)
+        before = st.channel("f").get_object("0")
+        v2 = {
+            "policy": "p", "stage": "serve",
+            "flows": [{"name": "f", "match": {"tenant": "a"},
+                       "objects": [{"kind": "drl", "params": {"rate": 1e6, "refill_period": 10.0}}]}],
+        }
+        cp.install_policy(v2, replace=True)
+        after = st.channel("f").get_object("0")
+        assert after is not before
+        assert after.refill_period == 10.0
+
+
+# --------------------------------------------------------------------------- #
+# trigger edge cases (satellite)                                               #
+# --------------------------------------------------------------------------- #
+class TestTriggerEdgeCases:
+    def test_exact_threshold_strict_vs_inclusive(self):
+        """An aggregate landing exactly on the threshold must NOT fire a ``>``
+        trigger (strictly greater, as the DSL op reads) and MUST fire ``>=``;
+        mirrored for ``<`` / ``<=``."""
+        eng = TriggerEngine()
+        eng.add(_mk_trigger(name="gt", op=">", value=50.0))
+        eng.add(_mk_trigger(name="ge", op=">=", value=50.0))
+        events = eng.observe(0.0, {"m": 50.0})
+        assert [e.trigger.name for e in events] == ["ge"]
+
+        eng = TriggerEngine()
+        eng.add(_mk_trigger(name="lt", op="<", value=50.0))
+        eng.add(_mk_trigger(name="le", op="<=", value=50.0))
+        events = eng.observe(0.0, {"m": 50.0})
+        assert [e.trigger.name for e in events] == ["le"]
+
+    def test_fired_release_on_remove_over_uds(self):
+        """remove_policy of a FIRED trigger must apply its release rules over
+        the UDS transport exactly as it does locally."""
+        clk = VirtualClock()
+        st = Stage("s", clock=clk)
+        st.hsk_rule(HousekeepingRule(op="create_channel", channel="pre"))
+        st.hsk_rule(
+            HousekeepingRule(
+                op="create_object", channel="pre", object_id="0", object_kind="drl",
+                params={"rate": 100 * MiB},
+            )
+        )
+        with tempfile.TemporaryDirectory() as d:
+            server = StageServer(st, f"{d}/paio.sock").start()
+            try:
+                cp = ControlPlane(clock=clk)
+                cp.connect("s", f"{d}/paio.sock")
+                name = cp.install_policy(
+                    {
+                        "policy": "guard",
+                        "stage": "s",
+                        "flows": [{"name": "victim", "match": {"tenant": "x"}, "channel": "pre"}],
+                        "triggers": [
+                            {
+                                "when": {"metric": "iops", "flow": "victim", "op": ">", "value": 10},
+                                "do": [{"op": "set", "flow": "victim", "state": {"rate": 1.0}}],
+                                "release": [
+                                    {"op": "set", "flow": "victim", "state": {"rate": 100 * MiB}}
+                                ],
+                            }
+                        ],
+                    }
+                )
+                for _ in range(20):
+                    st.channel("pre").stats.record(1)
+                clk.sleep(0.1)
+                cp.run_once()
+                assert st.channel("pre").get_object("0").rate == 1.0  # fired
+                assert cp.list_policies()[0]["trigger_states"] == {"guard/trigger0": "fired"}
+                cp.remove_policy(name)
+                assert st.channel("pre").get_object("0").rate == 100 * MiB
+            finally:
+                server.stop()
+
+    def test_clock_jump_immunity_with_injected_clock(self):
+        """All interval math runs on the injected clock: window eviction and
+        cooldown follow it exactly, so a wall-clock step (NTP/suspend) that
+        never touches the monotonic clock cannot corrupt windows or pin a
+        cooldown. Simulated by driving the engine purely off a fake clock
+        while wall time is irrelevant."""
+        clk = VirtualClock(start=1000.0)
+        eng = TriggerEngine(clock=clk)
+        eng.add(_mk_trigger(agg="last", window=5.0, cooldown=60.0, hysteresis=0.0))
+
+        # warm the window below threshold, then cross it — observe(None, ...)
+        # timestamps samples off the injected clock
+        assert eng.observe(None, {"m": 10.0}) == []
+        clk.sleep(1.0)
+        (ev,) = eng.observe(None, {"m": 1000.0})
+        assert ev.kind == "fire" and ev.at == pytest.approx(1001.0)
+
+        # release, then verify the cooldown pins re-fire on the fake clock
+        clk.sleep(1.0)
+        (ev,) = eng.observe(None, {"m": 0.0})
+        assert ev.kind == "release"
+        clk.sleep(10.0)  # old samples (< t+5s) evicted: window holds only new
+        assert eng.observe(None, {"m": 99.0}) == []  # within cooldown: pinned
+        clk.sleep(60.0)  # cooldown elapsed on the *injected* clock
+        (ev,) = eng.observe(None, {"m": 99.0})
+        assert ev.kind == "fire"  # not pinned for hours: monotonic interval math
+
+    def test_window_eviction_follows_injected_clock(self):
+        clk = VirtualClock()
+        eng = TriggerEngine(clock=clk)
+        eng.add(_mk_trigger(agg="max", window=2.0, value=50.0))
+        eng.observe(None, {"m": 100.0})  # would fire on max; it does
+        clk.sleep(5.0)
+        # the old 100.0 sample is beyond the 2 s window: max is now 10.0, so
+        # the fired trigger releases instead of staying latched on stale data
+        (ev,) = eng.observe(None, {"m": 10.0})
+        assert ev.kind == "release"
+
+
+class TestRollbackErrorChaining:
+    def test_failed_undo_attaches_context(self):
+        """A failing rollback must not mask the install error: the original
+        exception propagates with the undo failure chained as __context__,
+        remaining undo rules still run, and list_policies stays empty."""
+        clk = VirtualClock()
+        st = Stage("s", clock=clk)
+        cp = ControlPlane(clock=clk)
+        cp.register_stage(st)
+        policy = {
+            "policy": "p",
+            "stage": "s",
+            "flows": [
+                {"name": "a", "match": {"tenant": "a"},
+                 "objects": [{"kind": "drl", "params": {"rate": 1e6}}]},
+                {"name": "b", "match": {"tenant": "b"},
+                 "objects": [{"kind": "drl", "params": {"rate": 1e6}}]},
+            ],
+        }
+        handle = cp._handles["s"]
+        original = handle.hsk_rule
+        undo_failures = {"n": 0}
+
+        def flaky(rule):
+            if rule.op == "create_object" and rule.channel == "b":
+                raise RuntimeError("install failed")
+            if rule.op == "remove_route" and undo_failures["n"] == 0:
+                undo_failures["n"] += 1
+                raise OSError("undo also failed")
+            return original(rule)
+
+        handle.hsk_rule = flaky
+        with pytest.raises(RuntimeError, match="install failed") as excinfo:
+            cp.install_policy(policy)
+        handle.hsk_rule = original
+        assert isinstance(excinfo.value.__context__, OSError)
+        assert cp.list_policies() == []
+        # undo continued past the failing rule: both channels removed
+        assert set(st.channels()) == {"default"}

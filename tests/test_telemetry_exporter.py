@@ -1,0 +1,225 @@
+"""Shared metric registry v2 + Prometheus exporter: counters/gauges/windowed
+summaries, export descriptors, text exposition, the HTTP endpoint, and the
+stats-to-gauges publication path (wait percentiles, buffer reuse)."""
+from __future__ import annotations
+
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core import VirtualClock
+from repro.core.stats import ChannelStats, StatsSnapshot, merge_snapshots
+from repro.policy.engine import PolicyRuntime, stats_to_samples
+from repro.telemetry import (
+    MetricRegistry,
+    MetricsExporter,
+    get_registry,
+    parse_prometheus,
+    render_prometheus,
+    set_registry,
+)
+
+
+class TestRegistry:
+    def test_gauges_counters_summaries_in_sample(self):
+        r = MetricRegistry()
+        r.set_gauge("g", 1.5)
+        r.inc("c")
+        r.inc("c", 2)
+        for v in range(1, 101):
+            r.observe("s", float(v))
+        sample = r.sample()
+        assert sample["g"] == 1.5
+        assert sample["c"] == 3.0
+        # nearest-rank (same convention as SlidingWindow/StepTimer)
+        assert sample["s.p50"] == 51.0
+        assert sample["s.p95"] == 96.0
+        assert sample["s.p99"] == 100.0
+        assert sample["s.mean"] == 50.5
+        assert sample["s.count"] == 100.0
+
+    def test_summary_window_slides_but_count_is_cumulative(self):
+        r = MetricRegistry(summary_window=10)
+        for v in range(100):
+            r.observe("s", float(v))
+        sample = r.sample()
+        assert sample["s.count"] == 100.0  # cumulative
+        assert sample["s.p50"] >= 90.0  # window holds only the last 10
+
+    def test_update_gauges_bulk(self):
+        r = MetricRegistry()
+        r.update_gauges({"a": 1.0, "b": 2.0})
+        assert r.sample() == {"a": 1.0, "b": 2.0}
+
+    def test_unregister_clears_every_shape(self):
+        r = MetricRegistry()
+        r.set_gauge("x", 1)
+        r.inc("y")
+        r.observe("z", 1)
+        for name in ("x", "y", "z"):
+            r.unregister(name)
+        assert r.names() == []
+
+    def test_dead_source_skipped(self):
+        r = MetricRegistry()
+        r.register("bad", lambda: 1 / 0)
+        r.set_gauge("good", 1.0)
+        assert r.sample() == {"good": 1.0}
+        assert all(s.name != "bad" for s in r.collect())
+
+    def test_global_registry_swap(self):
+        first = get_registry()
+        assert get_registry() is first
+        fresh = MetricRegistry()
+        prev = set_registry(fresh)
+        assert prev is first
+        assert get_registry() is fresh
+
+
+class TestRendering:
+    def test_families_labels_and_types(self):
+        r = MetricRegistry()
+        r.set_gauge("s.ch.throughput", 12.5)
+        r.describe("s.ch.throughput", "paio_channel_throughput", {"stage": "s", "channel": "ch"})
+        r.inc("tokens", 7)
+        r.observe("lat_ms", 4.0)
+        text = render_prometheus(r)
+        assert '# TYPE paio_channel_throughput gauge' in text
+        assert 'paio_channel_throughput{channel="ch",stage="s"} 12.5' in text
+        assert "# TYPE paio_tokens_total counter" in text
+        assert "paio_tokens_total 7" in text
+        assert "# TYPE paio_lat_ms summary" in text
+        assert 'paio_lat_ms{quantile="0.99"} 4' in text
+        assert "paio_lat_ms_count 1" in text
+
+    def test_undescribed_names_sanitize(self):
+        r = MetricRegistry()
+        r.set_gauge("train.step.p99-ms", 3.0)
+        assert "paio_train_step_p99_ms 3" in render_prometheus(r)
+
+    def test_label_escaping(self):
+        r = MetricRegistry()
+        r.set_gauge("g", 1.0)
+        r.describe("g", "paio_g", {"who": 'a"b\\c'})
+        line = [l for l in render_prometheus(r).splitlines() if l.startswith("paio_g")][0]
+        assert '\\"' in line and "\\\\" in line
+
+    def test_parse_round_trip(self):
+        r = MetricRegistry()
+        r.set_gauge("g", 2.25)
+        r.describe("g", "paio_g", {"k": "v"})
+        parsed = parse_prometheus(render_prometheus(r))
+        assert parsed['paio_g{k="v"}'] == 2.25
+
+
+class TestExporterHTTP:
+    def test_endpoint_serves_and_stops(self):
+        r = MetricRegistry()
+        r.set_gauge("up", 1.0)
+        exp = MetricsExporter(registry=r).start()
+        try:
+            with urllib.request.urlopen(exp.url, timeout=5.0) as resp:
+                assert resp.headers["Content-Type"].startswith("text/plain")
+                body = resp.read().decode()
+            assert "paio_up 1" in body
+            # collect() is the same rendering without HTTP
+            assert exp.collect() == body
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(exp.url.replace("/metrics", "/nope"), timeout=5.0)
+        finally:
+            exp.stop()
+
+    def test_default_registry_is_process_wide(self):
+        get_registry().set_gauge("shared", 42.0)
+        exp = MetricsExporter().start()
+        try:
+            body = urllib.request.urlopen(exp.url, timeout=5.0).read().decode()
+            assert "paio_shared 42" in body
+        finally:
+            exp.stop()
+
+
+class TestWaitPercentiles:
+    def test_channel_stats_percentiles(self):
+        clk = VirtualClock()
+        cs = ChannelStats("c", clk)
+        for i in range(100):
+            cs.record(1, wait=i / 1000.0)  # 0..99 ms
+        clk.sleep(1.0)
+        snap = cs.collect()
+        assert snap.wait_p50_ms == pytest.approx(50.0)
+        assert snap.wait_p95_ms == pytest.approx(95.0)
+        assert snap.wait_p99_ms == pytest.approx(99.0)
+        # percentile window slides across collect windows (not reset)
+        clk.sleep(1.0)
+        assert cs.collect().wait_p99_ms == pytest.approx(99.0)
+
+    def test_batch_contributes_mean_observation(self):
+        clk = VirtualClock()
+        cs = ChannelStats("c", clk)
+        cs.record_batch(10, 100, wait=0.05)  # 5 ms per op mean
+        clk.sleep(1.0)
+        assert cs.collect().wait_p99_ms == pytest.approx(5.0)
+
+    def test_snapshot_wire_round_trip_with_new_fields(self):
+        from dataclasses import asdict
+
+        snap = StatsSnapshot(
+            channel="c", ops=1, bytes=2, window_seconds=1.0, throughput=2.0, iops=1.0,
+            wait_p50_ms=1.0, wait_p95_ms=2.0, wait_p99_ms=3.0,
+        )
+        assert StatsSnapshot(**asdict(snap)) == snap
+        # old-wire snapshots (no percentile fields) still deserialize
+        d = asdict(snap)
+        for k in ("wait_p50_ms", "wait_p95_ms", "wait_p99_ms"):
+            d.pop(k)
+        assert StatsSnapshot(**d).wait_p99_ms == 0.0
+
+    def test_merge_takes_later_percentiles(self):
+        a = StatsSnapshot("c", 1, 1, 1.0, 1.0, 1.0, wait_p99_ms=9.0)
+        b = StatsSnapshot("c", 1, 1, 1.0, 1.0, 1.0, wait_p99_ms=4.0)
+        assert merge_snapshots(a, b).wait_p99_ms == 4.0
+
+
+class TestStatsPublication:
+    def _stats(self, wait=0.0):
+        from repro.core.stats import StageStats
+
+        snap = StatsSnapshot(
+            channel="ch", ops=10, bytes=100, window_seconds=1.0, throughput=100.0,
+            iops=10.0, wait_seconds=wait, wait_p99_ms=wait * 100,
+        )
+        return {"s": StageStats(per_channel={"ch": snap})}
+
+    def test_samples_include_percentile_gauges(self):
+        out = stats_to_samples(self._stats(wait=0.5))
+        assert out["s.ch.wait_p99_ms"] == 50.0
+        assert out["s.wait_p99_ms"] == 50.0  # stage aggregate: max over channels
+        assert out["s.ch.throughput"] == 100.0
+
+    def test_buffer_and_key_cache_reuse(self):
+        buf: dict = {}
+        cache: dict = {}
+        out1 = stats_to_samples(self._stats(), out=buf, key_cache=cache)
+        assert out1 is buf
+        keys1 = list(buf)
+        out2 = stats_to_samples(self._stats(), out=buf, key_cache=cache)
+        assert out2 is buf and list(buf) == keys1
+        # key strings are cached objects, not rebuilt per tick
+        assert len(cache) == 2  # (stage, channel) + (stage, None)
+
+    def test_runtime_publishes_described_gauges(self):
+        reg = MetricRegistry()
+        rt = PolicyRuntime(registry=reg)
+        rt.on_collect(0.0, self._stats(wait=0.5))
+        text = render_prometheus(reg)
+        assert 'paio_channel_wait_p99_ms{channel="ch",stage="s"} 50' in text
+        assert 'paio_stage_throughput{stage="s"} 100' in text
+        # gauges vanish when the channel does (absent, not stale)
+        rt.on_collect(1.0, {})
+        assert "paio_channel_wait_p99_ms" not in render_prometheus(reg)
+
+    def test_runtime_defaults_to_global_registry(self):
+        rt = PolicyRuntime()
+        assert rt.registry is get_registry()
