@@ -182,7 +182,7 @@ def run_setup(
         t.join(timeout=240.0)
     stop.set()
     if cp is not None:
-        cp.stop()
+        cp.close()  # loop + registry names + fan-out pool torn down
     return results
 
 

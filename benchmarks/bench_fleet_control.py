@@ -1,0 +1,177 @@
+"""Control-loop latency vs fleet size: sequential vs concurrent fan-out.
+
+Spawns N stage-server *processes* over the UDS transport, each emulating a
+real stage's stat-collection cost (``--stage-delay`` seconds inside
+``collect`` — a stage embedded in a busy storage server walks many channels
+and locks under load), registers all of them on one control plane running a
+fleet-wide fair-share objective, and measures the wall time of one full
+feedback iteration (collect every stage → Algorithm 2 → ship enforcement
+rules to every stage) with the fan-out pool disabled (``sequential``: loop
+latency ≈ Σ stage) and enabled (``concurrent``: ≈ max stage).
+
+``--smoke`` runs the 8-stage point and exits non-zero unless the concurrent
+loop is ≥ 3x faster than sequential — the CI gate for the fleet control
+path.
+
+Usage: python -m benchmarks.bench_fleet_control [--stage-counts 1,4,8]
+       [--iters 30] [--stage-delay 0.02] [--json PATH] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List
+
+MiB = float(1 << 20)
+
+
+def _stage_server(name: str, socket_path: str, collect_delay: float, seconds: float) -> None:
+    """Child process: one stage with a DRL-enforced channel behind the UDS
+    transport; ``collect`` pays ``collect_delay`` to emulate per-stage stat
+    collection cost."""
+    from repro.core import HousekeepingRule, Stage, StageServer
+
+    class EmulatedStage(Stage):
+        def collect(self):
+            if collect_delay:
+                time.sleep(collect_delay)
+            return super().collect()
+
+    stage = EmulatedStage(name)
+    stage.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+    stage.hsk_rule(
+        HousekeepingRule(
+            op="create_object", channel="io", object_id="0", object_kind="drl",
+            params={"rate": 100 * MiB},
+        )
+    )
+    stage.channel("io").stats.record(1 << 20)  # non-empty first window
+    server = StageServer(stage, socket_path).start()
+    time.sleep(seconds)
+    server.stop()
+
+
+def _measure_loop(socket_paths: Dict[str, str], concurrent: bool, iters: int) -> Dict[str, float]:
+    """Mean/p95 wall time of one run_once over the fleet, given the fan-out
+    mode. A fresh plane (and fresh sockets) per mode keeps the two
+    measurements independent."""
+    from repro.core import ControlPlane, FairShareControl, FlowSpec
+
+    names = sorted(socket_paths)
+    algo = FairShareControl(
+        flows={n: FlowSpec(stage=n, channel="io") for n in names},
+        demands={n: 50 * MiB for n in names},
+        max_bandwidth=50 * MiB * len(names),
+        loop_interval=0.05,
+    )
+    with ControlPlane(algo, concurrent=concurrent) as cp:
+        for name in names:
+            cp.connect(name, socket_paths[name])
+        durations: List[float] = []
+        for i in range(iters + 2):
+            t0 = time.perf_counter()
+            cp.run_once()
+            dt = time.perf_counter() - t0
+            if i >= 2:  # discard pool/route warmup
+                durations.append(dt)
+        down = [n for n, s in cp.fleet_status().items() if not s["up"]]
+        if down:
+            raise RuntimeError(f"stages marked down during measurement: {down}")
+    durations.sort()
+    n = len(durations)
+    return {
+        "mean_s": sum(durations) / n,
+        "p50_s": durations[n // 2],
+        "p95_s": durations[min(int(0.95 * n), n - 1)],
+        "max_s": durations[-1],
+    }
+
+
+def run_point(n_stages: int, iters: int, stage_delay: float) -> Dict[str, object]:
+    mp = multiprocessing.get_context("fork" if "fork" in multiprocessing.get_all_start_methods() else None)
+    lifetime = 60.0
+    with tempfile.TemporaryDirectory() as d:
+        paths = {f"s{i+1}": os.path.join(d, f"s{i+1}.sock") for i in range(n_stages)}
+        procs = []
+        for name, path in paths.items():
+            p = mp.Process(target=_stage_server, args=(name, path, stage_delay, lifetime), daemon=True)
+            p.start()
+            procs.append(p)
+        try:
+            t0 = time.monotonic()
+            for path in paths.values():
+                while not os.path.exists(path):
+                    if time.monotonic() - t0 > 10.0:
+                        raise SystemExit(f"stage server never opened {path}")
+                    time.sleep(0.01)
+            seq = _measure_loop(paths, concurrent=False, iters=iters)
+            conc = _measure_loop(paths, concurrent=True, iters=iters)
+        finally:
+            for p in procs:
+                p.terminate()
+            for p in procs:
+                p.join(timeout=10.0)
+    return {
+        "stages": n_stages,
+        "stage_delay_s": stage_delay,
+        "sequential": seq,
+        "concurrent": conc,
+        "speedup": seq["mean_s"] / max(conc["mean_s"], 1e-9),
+        "speedup_p50": seq["p50_s"] / max(conc["p50_s"], 1e-9),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stage-counts", default="1,4,8", help="comma-separated fleet sizes")
+    ap.add_argument("--iters", type=int, default=30, help="measured loop iterations per mode")
+    ap.add_argument(
+        "--stage-delay", type=float, default=0.02,
+        help="emulated per-stage collect cost (s) — a stage embedded in a loaded "
+        "storage server contends with its data path while walking channel stats; "
+        "0 measures bare UDS round-trips (client-CPU/GIL-bound: fan-out cannot help)",
+    )
+    ap.add_argument("--json", default="", help="write machine-readable results to this path")
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI mode: 8-stage point only; fail unless concurrent >= 3x sequential",
+    )
+    args = ap.parse_args()
+
+    counts = [8] if args.smoke else [int(c) for c in args.stage_counts.split(",") if c]
+    print("name,value,derived")
+    results = []
+    for n in counts:
+        r = run_point(n, args.iters, args.stage_delay)
+        results.append(r)
+        seq, conc = r["sequential"], r["concurrent"]
+        print(
+            f"fleet_loop_{n}stages,seq={seq['mean_s']*1e3:.2f}ms conc={conc['mean_s']*1e3:.2f}ms,"
+            f"speedup={r['speedup']:.1f}x speedup_p50={r['speedup_p50']:.1f}x "
+            f"seq_p50={seq['p50_s']*1e3:.2f}ms conc_p50={conc['p50_s']*1e3:.2f}ms "
+            f"stage_delay={args.stage_delay*1e3:.1f}ms"
+        )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "bench_fleet_control", "iters": args.iters, "results": results}, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.smoke:
+        r8 = next(r for r in results if r["stages"] == 8)
+        # gate on the median: box-noise spikes land on both modes but distort
+        # means asymmetrically (they are a bigger fraction of the faster one)
+        if r8["speedup_p50"] < 3.0:
+            print(
+                f"concurrent fan-out p50 speedup {r8['speedup_p50']:.1f}x < 3x at 8 stages",
+                file=sys.stderr,
+            )
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -126,7 +126,7 @@ def run_system(mode: str, workload: str = "mixture", seconds: float = 8.0, n_cli
     result.seconds = time.monotonic() - t_start
     lsm.stop()
     if cp is not None:
-        cp.stop()
+        cp.close()
     result.stall_seconds = lsm.stall_seconds
     result.stall_events = lsm.stall_events
     return result

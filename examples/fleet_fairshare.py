@@ -1,0 +1,208 @@
+"""Fleet-scale fair share: one control plane, many stage *processes*, one SLO.
+
+The paper's use case 2 (per-application bandwidth guarantees) at fleet
+topology: N storage-server processes each embed a PAIO stage served over the
+UDS transport; every tenant's traffic lands on *all* of them. One control
+plane connects to the whole fleet and installs the checked-in
+``examples/policies/fleet_fairshare.json`` policy — three ``scope: global``
+flows (one per tenant) and a fair-share objective whose per-tenant demands are
+guaranteed in **aggregate** across the fleet: each control tick collects every
+stage concurrently, max-min-shares the global capacity across tenants, and
+splits each tenant's grant across its per-stage DRLs by measured throughput.
+
+The run asserts every tenant's steady-state aggregate bandwidth meets its
+demand within ``--tolerance`` (exit 1 otherwise) — the CI gate for the
+fleet control loop. With ``--export`` it also serves the Prometheus endpoint
+and scrapes itself to assert ``paio_stage_up`` is 1 for every stage.
+
+Run: PYTHONPATH=src python examples/fleet_fairshare.py [--stages 3]
+     [--seconds 6] [--scale 1.0] [--export PORT]
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import os
+import sys
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+MiB = float(1 << 20)
+POLICY_FILE = os.path.join(os.path.dirname(__file__), "policies", "fleet_fairshare.json")
+
+
+def _stage_process(name: str, socket_path: str, tenants: List[str], seconds: float, chunk: int) -> None:
+    """One storage-server process: a Stage behind the UDS transport, with a
+    greedy driver thread per tenant (offered load is unconstrained — the
+    policy's DRLs are the only thing shaping it)."""
+    from repro.core import RequestType, Stage, StageServer, build_context, propagate_tenant
+
+    stage = Stage(name)
+    server = StageServer(stage, socket_path).start()
+    deadline = time.monotonic() + seconds
+
+    def drive(tenant: str) -> None:
+        # wait for the policy to provision this tenant's channel — free-running
+        # through the default channel would just burn CPU before install
+        while stage.channel(tenant) is None:
+            if time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
+        with propagate_tenant(tenant):
+            ctx = build_context(RequestType.read, size=chunk)
+        while time.monotonic() < deadline:
+            stage.enforce(ctx, None)
+
+    threads = [threading.Thread(target=drive, args=(t,), daemon=True) for t in tenants]
+    for t in threads:
+        t.start()
+    while time.monotonic() < deadline:
+        time.sleep(0.1)
+    server.stop()
+
+
+def _tenant_rates_per_tick(history, stages: List[str], tenants: List[str]) -> List[Dict[str, float]]:
+    """Per-control-tick aggregate bandwidth per tenant (sum of member
+    channel throughputs across the fleet)."""
+    out = []
+    for entry in history:
+        rates = {t: 0.0 for t in tenants}
+        for stage in stages:
+            st = entry.get(stage)
+            if st is None:
+                continue
+            for tenant in tenants:
+                snap = st.per_channel.get(tenant)
+                if snap is not None:
+                    rates[tenant] += snap.throughput
+        out.append(rates)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", type=int, default=3, help="fleet size (stage server processes)")
+    ap.add_argument("--seconds", type=float, default=6.0, help="traffic duration per stage process")
+    ap.add_argument("--scale", type=float, default=1.0, help="scale every policy bandwidth by this factor")
+    ap.add_argument("--chunk", type=int, default=128 * 1024, help="bytes per enforced request")
+    ap.add_argument("--tolerance", type=float, default=0.05, help="allowed per-tenant guarantee shortfall")
+    ap.add_argument("--warmup", type=float, default=0.35, help="fraction of ticks discarded as warmup")
+    ap.add_argument(
+        "--export", type=int, default=None, metavar="PORT",
+        help="serve Prometheus metrics during the run and self-scrape paio_stage_up "
+        "for every stage (0 binds an ephemeral port)",
+    )
+    args = ap.parse_args()
+
+    from benchmarks.bench_bandwidth_fairshare import _scaled_policy
+    from repro.core import ControlPlane
+
+    policy = _scaled_policy(POLICY_FILE, args.scale)
+    tenants = [f.name for f in policy.flows]
+    demands = {
+        name: float(qty) for name, qty in dict(dict(policy.objective.params)["demands"]).items()
+    }
+    stage_names = [f"s{i+1}" for i in range(args.stages)]
+
+    mp = multiprocessing.get_context("fork" if "fork" in multiprocessing.get_all_start_methods() else None)
+    with tempfile.TemporaryDirectory() as sock_dir, ControlPlane(loop_interval=0.05) as cp:
+        procs = []
+        for name in stage_names:
+            path = os.path.join(sock_dir, f"{name}.sock")
+            # children outlive the measurement window: the parent decides when
+            # the run ends (stop + terminate), so child exit never races the
+            # final collect ticks or the self-scrape
+            p = mp.Process(
+                target=_stage_process,
+                args=(name, path, tenants, args.seconds + 5.0, args.chunk),
+                daemon=True,
+            )
+            p.start()
+            procs.append((name, path, p))
+        for name, path, _ in procs:
+            t0 = time.monotonic()
+            while not os.path.exists(path):
+                if time.monotonic() - t0 > 10.0:
+                    raise SystemExit(f"stage {name} never opened {path}")
+                time.sleep(0.01)
+            cp.connect(name, path)
+
+        cp.install_policy(policy)
+        cp.keep_history = True
+        exporter = cp.serve_metrics(port=args.export) if args.export is not None else None
+        if exporter is not None:
+            print(f"metrics exporter listening on {exporter.url}")
+        cp.start()
+        time.sleep(max(args.seconds - 1.0, 1.0))  # the measurement window
+
+        stage_up_ok = True
+        if exporter is not None:
+            import urllib.request
+
+            from repro.telemetry import parse_prometheus
+
+            with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+                metrics = parse_prometheus(resp.read().decode())
+            for name in stage_names:
+                key = f'paio_stage_up{{stage="{name}"}}'
+                if metrics.get(key) != 1.0:
+                    print(f"FAIL: {key} = {metrics.get(key)!r} (expected 1)")
+                    stage_up_ok = False
+            if stage_up_ok:
+                print(f"paio_stage_up == 1 for all {len(stage_names)} stages (self-scraped)")
+
+        cp.stop()
+        per_tick = _tenant_rates_per_tick(cp.history, stage_names, tenants)
+        for _, _, p in procs:
+            p.terminate()
+            p.join(timeout=10.0)
+
+    if not per_tick:
+        raise SystemExit("control loop produced no history")
+    steady = per_tick[int(len(per_tick) * args.warmup):]
+    achieved = {
+        t: sum(r[t] for r in steady) / len(steady) for t in tenants
+    }
+    # convergence: first tick from which every tenant holds >= 90% of demand
+    # for 5 consecutive ticks
+    converged_tick = None
+    for i in range(len(per_tick) - 5):
+        if all(
+            all(per_tick[i + k][t] >= demands[t] * 0.9 for t in tenants) for k in range(5)
+        ):
+            converged_tick = i
+            break
+
+    capacity = sum(demands.values())
+    print(
+        f"\nfleet: {len(stage_names)} stage processes over UDS; "
+        f"capacity {capacity / MiB:.0f} MiB/s; {len(per_tick)} control ticks"
+    )
+    print(f"{'tenant':<10} {'demand MiB/s':>12} {'achieved MiB/s':>15} {'met':>6}")
+    violations = []
+    for t in tenants:
+        ok = achieved[t] >= demands[t] * (1.0 - args.tolerance)
+        if not ok:
+            violations.append(t)
+        print(f"{t:<10} {demands[t]/MiB:>12.1f} {achieved[t]/MiB:>15.1f} {'yes' if ok else 'NO':>6}")
+    if converged_tick is not None:
+        print(f"converged (all tenants >= 90% of demand, 5 ticks) by tick {converged_tick} "
+              f"(~{converged_tick * 0.05:.2f}s after loop start)")
+    else:
+        print("WARNING: no 5-tick convergence window found")
+    if violations:
+        print(f"FAIL: guarantees violated for {violations}")
+        return 1
+    if not stage_up_ok:
+        return 1
+    print("all per-tenant guarantees met across the fleet")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

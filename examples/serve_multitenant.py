@@ -65,7 +65,7 @@ def main() -> None:
     for name, snap in stats.per_channel.items():
         if snap.cumulative_ops:
             print(f"channel {name}: ops={snap.cumulative_ops} bytes(tokens)={snap.cumulative_bytes}")
-    cp.stop()
+    cp.close()
     if exporter is not None:
         exporter.stop()
     print("serve_multitenant OK")

@@ -1,10 +1,18 @@
 #!/usr/bin/env sh
 # Per-PR smoke: tier-1 (non-slow) tests + a ~2 s loopback bench so hot-path
-# perf regressions are visible in CI output on every PR.
+# perf regressions are visible in CI output on every PR, plus policy, fleet
+# and observability smokes.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export PYTHONPATH
+
+echo "== tracked-bytecode guard (no committed *.pyc) =="
+if git ls-files | grep -E '\.pyc$'; then
+    echo "FAIL: tracked *.pyc files (see above); git rm --cached them" >&2
+    exit 1
+fi
+echo "ok"
 
 echo "== tier-1 (non-slow) tests =="
 python -m pytest -x -q
@@ -17,3 +25,9 @@ python -m benchmarks.bench_policy_reaction --smoke --scrape
 
 echo "== observability smoke (exporter endpoint: policy version + p99 gauges) =="
 python scripts/scrape_smoke.py
+
+echo "== fleet smoke (3 stage processes over UDS: global fair-share guarantees + paio_stage_up) =="
+python examples/fleet_fairshare.py --stages 3 --seconds 5 --export 0
+
+echo "== fleet control-loop fan-out (8 UDS stages: concurrent >= 3x sequential) =="
+python -m benchmarks.bench_fleet_control --smoke

@@ -16,6 +16,7 @@ from .algorithms import (
     TailLatencyControl,
     TrainIOControl,
     max_min_fair_share,
+    split_flow_rate,
     tail_latency_allocation,
 )
 from .channel import Channel
@@ -42,6 +43,7 @@ from .control import (
     LocalStageHandle,
     RemoteStageHandle,
     StageServer,
+    StageState,
 )
 from .hashing import murmur3_32, murmur3_32_batch, token_for, token_for_batch
 from .instance import ArrayInstance, Instance, KVInstance, PosixInstance
@@ -106,6 +108,7 @@ __all__ = [
     "Result",
     "Stage",
     "StageServer",
+    "StageState",
     "StageStats",
     "StatsSnapshot",
     "TailLatencyControl",
@@ -122,6 +125,7 @@ __all__ = [
     "rule_from_wire",
     "rules_from_wire",
     "rules_to_wire",
+    "split_flow_rate",
     "tail_latency_allocation",
     "token_for",
     "token_for_batch",

@@ -174,6 +174,53 @@ def max_min_fair_share(demands: Sequence[float], capacity: float) -> List[float]
     return rates
 
 
+def split_flow_rate(
+    rate: float,
+    measured: Sequence[float],
+    headroom: float = 1.5,
+    floor_frac: float = 0.05,
+    active_threshold: float = 1.0,
+) -> List[float]:
+    """Split one logical flow's granted rate across its member instances
+    (the same flow living on several stages/processes — paper use case 2
+    with one SLO spanning multiple instances).
+
+    Members' *effective demands* come from their measured throughput with
+    ``headroom`` (a saturating member asks for more than it currently gets,
+    so allocations ramp geometrically toward the busy members), floored at
+    ``floor_frac × rate / n`` (an idle member keeps a probe allocation and
+    can come back without a cold start). Demands are satisfied max-min;
+    leftover goes to *active* members only (equally among all when every
+    member is idle) — an idle member must not strand bandwidth the flow's
+    guarantee depends on.
+
+    Invariant: returns non-negative rates summing to ``rate`` (n ≥ 1).
+    """
+    n = len(measured)
+    if n == 0:
+        return []
+    if n == 1:
+        return [float(rate)]
+    rate = float(rate)
+    floor = rate * floor_frac / n
+    demands = [max(float(m) * headroom, floor) for m in measured]
+    order = sorted(range(n), key=lambda i: demands[i])
+    rates = [0.0] * n
+    left = rate
+    for pos, i in enumerate(order):
+        fair = left / (n - pos)
+        rates[i] = min(demands[i], fair)
+        left -= rates[i]
+    if left > 1e-9:
+        active = [i for i in range(n) if measured[i] > active_threshold]
+        if not active:
+            active = list(range(n))
+        bonus = left / len(active)
+        for i in active:
+            rates[i] += bonus
+    return rates
+
+
 class FairShareControl(ControlAlgorithm):
     """Algorithm 2 over per-instance PAIO stages.
 
@@ -181,11 +228,19 @@ class FairShareControl(ControlAlgorithm):
     DRL-enforced channel; demands are set a priori by the resource manager
     (paper: SLURM/administrator). Instances register/leave dynamically —
     allocation reacts on the next loop iteration.
+
+    A flow may map to a **single** :class:`FlowSpec` or to a **list** of them
+    — the same logical flow living on several stages (the fleet topology: one
+    tenant served by many processes, one SLO). A multi-member flow's demand
+    is guaranteed in *aggregate*: its max-min granted rate is re-split across
+    the members every step by :func:`split_flow_rate`, following measured
+    per-member throughput, so a global bandwidth budget is enforced across
+    processes that never see each other.
     """
 
     def __init__(
         self,
-        flows: Dict[str, FlowSpec],
+        flows: Dict[str, Any],
         demands: Dict[str, float],
         max_bandwidth: float = 1024 * MiB,
         loop_interval: float = 0.1,
@@ -195,6 +250,12 @@ class FairShareControl(ControlAlgorithm):
         self.max_b = float(max_bandwidth)
         self.loop_interval = loop_interval
         self.last_rates: Dict[str, float] = {}
+        #: multi-member flows only: "<stage>/<channel>" → last member rate
+        self.last_member_rates: Dict[str, Dict[str, float]] = {}
+
+    @staticmethod
+    def _members(entry: Any) -> List[FlowSpec]:
+        return [entry] if isinstance(entry, FlowSpec) else list(entry)
 
     @classmethod
     def from_policy(
@@ -240,11 +301,26 @@ class FairShareControl(ControlAlgorithm):
         rates = max_min_fair_share([self.demands[n] for n in names], self.max_b)
         self.last_rates = dict(zip(names, rates))
         rules: Dict[str, List[EnforcementRule]] = {}
-        for name, rate in self.last_rates.items():
-            spec = self.flows[name]
+
+        def emit(spec: FlowSpec, rate: float) -> None:
             rules.setdefault(spec.stage, []).append(
                 EnforcementRule(channel=spec.channel, object_id=spec.object_id, state={"rate": rate})
             )
+
+        for name, rate in self.last_rates.items():
+            members = self._members(self.flows[name])
+            if len(members) == 1:
+                emit(members[0], rate)
+                continue
+            measured = []
+            for spec in members:
+                st = stats.get(spec.stage)
+                measured.append(st.throughput_of(spec.channel) if st else 0.0)
+            member_rates = split_flow_rate(rate, measured)
+            self.last_member_rates[name] = {}
+            for spec, member_rate in zip(members, member_rates):
+                emit(spec, member_rate)
+                self.last_member_rates[name][f"{spec.stage}/{spec.channel}"] = member_rate
         return rules
 
 

@@ -11,14 +11,16 @@ a feedback loop: ``collect → compute → enf_rules → sleep(loop_interval)``.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import socket
 import socketserver
 import threading
 import weakref
-from dataclasses import asdict
-from typing import Any, Dict, List, Optional
+from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
 
 from .clock import Clock, DEFAULT_CLOCK
 from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule, rule_from_wire
@@ -145,6 +147,8 @@ class RemoteStageHandle(StageHandle):
     """Control-plane side of the UDS transport."""
 
     def __init__(self, socket_path: str, timeout: float = 5.0) -> None:
+        self.socket_path = socket_path
+        self.timeout = timeout
         self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
         self._sock.settimeout(timeout)
         self._sock.connect(socket_path)
@@ -179,9 +183,54 @@ class RemoteStageHandle(StageHandle):
     def close(self) -> None:
         try:
             self._file.close()
+        except OSError:  # a dead peer can fail the buffered flush
+            pass
+        try:
             self._sock.close()
         except OSError:  # pragma: no cover
             pass
+
+
+# --------------------------------------------------------------------------- #
+# fleet state (liveness tracking per registered stage)                         #
+# --------------------------------------------------------------------------- #
+#: exception types treated as "the transport/stage died" (stage marked down)
+#: rather than control-plane bugs (propagated). socket.timeout is an OSError
+#: subclass; a half-written reply surfaces as json.JSONDecodeError.
+TRANSPORT_ERRORS = (ConnectionError, OSError, EOFError, TimeoutError, json.JSONDecodeError)
+
+
+@dataclass
+class StageState:
+    """Liveness + bookkeeping for one registered stage (control-plane side).
+
+    ``deferred`` holds rules destined for the stage while it is DOWN, keyed so
+    that repeated enforcement retunes of the same (channel, object) collapse
+    to the latest one; they are replayed in order on re-admission, so a
+    recovered stage converges to the rules it missed instead of silently
+    dropping them.
+    """
+
+    up: bool = True
+    failures: int = 0  #: up→down transitions observed
+    recoveries: int = 0  #: down→up transitions observed
+    down_since: float = 0.0  #: plane-clock time of the last up→down transition
+    last_error: str = ""
+    #: UDS path to reconnect on recovery probes (None → probe the live handle)
+    socket_path: Optional[str] = None
+    timeout: float = 5.0
+    last_probe: float = -float("inf")
+    deferred: Dict[Tuple, Any] = field(default_factory=dict)
+    _defer_seq: int = 0
+
+    def defer(self, rule: Any) -> None:
+        if isinstance(rule, EnforcementRule):
+            # latest state per target wins (dict insert keeps first position,
+            # so replay order still reflects first-submission order)
+            self.deferred[("enf", rule.channel, rule.object_id)] = rule
+        else:
+            self._defer_seq += 1
+            self.deferred[("seq", self._defer_seq)] = rule
 
 
 # --------------------------------------------------------------------------- #
@@ -219,6 +268,8 @@ class ControlPlane:
 
     #: loop cadence when neither an algorithm nor the constructor names one
     DEFAULT_LOOP_INTERVAL = 0.1
+    #: fan-out worker cap (fleet sizes beyond this queue, still correct)
+    MAX_FANOUT_WORKERS = 32
 
     def __init__(
         self,
@@ -226,6 +277,9 @@ class ControlPlane:
         clock: Clock = DEFAULT_CLOCK,
         loop_interval: Optional[float] = None,
         registry=None,
+        concurrent: bool = True,
+        stage_deadline: float = 1.0,
+        probe_interval: float = 0.5,
     ) -> None:
         self.algorithm = algorithm
         self._clock = clock
@@ -237,7 +291,21 @@ class ControlPlane:
         #: requested cadence; each algorithm *steps* at its own loop_interval
         #: with skipped ticks' stat windows accumulated (see _algorithm_stats)
         self.loop_interval = loop_interval
+        #: fan collect + rule shipping out over a thread pool (loop latency is
+        #: max(stage), not sum(stage)); False forces the sequential path —
+        #: useful for benchmarking and single-threaded determinism
+        self.concurrent = concurrent
+        #: per-stage budget (wall seconds) for one collect/ship round; a stage
+        #: exceeding it is marked DOWN for this tick and skipped
+        self.stage_deadline = stage_deadline
+        #: minimum plane-clock seconds between recovery probes of a DOWN stage
+        self.probe_interval = probe_interval
         self._handles: Dict[str, StageHandle] = {}
+        #: per-stage liveness + deferred-rule state; guarded by _fleet_lock
+        self._stage_states: Dict[str, StageState] = {}
+        self._fleet_lock = threading.Lock()
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._exporters: List[Any] = []  # exporters started via serve_metrics
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._policy_lock = threading.Lock()
@@ -250,13 +318,285 @@ class ControlPlane:
         self.keep_history = False
 
     def register(self, name: str, handle: StageHandle) -> None:
-        self._handles[name] = handle
+        """Register (or re-register) a stage. Re-registering a DOWN stage is
+        a *manual recovery*: the old handle is closed, the stage comes back
+        UP, and the rules it missed while down are replayed — same contract
+        as probe-driven re-admission."""
+        with self._fleet_lock:
+            old_handle = self._handles.get(name)
+            self._handles[name] = handle
+            state = self._stage_states.get(name)
+            if state is None:
+                state = self._stage_states[name] = StageState()
+            if not state.up:
+                state.recoveries += 1
+            state.up = True
+            state.socket_path = None
+            if isinstance(handle, RemoteStageHandle):
+                state.socket_path = handle.socket_path
+                state.timeout = handle.timeout
+            deferred = list(state.deferred.values())
+            state.deferred.clear()
+        if old_handle is not None and old_handle is not handle and hasattr(old_handle, "close"):
+            try:
+                old_handle.close()
+            except Exception:  # noqa: BLE001 — replaced handle may be dead
+                pass
+        self._publish_stage_up(name, True)
+        if deferred:
+            self._ship_rules(name, deferred)
 
     def register_stage(self, stage: Stage) -> None:
         self.register(stage.name, LocalStageHandle(stage))
 
-    def connect(self, name: str, socket_path: str) -> None:
-        self.register(name, RemoteStageHandle(socket_path))
+    def connect(self, name: str, socket_path: str, timeout: float = 5.0) -> None:
+        self.register(name, RemoteStageHandle(socket_path, timeout=timeout))
+
+    # -- fleet liveness ------------------------------------------------------
+    def _metric_registry(self):
+        if self._registry is not None:
+            return self._registry
+        from repro.telemetry import get_registry  # local: avoid import cycle
+
+        return get_registry()
+
+    def _publish_stage_up(self, name: str, up: bool) -> None:
+        registry = self._metric_registry()
+        key = f"stage.{name}.up"
+        registry.set_gauge(key, 1.0 if up else 0.0)
+        registry.describe(key, "paio_stage_up", {"stage": name})
+
+    def _mark_down(
+        self, name: str, exc: BaseException, handle: Optional[StageHandle] = None
+    ) -> None:
+        with self._fleet_lock:
+            state = self._stage_states.get(name)
+            if state is None or not state.up:
+                return  # already down (or unregistered): one transition only
+            if handle is not None and self._handles.get(name) is not handle:
+                # a STALE worker (blocked on a handle that has since been
+                # swapped by recovery) must not take the recovered stage down
+                return
+            state.up = False
+            state.failures += 1
+            state.down_since = self._clock.now()
+            state.last_probe = state.down_since
+            state.last_error = repr(exc)
+        registry = self._metric_registry()
+        self._publish_stage_up(name, False)
+        key = f"stage.{name}.down"
+        registry.inc(key)
+        registry.describe(key, "paio_stage_down", {"stage": name})
+
+    def _recover(self, name: str, fresh_handle: Optional[StageHandle]) -> None:
+        """Re-admit a DOWN stage: swap in the reconnected handle (UDS) and
+        replay the rules deferred while it was away, in submission order with
+        same-target enforcement retunes collapsed to the latest."""
+        with self._fleet_lock:
+            state = self._stage_states.get(name)
+            if state is None:
+                return
+            old_handle = self._handles.get(name)
+            if fresh_handle is not None:
+                self._handles[name] = fresh_handle
+            state.up = True
+            state.recoveries += 1
+            deferred = list(state.deferred.values())
+            state.deferred.clear()
+        if fresh_handle is not None and old_handle is not None and hasattr(old_handle, "close"):
+            try:
+                old_handle.close()
+            except Exception:  # noqa: BLE001 — the socket is already dead
+                pass
+        self._publish_stage_up(name, True)
+        if deferred:
+            self._ship_rules(name, deferred)
+
+    def _probe_down_stages(self) -> None:
+        """Attempt re-admission of DOWN stages (rate-limited per stage by
+        ``probe_interval`` on the plane clock). UDS stages reconnect on a
+        fresh socket — the old handle may hold a desynchronized stream —
+        and must answer ``stage_info`` before being re-admitted."""
+        now = self._clock.now()
+        probes: List[Tuple[str, StageState, Optional[StageHandle]]] = []
+        with self._fleet_lock:
+            for name, state in self._stage_states.items():
+                if state.up or (now - state.last_probe) < self.probe_interval:
+                    continue
+                state.last_probe = now
+                probes.append((name, state, self._handles.get(name)))
+        for name, state, handle in probes:
+            fresh: Optional[RemoteStageHandle] = None
+            try:
+                if state.socket_path is not None:
+                    fresh = RemoteStageHandle(state.socket_path, timeout=state.timeout)
+                    fresh.stage_info()
+                    self._recover(name, fresh)
+                elif handle is not None:
+                    handle.stage_info()
+                    self._recover(name, None)
+            except TRANSPORT_ERRORS as exc:
+                state.last_error = repr(exc)
+                if fresh is not None:
+                    fresh.close()
+
+    def stage_up(self, name: str) -> bool:
+        with self._fleet_lock:
+            state = self._stage_states.get(name)
+            return bool(state is not None and state.up)
+
+    def fleet_status(self) -> Dict[str, Dict[str, Any]]:
+        """Per-stage liveness snapshot: ``up``, transition counters, the last
+        transport error, and how many rules are deferred awaiting recovery."""
+        with self._fleet_lock:
+            return {
+                name: {
+                    "up": state.up,
+                    "failures": state.failures,
+                    "recoveries": state.recoveries,
+                    "down_since": state.down_since if not state.up else None,
+                    "last_error": state.last_error or None,
+                    "deferred_rules": len(state.deferred),
+                    "transport": "uds" if state.socket_path else "local",
+                }
+                for name, state in self._stage_states.items()
+            }
+
+    def _fanout_pool(self) -> ThreadPoolExecutor:
+        """The (lazily created, fixed-size) fan-out pool. A fixed worker cap
+        with on-demand thread spawning means the pool is never replaced, so
+        concurrent callers (the loop thread + an admin install) can never
+        race a shutdown-and-swap into a dead executor."""
+        with self._fleet_lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=self.MAX_FANOUT_WORKERS, thread_name_prefix="paio-cp-fanout"
+                )
+            return self._executor
+
+    def _note_stale_failure(self, name: str):
+        """Done-callback for futures abandoned by a deadline: a worker that
+        later dies with a NON-transport error (a control-plane bug —
+        _ship_rules swallows transport errors itself) must leave a trace, not
+        vanish into a dropped Future."""
+
+        def callback(fut) -> None:
+            if fut.cancelled():
+                return
+            exc = fut.exception()
+            if exc is not None:
+                with self._fleet_lock:
+                    state = self._stage_states.get(name)
+                    if state is not None:
+                        state.last_error = repr(exc)
+
+        return callback
+
+    def _fanout(self, tasks, op_name: str) -> Dict[str, Any]:
+        """Run ``tasks`` — ``(name, handle_or_None, thunk)`` triples — one
+        worker per stage, each wave of ``MAX_FANOUT_WORKERS`` given a
+        ``stage_deadline`` budget (stages beyond the cap queue behind the
+        first wave and must not be blamed for its latency). Returns
+        {name: thunk result}; a task that raises a transport error or blows
+        the deadline gets its stage marked DOWN (scoped to ``handle`` when
+        given, so stale workers cannot take down a recovered stage).
+        ``concurrent=False`` (or a single task) runs inline, in order."""
+        out: Dict[str, Any] = {}
+        if not self.concurrent or len(tasks) <= 1:
+            for name, handle, thunk in tasks:
+                try:
+                    out[name] = thunk()
+                except TRANSPORT_ERRORS as exc:
+                    self._mark_down(name, exc, handle)
+            return out
+        pool = self._fanout_pool()
+        futures = {pool.submit(thunk): (name, handle) for name, handle, thunk in tasks}
+        waves = -(-len(tasks) // self.MAX_FANOUT_WORKERS)
+        done, pending = futures_wait(futures, timeout=self.stage_deadline * waves)
+        for fut in done:
+            name, handle = futures[fut]
+            try:
+                out[name] = fut.result()
+            except TRANSPORT_ERRORS as exc:
+                self._mark_down(name, exc, handle)
+        for fut in pending:
+            fut.cancel()
+            name, handle = futures[fut]
+            self._mark_down(
+                name,
+                TimeoutError(f"{op_name} exceeded the {self.stage_deadline}s stage deadline"),
+                handle,
+            )
+            fut.add_done_callback(self._note_stale_failure(name))
+        return out
+
+    def _live_handles(self) -> List[Tuple[str, StageHandle]]:
+        with self._fleet_lock:
+            return [
+                (name, h)
+                for name, h in self._handles.items()
+                if self._stage_states[name].up
+            ]
+
+    def _collect_all(self) -> Dict[str, StageStats]:
+        """Collect stats from every UP stage — concurrently (one worker per
+        stage, ``stage_deadline`` budget) unless ``concurrent=False``. A stage
+        that errors or blows the deadline is marked DOWN and skipped; its
+        metrics vanish from this tick (trigger windows freeze rather than see
+        a stale constant), and the loop keeps controlling the rest."""
+        self._probe_down_stages()
+        return self._fanout(
+            [(name, h, h.collect) for name, h in self._live_handles()], "collect"
+        )
+
+    def _defer(self, name: str, rule: Any) -> None:
+        with self._fleet_lock:
+            state = self._stage_states.get(name)
+            if state is not None:
+                state.defer(rule)
+
+    def _ship_rules(self, name: str, rules: List[Any]) -> List[Any]:
+        """Apply ``rules`` to one stage in order; returns the applied subset.
+        Rules for a DOWN stage are deferred (not dropped); a transport error
+        mid-ship marks the stage down and defers the remainder."""
+        applied: List[Any] = []
+        for rule in rules:
+            # lock-free reads (GIL-atomic dict gets): a stale view at worst
+            # tries a dead handle (raises → down-mark) or defers one rule
+            # early — both converge on the next probe/replay
+            handle = self._handles.get(name)
+            state = self._stage_states.get(name)
+            if handle is None:
+                continue  # unknown stage: nothing will ever apply this
+            if state is not None and not state.up:
+                self._defer(name, rule)
+                continue
+            try:
+                self._apply_rule(handle, rule)
+                applied.append(rule)
+            except TRANSPORT_ERRORS as exc:
+                self._mark_down(name, exc, handle)
+                self._defer(name, rule)
+        return applied
+
+    def _ship_fanout(self, rules_by_stage: Dict[str, List[Any]]) -> Dict[str, List[Any]]:
+        """Ship each stage's rule list — stages in parallel, rules within one
+        stage in order. Returns {stage: applied rules}. A stage blowing the
+        deadline is marked down; its worker keeps draining (deferring once
+        the down-mark lands) — this tick just stops waiting for it."""
+        items = [(n, rs) for n, rs in rules_by_stage.items() if rs]
+        if not items:
+            return {}
+        out = self._fanout(
+            [
+                (name, None, functools.partial(self._ship_rules, name, rules))
+                for name, rules in items
+            ],
+            "rule ship",
+        )
+        for name, _ in items:
+            out.setdefault(name, [])
+        return out
 
     # -- policy lifecycle ---------------------------------------------------
     @property
@@ -306,7 +646,24 @@ class ControlPlane:
             raise ValueError(
                 f"policy {policy.name!r} already installed (use replace=True to update atomically)"
             )
-        infos = {name: h.stage_info() for name, h in self._handles.items()}
+        infos = self._stage_infos()
+        if any(f.is_global() for f in policy.flows):
+            # a global flow binds to the stages visible NOW; compiling while
+            # part of the fleet is DOWN would silently exclude those stages
+            # from the flow (and from its aggregate SLO) forever — fail
+            # loudly instead, like a named-stage flow would
+            with self._fleet_lock:
+                down = sorted(
+                    n for n, st in self._stage_states.items() if not st.up
+                )
+            if down:
+                from repro.policy import PolicyError
+
+                raise PolicyError(
+                    f"policy {policy.name!r} has 'scope: global' flows but stages "
+                    f"{down} are DOWN — installing now would silently exclude them "
+                    "from the fleet; wait for re-admission or remove the stages"
+                )
         current = runtime.get(policy.name) if replace else None
         if current is not None:
             # compile against the stages as they'd look without the old
@@ -327,6 +684,15 @@ class ControlPlane:
         if compiled.algorithm is not None:
             compiled.algorithm.setup(self._handles)
         return policy.name
+
+    def _stage_infos(self) -> Dict[str, Dict[str, Any]]:
+        """``stage_info()`` from every UP stage, fanned out. A stage that
+        errors here is marked down and excluded — compiling a policy that
+        names it then fails with an unknown-stage error (install is an
+        explicit admin action; it must not block on a dead socket)."""
+        return self._fanout(
+            [(name, h, h.stage_info) for name, h in self._live_handles()], "stage_info"
+        )
 
     def _install_fresh(self, runtime, compiled) -> None:
         """First-time install: apply the full install program, rolling back
@@ -434,24 +800,37 @@ class ControlPlane:
         runtime = self.policy_runtime
         with self._policy_lock:
             compiled, fired = runtime.remove(name)
+            merged: Dict[str, List[Any]] = {}
             for rules_by_stage in [t.release_rules for t in fired] + [compiled.teardown]:
                 for stage_name, rules in rules_by_stage.items():
-                    handle = self._handles.get(stage_name)
-                    if handle is None:
-                        continue
-                    for rule in rules:
-                        try:
-                            self._apply_rule(handle, rule)
-                        except ConnectionError:  # stage already gone
-                            break
+                    merged.setdefault(stage_name, []).extend(rules)
+            # down stages get their teardown DEFERRED (replayed on recovery),
+            # not dropped — a recovered stage must not keep enforcing a
+            # policy that no longer exists
+            self._ship_fanout(merged)
 
     def list_policies(self) -> List[Dict[str, Any]]:
         """Installed-policy summaries, including each policy's monotonic
         ``version`` (bumped by every install or atomic replace) and live
-        trigger states — identical over both transports."""
+        trigger states — identical over both transports. Each summary also
+        carries fleet accounting: ``down_stages`` (stages the policy touches
+        that are currently DOWN) and ``deferred_rules`` (rules destined for
+        those stages, queued for replay on recovery) — rules a down stage
+        missed are visible here, never silently dropped."""
         if self._policy_runtime is None:
             return []
-        return self._policy_runtime.list()
+        out = self._policy_runtime.list()
+        with self._fleet_lock:
+            down = {
+                name: len(state.deferred)
+                for name, state in self._stage_states.items()
+                if not state.up
+            }
+        for summary in out:
+            down_stages = sorted(set(summary.get("stages", ())) & set(down))
+            summary["down_stages"] = down_stages
+            summary["deferred_rules"] = sum(down[name] for name in down_stages)
+        return out
 
     # -- observability ------------------------------------------------------
     def serve_metrics(self, port: int = 0, host: str = "127.0.0.1"):
@@ -462,7 +841,11 @@ class ControlPlane:
         bound port off ``.port`` (``port=0`` binds an ephemeral one)."""
         from repro.telemetry.exporter import MetricsExporter
 
-        return MetricsExporter(registry=self.policy_runtime.registry, host=host, port=port).start()
+        exporter = MetricsExporter(
+            registry=self.policy_runtime.registry, host=host, port=port
+        ).start()
+        self._exporters.append(exporter)  # torn down by close()
+        return exporter
 
     # -- single iteration (usable synchronously from tests/benchmarks) -----
     def _algorithms(self) -> List[ControlAlgorithm]:
@@ -514,43 +897,39 @@ class ControlPlane:
 
     def run_once(self, gated: bool = False) -> Dict[str, List[EnforcementRule]]:
         now = self._clock.now()
-        stats = {name: h.collect() for name, h in self._handles.items()}
+        stats = self._collect_all()
         if self.keep_history:
             self.history.append(stats)
-        merged: Dict[str, List[EnforcementRule]] = {}
         # objects held by FIRED policy triggers: algorithm tuning is suppressed
         # there until the trigger releases, so protective actions stick
         pinned = (
             self._policy_runtime.pinned_targets() if self._policy_runtime is not None else ()
         )
+        # all algorithms' rules are gathered per stage first, then shipped in
+        # one fan-out (stages in parallel, per-stage order preserved), so the
+        # tick's rule latency is max(stage), not sum over algorithms × stages
+        to_ship: Dict[str, List[EnforcementRule]] = {}
         for algorithm in self._algorithms():
             step_stats = self._algorithm_stats(algorithm, stats, now, gated)
             if step_stats is None:
                 continue
             for stage_name, stage_rules in algorithm.step(step_stats).items():
-                handle = self._handles.get(stage_name)
-                if handle is None:
-                    continue
-                applied = []
                 for rule in stage_rules:
                     if pinned and (stage_name, rule.channel, rule.object_id) in pinned:
                         continue
-                    handle.enf_rule(rule)
-                    applied.append(rule)
-                merged.setdefault(stage_name, []).extend(applied)
+                    to_ship.setdefault(stage_name, []).append(rule)
+        merged = self._ship_fanout(to_ship)
         if self._policy_runtime is not None:
             # trigger evaluation + rule application run under the policy
             # lock: a concurrent install_policy(replace=True) must not
             # interleave with an old trigger firing/releasing, or its rules
             # could land AFTER the delta and override the new version
             with self._policy_lock:
+                trigger_rules: Dict[str, List[Any]] = {}
                 for event in self._policy_runtime.on_collect(self._clock.now(), stats):
                     for stage_name, stage_rules in event.rules.items():
-                        handle = self._handles.get(stage_name)
-                        if handle is None:
-                            continue
-                        for rule in stage_rules:
-                            self._apply_rule(handle, rule)
+                        trigger_rules.setdefault(stage_name, []).extend(stage_rules)
+                self._ship_fanout(trigger_rules)
                 # gauges publish only after the events' rules landed: a
                 # scraped paio_trigger_fired 1 means enforced, not just latched
                 self._policy_runtime.publish_trigger_states()
@@ -583,7 +962,10 @@ class ControlPlane:
         while not self._stop.is_set():
             try:
                 self.run_once(gated=True)
-            except ConnectionError:  # a stage died: keep controlling the rest
+            except TRANSPORT_ERRORS:
+                # per-stage errors are contained inside run_once (the failing
+                # stage is marked down); this guards races like a handle
+                # swapped mid-tick — the loop itself must never wedge
                 pass
             self._stop.wait(self.effective_loop_interval())
 
@@ -594,10 +976,41 @@ class ControlPlane:
             self._thread = None
 
     def close(self) -> None:
-        """Tear the plane down for good: stop the loop and release every
-        name it published into the (possibly shared, process-wide) metric
-        registry — a discarded plane must not leave its stage gauges, policy
-        versions and trigger states on the exporter forever."""
+        """Tear the plane down for good: stop the loop, shut the fan-out
+        pool and any exporters started via :meth:`serve_metrics`, close
+        remote handles, and release every name this plane published into the
+        (possibly shared, process-wide) metric registry — a discarded plane
+        must not leave its stage gauges, liveness state, policy versions and
+        trigger states on the exporter forever. Also usable as a context
+        manager: ``with ControlPlane() as cp: ...``."""
         self.stop()
+        if self._executor is not None:
+            self._executor.shutdown(wait=False, cancel_futures=True)
+            self._executor = None
+        for exporter in self._exporters:
+            try:
+                exporter.stop()
+            except Exception:  # noqa: BLE001 — teardown is best-effort
+                pass
+        self._exporters = []
         if self._policy_runtime is not None:
             self._policy_runtime.close()
+        with self._fleet_lock:
+            handles = list(self._handles.values())
+            names = list(self._stage_states)
+        registry = self._metric_registry()
+        for name in names:
+            registry.unregister(f"stage.{name}.up")
+            registry.unregister(f"stage.{name}.down")
+        for handle in handles:
+            if hasattr(handle, "close"):
+                try:
+                    handle.close()
+                except Exception:  # noqa: BLE001 — socket may already be dead
+                    pass
+
+    def __enter__(self) -> "ControlPlane":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

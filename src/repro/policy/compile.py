@@ -51,13 +51,26 @@ METRIC_ALIASES = {
 DEMOTE_FACTOR = 10.0
 
 
+#: placeholder member stage for OFFLINE compiles of ``scope: global`` flows
+#: (no registered stages to enumerate) — validation-only output, never
+#: installed: ControlPlane.install_policy always compiles against live infos
+UNRESOLVED_STAGE = "*"
+
+
 @dataclass
 class _FlowBinding:
-    """A flow resolved to its physical location + DRL provisioning."""
+    """A flow resolved to its physical location(s) + DRL provisioning.
+
+    ``member_stages`` is the list of stages the flow is instantiated on: one
+    entry for a stage-scoped flow, every registered stage for ``scope:
+    global`` (same channel name + objects on each). ``stage`` stays the
+    primary (first) member for error messages and single-member paths.
+    """
 
     flow: Flow
     stage: str
     channel: str
+    member_stages: List[str] = field(default_factory=list)
     drl_object_id: Optional[str] = None
     provisioned_rate: Optional[float] = None
     demote_rate: Optional[float] = None
@@ -147,8 +160,25 @@ def _bind_flows(
 ) -> Dict[str, _FlowBinding]:
     bindings: Dict[str, _FlowBinding] = {}
     for flow in policy.flows:
-        stage = _resolve_stage(policy, flow.stage, infos, default_stage, f"flow {flow.name!r}")
-        b = _FlowBinding(flow=flow, stage=stage, channel=flow.channel_name())
+        if flow.is_global():
+            if infos is None:
+                # offline compile: structure-check against a placeholder
+                # member; existence resolves when installed against live infos
+                members = [UNRESOLVED_STAGE]
+            else:
+                members = sorted(infos)
+                if not members:
+                    raise PolicyError(
+                        f"flow {flow.name!r}: 'scope: global' needs at least one "
+                        "registered stage"
+                    )
+        else:
+            members = [
+                _resolve_stage(policy, flow.stage, infos, default_stage, f"flow {flow.name!r}")
+            ]
+        b = _FlowBinding(
+            flow=flow, stage=members[0], channel=flow.channel_name(), member_stages=members
+        )
         for obj in flow.objects:
             if obj.kind not in OBJECT_KINDS:
                 raise PolicyError(
@@ -192,9 +222,16 @@ def _dry_construct(flow: Flow, obj: ObjectSpec) -> None:
 def _lower_flow(
     cp: CompiledPolicy, b: _FlowBinding, infos: Optional[Mapping[str, Any]]
 ) -> None:
-    install = cp.install.setdefault(b.stage, [])
+    for stage in b.member_stages:
+        _lower_flow_on(cp, b, stage, infos)
+
+
+def _lower_flow_on(
+    cp: CompiledPolicy, b: _FlowBinding, stage: str, infos: Optional[Mapping[str, Any]]
+) -> None:
+    install = cp.install.setdefault(stage, [])
     teardown: List[Any] = []
-    existing = (infos or {}).get(b.stage, {}).get("channels", {}) if infos is not None else {}
+    existing = (infos or {}).get(stage, {}).get("channels", {}) if infos is not None else {}
     channel_exists = b.channel in existing
 
     if not channel_exists:
@@ -230,7 +267,7 @@ def _lower_flow(
     )
     if not channel_exists:
         teardown.append(HousekeepingRule(op="remove_channel", channel=b.channel))
-    cp.teardown.setdefault(b.stage, []).extend(teardown)
+    cp.teardown.setdefault(stage, []).extend(teardown)
 
 
 # --------------------------------------------------------------------------- #
@@ -262,16 +299,27 @@ def _lower_action(
     action: Action,
     what: str,
     infos: Optional[Mapping[str, Any]],
-) -> Tuple[str, List[Any]]:
-    """Returns (stage, rules) for one action."""
+) -> List[Tuple[str, List[Any]]]:
+    """Returns ``[(stage, rules), ...]`` for one action — one entry per
+    member stage of the target flow, so an action against a ``scope:
+    global`` flow lands on every instance."""
     if action.op == "set":
         b = _resolve_action_flow(policy, bindings, action.flow, what)
         state = action.state_dict()
         if not state:
             raise PolicyError(f"{what}: 'set' action with empty state")
-        _check_object(infos, b, action.object_id, what)
-        return b.stage, [
-            EnforcementRule(channel=b.channel, object_id=action.object_id, state=state)
+        return [
+            (
+                stage,
+                [
+                    EnforcementRule(
+                        channel=b.channel,
+                        object_id=_check_object(infos, b, stage, action.object_id, what),
+                        state=state,
+                    )
+                ],
+            )
+            for stage in b.member_stages
         ]
     if action.op in ("demote", "promote"):
         b = _resolve_action_flow(policy, bindings, action.flow, what)
@@ -281,27 +329,33 @@ def _lower_action(
                 "(add 'limit bandwidth …' to the flow)"
             )
         rate = b.demote_rate if action.op == "demote" else b.provisioned_rate
-        return b.stage, [
-            EnforcementRule(channel=b.channel, object_id=b.drl_object_id, state={"rate": rate})
+        return [
+            (
+                stage,
+                [EnforcementRule(channel=b.channel, object_id=b.drl_object_id, state={"rate": rate})],
+            )
+            for stage in b.member_stages
         ]
     raise PolicyError(f"{what}: unknown action op {action.op!r}")
 
 
 def _check_object(
-    infos: Optional[Mapping[str, Any]], b: _FlowBinding, object_id: str, what: str
-) -> None:
+    infos: Optional[Mapping[str, Any]], b: _FlowBinding, stage: str, object_id: str, what: str
+) -> str:
     """An action's target object must be provisioned by the policy or already
-    live on the stage (when stage info is available to check)."""
+    live on the stage (when stage info is available to check). Returns the
+    object id for inline use."""
     if any(o.object_id == object_id for o in b.flow.objects):
-        return
+        return object_id
     if infos is None:
-        return
-    have = infos.get(b.stage, {}).get("channels", {}).get(b.channel, {}).get("objects", {})
+        return object_id
+    have = infos.get(stage, {}).get("channels", {}).get(b.channel, {}).get("objects", {})
     if object_id not in have:
         raise PolicyError(
             f"{what}: object {object_id!r} not provisioned on flow {b.flow.name!r} "
-            f"and not present on stage {b.stage!r} channel {b.channel!r}"
+            f"and not present on stage {stage!r} channel {b.channel!r}"
         )
+    return object_id
 
 
 # --------------------------------------------------------------------------- #
@@ -325,6 +379,12 @@ def _resolve_metric_key(
         )
     if cond.flow is not None:
         b = _resolve_action_flow(policy, bindings, cond.flow, what)
+        if len(b.member_stages) > 1:
+            raise PolicyError(
+                f"{what}: builtin metric {cond.metric!r} on global flow "
+                f"{b.flow.name!r} is ambiguous across its member stages; "
+                "use a stage-scoped flow or a dotted registry metric"
+            )
         return f"{b.stage}.{b.channel}.{canon}"
     stage = _resolve_stage(policy, None, infos, default_stage, what)
     return f"{stage}.{canon}"
@@ -342,11 +402,11 @@ def _lower_trigger(
     fire: Dict[str, List[Any]] = {}
     release: Dict[str, List[Any]] = {}
     for action in spec.do:
-        stage, rules = _lower_action(policy, bindings, action, what, infos)
-        fire.setdefault(stage, []).extend(rules)
+        for stage, rules in _lower_action(policy, bindings, action, what, infos):
+            fire.setdefault(stage, []).extend(rules)
     for action in spec.release:
-        stage, rules = _lower_action(policy, bindings, action, what, infos)
-        release.setdefault(stage, []).extend(rules)
+        for stage, rules in _lower_action(policy, bindings, action, what, infos):
+            release.setdefault(stage, []).extend(rules)
     return CompiledTrigger(
         policy=policy.name,
         name=spec.name,
@@ -366,12 +426,19 @@ def _lower_trigger(
 # objectives                                                                   #
 # --------------------------------------------------------------------------- #
 def _flow_specs(bindings: Dict[str, _FlowBinding]) -> Dict[str, Any]:
+    """Flow name → FlowSpec (stage-scoped) or list of FlowSpecs (global:
+    one member per registered stage — FairShareControl splits the flow's
+    granted rate across them every step)."""
     from repro.core.algorithms import FlowSpec
 
-    return {
-        name: FlowSpec(stage=b.stage, channel=b.channel, object_id=b.drl_object_id or "0")
-        for name, b in bindings.items()
-    }
+    out: Dict[str, Any] = {}
+    for name, b in bindings.items():
+        specs = [
+            FlowSpec(stage=stage, channel=b.channel, object_id=b.drl_object_id or "0")
+            for stage in b.member_stages
+        ]
+        out[name] = specs[0] if len(specs) == 1 else specs
+    return out
 
 
 def _lower_objective(policy: Policy, bindings: Dict[str, _FlowBinding]):
@@ -411,6 +478,11 @@ def _lower_objective(policy: Policy, bindings: Dict[str, _FlowBinding]):
             ref = params.get(role)
             if ref is None or ref not in bindings:
                 raise PolicyError(f"{what}: needs '{role}' naming a declared flow")
+            if isinstance(flows[ref], list):
+                raise PolicyError(
+                    f"{what}: role '{role}' cannot use global flow {ref!r} "
+                    "(tail-latency roles are per-stage; only fairshare demands span stages)"
+                )
             roles[role] = flows[ref]
         ln_refs = params.get("ln") or []
         if isinstance(ln_refs, str):
@@ -418,6 +490,11 @@ def _lower_objective(policy: Policy, bindings: Dict[str, _FlowBinding]):
         for r in ln_refs:
             if r not in bindings:
                 raise PolicyError(f"{what}: 'ln' names undeclared flow {r!r}")
+            if isinstance(flows[r], list):
+                raise PolicyError(
+                    f"{what}: 'ln' cannot use global flow {r!r} "
+                    "(tail-latency roles are per-stage; only fairshare demands span stages)"
+                )
         capacity = params.get("capacity") or params.get("kvs_bandwidth")
         if capacity is None:
             raise PolicyError(f"{what}: needs 'capacity'")

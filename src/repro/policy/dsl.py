@@ -136,19 +136,30 @@ class ObjectSpec:
 
 @dataclass(frozen=True)
 class Flow:
-    """A named flow: classifier match → dedicated channel + objects."""
+    """A named flow: classifier match → dedicated channel + objects.
+
+    ``scope`` is ``"stage"`` (default: the flow lives on exactly one stage)
+    or ``"global"`` — the flow is instantiated on **every** registered stage
+    (one same-named channel per stage, same objects, same match), and a
+    fair-share objective naming it guarantees its demand in *aggregate*
+    across those instances (the fleet topology: many processes, one SLO).
+    """
 
     name: str
     match: Tuple[Tuple[str, Any], ...]
     stage: Optional[str] = None  # None → the policy's default stage
     channel: Optional[str] = None  # None → flow name
     objects: Tuple[ObjectSpec, ...] = ()
+    scope: str = "stage"
 
     def match_dict(self) -> Dict[str, Any]:
         return dict(self.match)
 
     def channel_name(self) -> str:
         return self.channel or self.name
+
+    def is_global(self) -> bool:
+        return self.scope == "global"
 
 
 @dataclass(frozen=True)
@@ -316,6 +327,16 @@ def policy_from_dict(d: Mapping[str, Any]) -> Policy:
         if fd["name"] in seen:
             raise PolicyError(f"duplicate flow name {fd['name']!r}")
         seen.add(fd["name"])
+        scope = str(fd.get("scope", "stage"))
+        if scope not in ("stage", "global"):
+            raise PolicyError(
+                f"flow {fd['name']!r}: unknown scope {scope!r} (known: stage, global)"
+            )
+        if scope == "global" and fd.get("stage"):
+            raise PolicyError(
+                f"flow {fd['name']!r}: 'scope: global' and an explicit 'stage' are "
+                "mutually exclusive (a global flow spans every registered stage)"
+            )
         flows.append(
             Flow(
                 name=str(fd["name"]),
@@ -323,6 +344,7 @@ def policy_from_dict(d: Mapping[str, Any]) -> Policy:
                 stage=fd.get("stage"),
                 channel=fd.get("channel"),
                 objects=tuple(_object_from_dict(o) for o in fd.get("objects") or ()),
+                scope=scope,
             )
         )
     objective = None
@@ -353,6 +375,7 @@ def policy_to_dict(p: Policy) -> Dict[str, Any]:
                 "match": f.match_dict(),
                 **({"stage": f.stage} if f.stage else {}),
                 **({"channel": f.channel} if f.channel else {}),
+                **({"scope": f.scope} if f.scope != "stage" else {}),
                 "objects": [
                     {"kind": o.kind, "id": o.object_id, "params": o.params_dict()}
                     for o in f.objects
@@ -499,7 +522,10 @@ def _parse_text_line(line: str, d: Dict[str, Any]) -> None:
             if i + 1 >= len(toks):
                 raise PolicyError(f"'as' needs a name: {line!r}")
             alias = toks[i + 1]
-            toks = toks[:i]
+            toks = toks[:i] + toks[i + 2:]
+        # bare 'global' qualifier: the flow spans every registered stage
+        scope = "global" if "global" in toks else "stage"
+        toks = [t for t in toks if t != "global"]
         match: Dict[str, Any] = {}
         for kv in toks:
             if "=" not in kv:
@@ -523,9 +549,10 @@ def _parse_text_line(line: str, d: Dict[str, Any]) -> None:
                     f"'for' statements only provision their own flow (got {a_text!r}); "
                     "use 'when' for runtime actions"
                 )
-        d["flows"].append(
-            {"name": flow_name, "match": dict(canon), "objects": objects}
-        )
+        flow_d: Dict[str, Any] = {"name": flow_name, "match": dict(canon), "objects": objects}
+        if scope != "stage":
+            flow_d["scope"] = scope
+        d["flows"].append(flow_d)
         return
     if line.startswith("when "):
         head, _, tail = line.partition(":")

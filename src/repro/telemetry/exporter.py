@@ -8,7 +8,7 @@ Two consumption paths, same rendering:
   ``/metrics`` (and ``/``), so policies, stage statistics and benchmarks are
   observable from *outside* the process with nothing but ``curl``.
 
-Naming scheme (documented in README § Observability):
+Naming scheme (full table in docs/operations.md § Metric naming):
 
 * described metrics render under their export family + labels, e.g.
   ``paio_channel_wait_p99_ms{stage="serve",channel="tenant_a"}``;

@@ -1,0 +1,541 @@
+"""Fleet-scale control plane: concurrent fan-out, stage liveness (down-mark,
+deferred rules, re-admission), cross-stage objectives (``scope: global`` flows
++ multi-member fair share), and ControlPlane.close()/context-manager teardown.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ControlPlane,
+    FairShareControl,
+    FlowSpec,
+    HousekeepingRule,
+    Stage,
+    StageServer,
+    VirtualClock,
+    split_flow_rate,
+)
+from repro.policy import PolicyError, compile_policy, load_policy
+from repro.telemetry import get_registry
+
+MiB = float(1 << 20)
+
+
+# --------------------------------------------------------------------------- #
+# split_flow_rate (pure allocation)                                            #
+# --------------------------------------------------------------------------- #
+class TestSplitFlowRate:
+    def test_empty_and_single(self):
+        assert split_flow_rate(100.0, []) == []
+        assert split_flow_rate(100.0, [55.0]) == [100.0]
+
+    def test_conserves_rate(self):
+        for measured in ([0.0, 0.0, 0.0], [10.0, 90.0], [5.0, 5.0, 200.0, 0.0]):
+            rates = split_flow_rate(100.0, measured)
+            assert sum(rates) == pytest.approx(100.0)
+            assert all(r >= 0 for r in rates)
+
+    def test_equal_measured_split_equally(self):
+        rates = split_flow_rate(90.0, [30.0, 30.0, 30.0])
+        assert rates == pytest.approx([30.0, 30.0, 30.0])
+
+    def test_idle_member_does_not_strand_bandwidth(self):
+        # one idle member: its floor allocation stays tiny, the leftover goes
+        # to the ACTIVE members (not equally back to the idle one)
+        rates = split_flow_rate(100.0, [60.0, 60.0, 0.0])
+        assert rates[2] < 5.0
+        assert rates[0] == pytest.approx(rates[1])
+        assert rates[0] > 45.0
+
+    def test_all_idle_splits_equally(self):
+        rates = split_flow_rate(100.0, [0.0, 0.0])
+        assert rates == pytest.approx([50.0, 50.0])
+
+    def test_busy_member_gets_more(self):
+        rates = split_flow_rate(100.0, [80.0, 10.0])
+        assert rates[0] > rates[1]
+        assert sum(rates) == pytest.approx(100.0)
+
+
+# --------------------------------------------------------------------------- #
+# DSL: scope: global                                                           #
+# --------------------------------------------------------------------------- #
+GLOBAL_TEXT = """
+policy fleet
+for tenant=a global as A: limit bandwidth 60MiB/s
+for tenant=b global as B: limit bandwidth 40MiB/s
+objective fairshare capacity 100MiB/s demands A=60MiB/s,B=40MiB/s
+"""
+
+
+class TestGlobalScope:
+    def test_text_and_dict_roundtrip(self):
+        from repro.policy import policy_from_dict, policy_to_dict
+
+        p = load_policy(GLOBAL_TEXT)
+        assert [f.scope for f in p.flows] == ["global", "global"]
+        assert policy_from_dict(policy_to_dict(p)).flows[0].is_global()
+
+    def test_scope_and_stage_mutually_exclusive(self):
+        with pytest.raises(PolicyError, match="mutually exclusive"):
+            load_policy(
+                {
+                    "policy": "p",
+                    "flows": [
+                        {"name": "f", "scope": "global", "stage": "s1", "match": {"tenant": "x"}}
+                    ],
+                }
+            )
+
+    def test_unknown_scope_rejected(self):
+        with pytest.raises(PolicyError, match="unknown scope"):
+            load_policy(
+                {"policy": "p", "flows": [{"name": "f", "scope": "galactic", "match": {"tenant": "x"}}]}
+            )
+
+    def test_compiles_onto_every_registered_stage(self):
+        infos = {"s1": {"channels": {}}, "s2": {"channels": {}}, "s3": {"channels": {}}}
+        cp = compile_policy(load_policy(GLOBAL_TEXT), infos)
+        assert cp.stages() == ["s1", "s2", "s3"]
+        algo = cp.algorithm
+        assert isinstance(algo, FairShareControl)
+        assert [m.stage for m in algo.flows["A"]] == ["s1", "s2", "s3"]
+        # one channel + DRL + route per member stage
+        for stage in infos:
+            ops = [r for r in cp.install[stage] if isinstance(r, HousekeepingRule)]
+            assert {(r.op, r.channel) for r in ops} >= {("create_channel", "A"), ("create_channel", "B")}
+
+    def test_offline_compile_uses_placeholder(self):
+        cp = compile_policy(load_policy(GLOBAL_TEXT))
+        assert cp.stages() == ["*"]
+
+    def test_global_needs_a_registered_stage(self):
+        with pytest.raises(PolicyError, match="at least one registered stage"):
+            compile_policy(load_policy(GLOBAL_TEXT), {})
+
+    def test_trigger_metric_on_global_flow_rejected(self):
+        text = GLOBAL_TEXT + "when throughput@A > 100: demote A\n"
+        with pytest.raises(PolicyError, match="ambiguous across its member stages"):
+            compile_policy(load_policy(text), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+
+    def test_trigger_action_on_global_flow_lands_on_all_members(self):
+        # dotted (registry) metric avoids the builtin-metric ambiguity; the
+        # demote action must fan out to every member stage
+        text = GLOBAL_TEXT + "when fleet.pressure > 5: demote A\n"
+        cp = compile_policy(load_policy(text), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+        (trig,) = cp.triggers
+        assert sorted(trig.fire_rules) == ["s1", "s2"]
+        assert sorted(trig.release_rules) == ["s1", "s2"]
+
+    def test_tail_latency_roles_cannot_be_global(self):
+        policy = {
+            "policy": "p",
+            "flows": [
+                {"name": "fg", "scope": "global", "match": {"request_context": "fg"},
+                 "objects": [{"kind": "drl", "params": {"rate": "10MiB/s"}}]},
+                {"name": "fl", "stage": "s1", "match": {"request_context": "fl"},
+                 "objects": [{"kind": "drl", "params": {"rate": "10MiB/s"}}]},
+                {"name": "l0", "stage": "s1", "match": {"request_context": "l0"},
+                 "objects": [{"kind": "drl", "params": {"rate": "10MiB/s"}}]},
+            ],
+            "objective": {"kind": "tail_latency", "fg": "fg", "flush": "fl", "l0": "l0",
+                          "capacity": "100MiB/s"},
+        }
+        with pytest.raises(PolicyError, match="cannot use global flow"):
+            compile_policy(load_policy(policy), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+
+
+# --------------------------------------------------------------------------- #
+# multi-member fair share end-to-end (local stages, virtual clock)             #
+# --------------------------------------------------------------------------- #
+GLOBAL_POLICY = {
+    "policy": "fleet",
+    "flows": [
+        {"name": "tenant_a", "scope": "global", "match": {"tenant": "a"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "60MiB/s"}}]},
+        {"name": "tenant_b", "scope": "global", "match": {"tenant": "b"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "40MiB/s"}}]},
+    ],
+    "objective": {
+        "kind": "fairshare", "capacity": "100MiB/s", "loop_interval": "100ms",
+        "demands": {"tenant_a": "60MiB/s", "tenant_b": "40MiB/s"},
+    },
+}
+
+
+class TestGlobalFairShare:
+    def _fleet(self, n=2):
+        clk = VirtualClock()
+        stages = [Stage(f"s{i+1}", clock=clk) for i in range(n)]
+        cp = ControlPlane(clock=clk)
+        for st in stages:
+            cp.register_stage(st)
+        cp.install_policy(GLOBAL_POLICY)
+        return clk, stages, cp
+
+    def test_install_provisions_every_stage(self):
+        _, stages, cp = self._fleet()
+        for st in stages:
+            assert st.channel("tenant_a") is not None
+            assert st.channel("tenant_b") is not None
+            assert st.channel("tenant_a").get_object("0") is not None
+        (summary,) = cp.list_policies()
+        assert summary["stages"] == ["s1", "s2"]
+        assert summary["down_stages"] == [] and summary["deferred_rules"] == 0
+
+    def test_aggregate_grant_split_across_members(self):
+        clk, (s1, s2), cp = self._fleet()
+        # symmetric member traffic → near-equal split; aggregates must equal
+        # the max-min grants (demands sum to capacity → grant == demand)
+        for st in (s1, s2):
+            st.channel("tenant_a").stats.record(int(30 * MiB))
+            st.channel("tenant_b").stats.record(int(20 * MiB))
+        clk.sleep(1.0)
+        cp.run_once()
+        rate_a = sum(st.channel("tenant_a").get_object("0").rate for st in (s1, s2))
+        rate_b = sum(st.channel("tenant_b").get_object("0").rate for st in (s1, s2))
+        assert rate_a == pytest.approx(60 * MiB, rel=1e-6)
+        assert rate_b == pytest.approx(40 * MiB, rel=1e-6)
+        members = cp.policy_runtime.get("fleet").algorithm.last_member_rates["tenant_a"]
+        assert members["s1/tenant_a"] == pytest.approx(members["s2/tenant_a"], rel=0.01)
+
+    def test_asymmetric_members_follow_measured_demand(self):
+        clk, (s1, s2), cp = self._fleet()
+        s1.channel("tenant_a").stats.record(int(50 * MiB))
+        s2.channel("tenant_a").stats.record(int(2 * MiB))
+        clk.sleep(1.0)
+        cp.run_once()
+        r1 = s1.channel("tenant_a").get_object("0").rate
+        r2 = s2.channel("tenant_a").get_object("0").rate
+        assert r1 > r2
+        assert r1 + r2 == pytest.approx(60 * MiB, rel=1e-6)
+
+    def test_removal_tears_down_every_member(self):
+        _, stages, cp = self._fleet()
+        cp.remove_policy("fleet")
+        for st in stages:
+            assert st.channel("tenant_a") is None
+            assert st.channel("tenant_b") is None
+
+    def test_global_install_refused_while_a_stage_is_down(self):
+        # a global flow compiled against a partial fleet would silently
+        # exclude the down stage from the SLO — must fail loudly instead
+        clk = VirtualClock()
+        cp = ControlPlane(clock=clk, probe_interval=1e9)
+        cp.register_stage(Stage("s1", clock=clk))
+        cp.register("s2", _SlowHandle(delay=0.0))
+        cp._mark_down("s2", ConnectionError("stage died"))
+        with pytest.raises(PolicyError, match="are DOWN"):
+            cp.install_policy(GLOBAL_POLICY)
+        cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# concurrent fan-out semantics                                                 #
+# --------------------------------------------------------------------------- #
+class _SlowHandle:
+    """StageHandle stub whose collect blocks far beyond the stage deadline."""
+
+    def __init__(self, delay: float) -> None:
+        self.delay = delay
+        self.collects = 0
+
+    def stage_info(self):
+        return {"stage": "slow", "channels": {}}
+
+    def collect(self):
+        self.collects += 1
+        time.sleep(self.delay)
+        from repro.core import StageStats
+
+        return StageStats()
+
+    def hsk_rule(self, rule):  # pragma: no cover - not exercised
+        return True
+
+    def dif_rule(self, rule):  # pragma: no cover
+        return True
+
+    def enf_rule(self, rule):  # pragma: no cover
+        return True
+
+
+class TestFanOut:
+    def _traffic_stages(self, clk, n=3):
+        stages = []
+        for i in range(n):
+            st = Stage(f"s{i+1}", clock=clk)
+            st.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+            st.hsk_rule(
+                HousekeepingRule(
+                    op="create_object", channel="io", object_id="0", object_kind="drl",
+                    params={"rate": 100 * MiB},
+                )
+            )
+            st.channel("io").stats.record(int((i + 1) * MiB))
+            stages.append(st)
+        return stages
+
+    def test_concurrent_and_sequential_agree(self):
+        results = {}
+        for concurrent in (False, True):
+            clk = VirtualClock()
+            stages = self._traffic_stages(clk)
+            algo = FairShareControl(
+                flows={st.name: FlowSpec(st.name, "io") for st in stages},
+                demands={st.name: 50 * MiB for st in stages},
+                max_bandwidth=120 * MiB,
+            )
+            cp = ControlPlane(algo, clock=clk, concurrent=concurrent)
+            for st in stages:
+                cp.register_stage(st)
+            clk.sleep(1.0)
+            merged = cp.run_once()
+            results[concurrent] = (
+                {name: [r.state for r in rules] for name, rules in merged.items()},
+                {st.name: st.channel("io").get_object("0").rate for st in stages},
+            )
+            cp.close()
+        assert results[False] == results[True]
+
+    def test_slow_stage_hits_deadline_without_stalling_the_loop(self):
+        clk = VirtualClock()
+        (fast,) = self._traffic_stages(clk, n=1)
+        slow = _SlowHandle(delay=5.0)
+        cp = ControlPlane(clock=clk, stage_deadline=0.2, probe_interval=1e9)
+        cp.register_stage(fast)
+        cp.register("slow", slow)
+        t0 = time.monotonic()
+        stats = cp._collect_all()
+        assert time.monotonic() - t0 < 2.0  # nowhere near the 5 s collect
+        assert "s1" in stats and "slow" not in stats
+        assert not cp.stage_up("slow") and cp.stage_up("s1")
+        assert "deadline" in cp.fleet_status()["slow"]["last_error"]
+        cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# UDS stage death / deferred rules / re-admission                              #
+# --------------------------------------------------------------------------- #
+PAIR_POLICY = {
+    "policy": "pair",
+    "flows": [
+        {"name": "f1", "stage": "s1", "channel": "io", "match": {"tenant": "t1"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "100MiB/s"}}]},
+        {"name": "f2", "stage": "s2", "channel": "io", "match": {"tenant": "t2"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "100MiB/s"}}]},
+    ],
+    "objective": {
+        "kind": "fairshare", "capacity": "100MiB/s", "loop_interval": "10ms",
+        "demands": {"f1": "60MiB/s", "f2": "40MiB/s"},
+    },
+}
+
+
+def _serve_stage_forever(name: str, socket_path: str) -> None:  # child process
+    stage = Stage(name)
+    StageServer(stage, socket_path).start()
+    time.sleep(120)
+
+
+class TestStageDeathAndRecovery:
+    def test_socket_death_marks_down_defers_and_readmits(self):
+        mp = multiprocessing.get_context("fork")
+        with tempfile.TemporaryDirectory() as d:
+            s1 = Stage("s1")
+            srv1 = StageServer(s1, f"{d}/s1.sock").start()
+            child = mp.Process(target=_serve_stage_forever, args=("s2", f"{d}/s2.sock"), daemon=True)
+            child.start()
+            t0 = time.monotonic()
+            while not os.path.exists(f"{d}/s2.sock"):
+                assert time.monotonic() - t0 < 10.0
+                time.sleep(0.01)
+            cp = ControlPlane(probe_interval=0.05)
+            try:
+                cp.connect("s1", f"{d}/s1.sock")
+                cp.connect("s2", f"{d}/s2.sock")
+                cp.install_policy(PAIR_POLICY)
+                cp.run_once()
+                assert cp.stage_up("s1") and cp.stage_up("s2")
+
+                # the stage process dies: the kernel closes its sockets
+                child.terminate()
+                child.join(timeout=10.0)
+                t0 = time.monotonic()
+                for _ in range(4):
+                    cp.run_once()
+                elapsed = time.monotonic() - t0
+                assert elapsed < 3.0, "loop stalled on the dead stage"
+                assert cp.stage_up("s1") and not cp.stage_up("s2")
+
+                # liveness is exported
+                sample = get_registry().sample()
+                assert sample["stage.s2.up"] == 0.0
+                assert sample["stage.s2.down"] == 1.0
+                assert sample["stage.s1.up"] == 1.0
+
+                # rules destined for the dead stage are deferred, and the
+                # accounting is visible in list_policies — not silently dropped
+                (summary,) = cp.list_policies()
+                assert summary["down_stages"] == ["s2"]
+                assert summary["deferred_rules"] >= 1
+                status = cp.fleet_status()["s2"]
+                assert status["failures"] == 1 and status["deferred_rules"] >= 1
+
+                # the surviving stage still gets its objective rule every tick
+                assert s1.channel("io").get_object("0").rate == pytest.approx(60 * MiB)
+
+                # recovery: a new server process (here: in-process) re-binds the
+                # same path; the next probe re-admits and replays deferred rules
+                s2b = Stage("s2")
+                s2b.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+                s2b.hsk_rule(
+                    HousekeepingRule(
+                        op="create_object", channel="io", object_id="0",
+                        object_kind="drl", params={"rate": 1.0},
+                    )
+                )
+                srv2 = StageServer(s2b, f"{d}/s2.sock").start()
+                try:
+                    time.sleep(0.06)  # past probe_interval
+                    cp.run_once()
+                    assert cp.stage_up("s2")
+                    status = cp.fleet_status()["s2"]
+                    assert status["recoveries"] == 1 and status["deferred_rules"] == 0
+                    assert get_registry().sample()["stage.s2.up"] == 1.0
+                    # the deferred fair-share retune landed on the new stage
+                    assert s2b.channel("io").get_object("0").rate == pytest.approx(40 * MiB)
+                    (summary,) = cp.list_policies()
+                    assert summary["down_stages"] == [] and summary["deferred_rules"] == 0
+                finally:
+                    srv2.stop()
+            finally:
+                cp.close()
+                srv1.stop()
+                if child.is_alive():  # pragma: no cover - cleanup
+                    child.kill()
+
+    def test_teardown_for_down_stage_deferred_until_recovery(self):
+        with tempfile.TemporaryDirectory() as d:
+            s2 = Stage("s2")
+            srv2 = StageServer(s2, f"{d}/s2.sock").start()
+            s1 = Stage("s1")
+            cp = ControlPlane(probe_interval=0.05)
+            try:
+                cp.register_stage(s1)
+                cp.connect("s2", f"{d}/s2.sock")
+                cp.install_policy(PAIR_POLICY)
+                assert s2.channel("io") is not None
+                # kill the transport: server gone AND the established
+                # connection torn down (stop() alone leaves accepted
+                # connections alive in their handler threads)
+                srv2.stop()
+                import socket as _socket
+
+                cp._handles["s2"]._sock.shutdown(_socket.SHUT_RDWR)
+                cp.remove_policy("pair")
+                assert cp.list_policies() == []
+                assert s1.channel("io") is None  # live stage torn down now
+                assert cp.fleet_status()["s2"]["deferred_rules"] >= 1
+                # recovery replays the deferred teardown onto the new server
+                s2b = Stage("s2")
+                s2b.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+                srv2b = StageServer(s2b, f"{d}/s2.sock").start()
+                try:
+                    time.sleep(0.06)
+                    cp.run_once()
+                    assert cp.stage_up("s2")
+                    assert s2b.channel("io") is None
+                finally:
+                    srv2b.stop()
+            finally:
+                cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# close() / context manager                                                    #
+# --------------------------------------------------------------------------- #
+class TestClose:
+    def test_context_manager_releases_metrics_and_exporter(self):
+        import urllib.error
+        import urllib.request
+
+        st = Stage("s")
+        with ControlPlane() as cp:
+            cp.register_stage(st)
+            cp.install_policy(
+                {
+                    "policy": "p",
+                    "flows": [
+                        {"name": "f", "stage": "s", "match": {"tenant": "x"},
+                         "objects": [{"kind": "drl", "params": {"rate": "10MiB/s"}}]}
+                    ],
+                }
+            )
+            exporter = cp.serve_metrics()
+            url = exporter.url
+            names = get_registry().names()
+            assert "stage.s.up" in names and "policy.p.version" in names
+        names = get_registry().names()
+        assert "stage.s.up" not in names
+        assert "policy.p.version" not in names
+        with pytest.raises((urllib.error.URLError, ConnectionError, OSError)):
+            urllib.request.urlopen(url, timeout=1.0)
+
+    def test_close_closes_remote_handles(self):
+        with tempfile.TemporaryDirectory() as d:
+            st = Stage("r")
+            srv = StageServer(st, f"{d}/r.sock").start()
+            try:
+                cp = ControlPlane()
+                cp.connect("r", f"{d}/r.sock")
+                handle = cp._handles["r"]
+                cp.close()
+                assert handle._sock.fileno() == -1  # closed
+            finally:
+                srv.stop()
+
+    def test_close_is_idempotent(self):
+        cp = ControlPlane()
+        cp.register_stage(Stage("s"))
+        cp.close()
+        cp.close()
+
+
+class TestManualReRegistration:
+    def test_reregister_down_stage_replays_deferred_rules(self):
+        """cp.register/register_stage on a DOWN stage is a manual recovery:
+        the stage comes back UP and missed rules are replayed, exactly like
+        probe-driven re-admission — nothing stranded, nothing leaked."""
+        from repro.core import EnforcementRule
+
+        clk = VirtualClock()
+        cp = ControlPlane(clock=clk, probe_interval=1e9)
+        st = Stage("s", clock=clk)
+        st.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+        st.hsk_rule(
+            HousekeepingRule(
+                op="create_object", channel="io", object_id="0", object_kind="drl",
+                params={"rate": 1.0},
+            )
+        )
+        cp.register_stage(st)
+        cp._mark_down("s", ConnectionError("boom"))
+        # rules land in the deferred queue while down (latest retune wins)
+        cp._ship_rules("s", [EnforcementRule(channel="io", object_id="0", state={"rate": 7.0})])
+        cp._ship_rules("s", [EnforcementRule(channel="io", object_id="0", state={"rate": 9.0})])
+        assert st.channel("io").get_object("0").rate == 1.0
+        assert cp.fleet_status()["s"]["deferred_rules"] == 1
+        cp.register_stage(st)  # operator re-registers by hand
+        status = cp.fleet_status()["s"]
+        assert status["up"] and status["recoveries"] == 1 and status["deferred_rules"] == 0
+        assert st.channel("io").get_object("0").rate == 9.0
+        assert get_registry().sample()["stage.s.up"] == 1.0
+        cp.close()
