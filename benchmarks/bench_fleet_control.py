@@ -13,8 +13,17 @@ latency ≈ Σ stage) and enabled (``concurrent``: ≈ max stage).
 loop is ≥ 3x faster than sequential — the CI gate for the fleet control
 path.
 
+``--rpc`` instead runs the per-RPC transport microbench against one stage
+process: round-trip cost of a rule RPC and a collect RPC over (a) the v1
+JSON-line protocol, (b) the v2 binary protocol call-by-call, and (c) the v2
+binary protocol pipelined (a window of rules in flight, one flush — how the
+control plane actually ships rule programs). With ``--smoke`` it exits
+non-zero unless pipelined binary is ≥ 3x faster per RPC than JSON — the CI
+gate for the wire layer.
+
 Usage: python -m benchmarks.bench_fleet_control [--stage-counts 1,4,8]
        [--iters 30] [--stage-delay 0.02] [--json PATH] [--smoke]
+       [--rpc] [--rpc-iters 3000] [--rpc-window 64]
 """
 from __future__ import annotations
 
@@ -126,6 +135,110 @@ def run_point(n_stages: int, iters: int, stage_delay: float) -> Dict[str, object
     }
 
 
+# --------------------------------------------------------------------------- #
+# per-RPC transport microbench (--rpc)                                         #
+# --------------------------------------------------------------------------- #
+def _bench_rule_rpc(handle, iters: int) -> float:
+    """Mean seconds per rule RPC, strict call-reply (how v1 always runs)."""
+    from repro.core import EnforcementRule
+
+    rule = EnforcementRule(channel="io", object_id="0", state={"rate": 50 * MiB})
+    for _ in range(50):  # warmup: route caches, allocator, socket buffers
+        handle.enf_rule(rule)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        handle.enf_rule(rule)
+    return (time.perf_counter() - t0) / iters
+
+
+def _bench_rule_rpc_pipelined(handle, iters: int, window: int) -> float:
+    """Mean seconds per rule RPC with ``window`` rules in flight per flush —
+    the shape ControlPlane._ship_rules uses for rule programs."""
+    from repro.core import EnforcementRule
+
+    rules = [
+        EnforcementRule(channel="io", object_id="0", state={"rate": 50 * MiB + i})
+        for i in range(window)
+    ]
+    handle.apply_rules(rules)  # warmup
+    batches = max(iters // window, 1)
+    t0 = time.perf_counter()
+    for _ in range(batches):
+        handle.apply_rules(rules)
+    return (time.perf_counter() - t0) / (batches * window)
+
+
+def _bench_collect_rpc(handle, iters: int) -> float:
+    for _ in range(20):
+        handle.collect()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        handle.collect()
+    return (time.perf_counter() - t0) / iters
+
+
+def run_rpc_point(iters: int, window: int) -> Dict[str, float]:
+    """One stage process, three client transports, same calls."""
+    from repro.core import RemoteStageHandle
+
+    mp = multiprocessing.get_context("fork" if "fork" in multiprocessing.get_all_start_methods() else None)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "rpc.sock")
+        proc = mp.Process(target=_stage_server, args=("rpc", path, 0.0, 120.0), daemon=True)
+        proc.start()
+        try:
+            t0 = time.monotonic()
+            while not os.path.exists(path):
+                if time.monotonic() - t0 > 10.0:
+                    raise SystemExit(f"stage server never opened {path}")
+                time.sleep(0.01)
+            out: Dict[str, float] = {"iters": float(iters), "window": float(window)}
+            hj = RemoteStageHandle(path, protocol="json")
+            out["json_rule_rpc_s"] = _bench_rule_rpc(hj, iters)
+            out["json_collect_rpc_s"] = _bench_collect_rpc(hj, max(iters // 4, 1))
+            hj.close()
+            hb = RemoteStageHandle(path, protocol="binary")
+            out["binary_rule_rpc_s"] = _bench_rule_rpc(hb, iters)
+            out["binary_collect_rpc_s"] = _bench_collect_rpc(hb, max(iters // 4, 1))
+            out["binary_pipelined_rule_rpc_s"] = _bench_rule_rpc_pipelined(hb, iters, window)
+            hb.close()
+        finally:
+            proc.terminate()
+            proc.join(timeout=10.0)
+    out["rule_speedup"] = out["json_rule_rpc_s"] / max(out["binary_pipelined_rule_rpc_s"], 1e-12)
+    out["rule_speedup_sync"] = out["json_rule_rpc_s"] / max(out["binary_rule_rpc_s"], 1e-12)
+    out["collect_speedup"] = out["json_collect_rpc_s"] / max(out["binary_collect_rpc_s"], 1e-12)
+    return out
+
+
+def run_rpc(args) -> int:
+    r = run_rpc_point(args.rpc_iters, args.rpc_window)
+    print("name,value,derived")
+    print(
+        f"rpc_rule,json={r['json_rule_rpc_s']*1e6:.1f}us "
+        f"binary={r['binary_rule_rpc_s']*1e6:.1f}us "
+        f"binary_pipelined={r['binary_pipelined_rule_rpc_s']*1e6:.1f}us,"
+        f"speedup={r['rule_speedup']:.1f}x speedup_sync={r['rule_speedup_sync']:.1f}x "
+        f"window={args.rpc_window}"
+    )
+    print(
+        f"rpc_collect,json={r['json_collect_rpc_s']*1e6:.1f}us "
+        f"binary={r['binary_collect_rpc_s']*1e6:.1f}us,"
+        f"speedup={r['collect_speedup']:.1f}x"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"benchmark": "bench_fleet_control --rpc", "results": r}, f, indent=2)
+        print(f"wrote {args.json}")
+    if args.smoke and r["rule_speedup"] < 3.0:
+        print(
+            f"binary pipelined rule RPC speedup {r['rule_speedup']:.1f}x < 3x over JSON",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--stage-counts", default="1,4,8", help="comma-separated fleet sizes")
@@ -139,9 +252,20 @@ def main() -> int:
     ap.add_argument("--json", default="", help="write machine-readable results to this path")
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI mode: 8-stage point only; fail unless concurrent >= 3x sequential",
+        help="CI mode: 8-stage point only; fail unless concurrent >= 3x sequential "
+        "(with --rpc: fail unless pipelined binary >= 3x JSON per rule RPC)",
     )
+    ap.add_argument(
+        "--rpc", action="store_true",
+        help="per-RPC transport microbench (JSON vs binary vs pipelined binary) "
+        "against one stage process, instead of the fleet fan-out bench",
+    )
+    ap.add_argument("--rpc-iters", type=int, default=3000, help="RPCs per transport in --rpc mode")
+    ap.add_argument("--rpc-window", type=int, default=64, help="pipelined rules in flight in --rpc mode")
     args = ap.parse_args()
+
+    if args.rpc:
+        return run_rpc(args)
 
     counts = [8] if args.smoke else [int(c) for c in args.stage_counts.split(",") if c]
     print("name,value,derived")

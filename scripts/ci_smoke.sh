@@ -31,3 +31,9 @@ python examples/fleet_fairshare.py --stages 3 --seconds 5 --export 0
 
 echo "== fleet control-loop fan-out (8 UDS stages: concurrent >= 3x sequential) =="
 python -m benchmarks.bench_fleet_control --smoke
+
+echo "== binary transport e2e (one stage process: v2 negotiated, rules/collect/policy) =="
+python scripts/transport_smoke.py
+
+echo "== per-RPC wire bench (pipelined binary >= 3x JSON-line per rule RPC) =="
+python -m benchmarks.bench_fleet_control --rpc --smoke

@@ -1,0 +1,105 @@
+"""CI smoke: one stage process driven end-to-end on the binary transport.
+
+Spawns a real stage-server process on a UNIX socket, connects a control
+plane with the default (``auto``) protocol, and asserts the connection
+actually negotiated v2 binary — then exercises the full surface over it:
+housekeeping + differentiation + enforcement rules (pipelined as one
+program), stats collection, policy install/remove, and fleet status. Exits
+non-zero on any mismatch, so a regression that silently downgrades the
+fleet to the JSON fallback (or breaks the binary path) fails CI here.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+import sys
+import tempfile
+import time
+
+MiB = float(1 << 20)
+
+
+def _stage_server(socket_path: str, seconds: float) -> None:
+    from repro.core import Stage, StageServer
+
+    server = StageServer(Stage("smoke"), socket_path).start()
+    time.sleep(seconds)
+    server.stop()
+
+
+def main() -> int:
+    from repro.core import ControlPlane, EnforcementRule, HousekeepingRule
+
+    mp = multiprocessing.get_context(
+        "fork" if "fork" in multiprocessing.get_all_start_methods() else None
+    )
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "smoke.sock")
+        proc = mp.Process(target=_stage_server, args=(path, 60.0), daemon=True)
+        proc.start()
+        try:
+            t0 = time.monotonic()
+            while not os.path.exists(path):
+                if time.monotonic() - t0 > 10.0:
+                    print(f"FAIL: stage server never opened {path}", file=sys.stderr)
+                    return 1
+                time.sleep(0.01)
+            with ControlPlane() as cp:
+                cp.connect("smoke", path)
+                status = cp.fleet_status()["smoke"]
+                if status["protocol"] != "binary":
+                    print(
+                        f"FAIL: expected binary transport, negotiated {status['protocol']!r}",
+                        file=sys.stderr,
+                    )
+                    return 1
+                handle = cp._handles["smoke"]
+                # one pipelined rule program: create → provision → tune ×32
+                outcomes = handle.apply_rules(
+                    [
+                        HousekeepingRule(op="create_channel", channel="io"),
+                        HousekeepingRule(
+                            op="create_object", channel="io", object_id="0",
+                            object_kind="drl", params={"rate": 100 * MiB},
+                        ),
+                    ]
+                    + [
+                        EnforcementRule(channel="io", object_id="0", state={"rate": 50 * MiB + i})
+                        for i in range(32)
+                    ]
+                )
+                if not all(outcomes):
+                    print(f"FAIL: rule program outcomes {outcomes}", file=sys.stderr)
+                    return 1
+                stats = handle.collect()
+                if "io" not in stats.per_channel:
+                    print(f"FAIL: collect missing channel: {stats.per_channel}", file=sys.stderr)
+                    return 1
+                cp.install_policy(
+                    {
+                        "policy": "smoke",
+                        "flows": [
+                            {
+                                "name": "t", "stage": "smoke", "match": {"tenant": "t"},
+                                "objects": [{"kind": "drl", "id": "0", "params": {"rate": "10MiB/s"}}],
+                            }
+                        ],
+                    }
+                )
+                (summary,) = cp.list_policies()
+                if summary["stages"] != ["smoke"] or summary["down_stages"]:
+                    print(f"FAIL: policy summary {summary}", file=sys.stderr)
+                    return 1
+                cp.remove_policy("smoke")
+                if not cp.fleet_status()["smoke"]["up"]:
+                    print("FAIL: stage marked down during smoke", file=sys.stderr)
+                    return 1
+        finally:
+            proc.terminate()
+            proc.join(timeout=10.0)
+    print("transport smoke ok: binary v2 negotiated, rules/collect/policy round-trip")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,10 @@
 
 The control plane is a logically-centralized entity that orchestrates stages
 through the five-call control interface. Communication is over UNIX Domain
-Sockets (paper §4.3) with a newline-delimited JSON protocol; an in-process
-transport with identical semantics is provided for embedded deployments and
-deterministic tests.
+Sockets (paper §4.3) through the :mod:`repro.transport` subsystem — binary
+pipelined frames when both ends speak v2, the newline-delimited JSON protocol
+against older peers; an in-process transport with identical semantics is
+provided for embedded deployments and deterministic tests.
 
 Control algorithms (paper §5) are pluggable ``ControlAlgorithm`` objects run in
 a feedback loop: ``collect → compute → enf_rules → sleep(loop_interval)``.
@@ -12,20 +13,23 @@ a feedback loop: ``collect → compute → enf_rules → sleep(loop_interval)``.
 from __future__ import annotations
 
 import functools
-import json
-import os
-import socket
-import socketserver
 import threading
 import weakref
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
-from dataclasses import asdict, dataclass, field
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.transport import (
+    TRANSPORT_ERRORS,
+    RemoteStageHandle,
+    RuleShipError,
+    StageServer,
+)
+
 from .clock import Clock, DEFAULT_CLOCK
-from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule, rule_from_wire
+from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
 from .stage import Stage
-from .stats import StageStats, StatsSnapshot
+from .stats import StageStats
 
 
 # --------------------------------------------------------------------------- #
@@ -72,132 +76,18 @@ class LocalStageHandle(StageHandle):
         return self._stage.collect()
 
 
-def _snapshot_to_wire(s: StatsSnapshot) -> Dict[str, Any]:
-    return asdict(s)
-
-
-def _snapshot_from_wire(d: Dict[str, Any]) -> StatsSnapshot:
-    return StatsSnapshot(**d)
-
-
-class StageServer:
-    """Data-plane side of the UDS transport: serves one Stage on a socket path.
-
-    Protocol: one JSON object per line. ``{"call": "stage_info"}``,
-    ``{"call": "rule", ...wire-rule...}``, ``{"call": "collect"}``.
-    """
-
-    def __init__(self, stage: Stage, socket_path: str) -> None:
-        self.stage = stage
-        self.socket_path = socket_path
-        if os.path.exists(socket_path):
-            os.unlink(socket_path)
-        stage_ref = stage
-
-        class Handler(socketserver.StreamRequestHandler):
-            def handle(self) -> None:  # pragma: no cover - exercised via client
-                for line in self.rfile:
-                    line = line.strip()
-                    if not line:
-                        continue
-                    try:
-                        msg = json.loads(line)
-                        reply = _dispatch(stage_ref, msg)
-                    except Exception as exc:  # noqa: BLE001 — report to controller
-                        reply = {"ok": False, "error": repr(exc)}
-                    self.wfile.write(json.dumps(reply).encode() + b"\n")
-                    self.wfile.flush()
-
-        class Server(socketserver.ThreadingUnixStreamServer):
-            daemon_threads = True
-            allow_reuse_address = True
-
-        self._server = Server(socket_path, Handler)
-        self._thread = threading.Thread(target=self._server.serve_forever, daemon=True, name=f"paio-stage-{stage.name}")
-
-    def start(self) -> "StageServer":
-        self._thread.start()
-        return self
-
-    def stop(self) -> None:
-        self._server.shutdown()
-        self._server.server_close()
-        if os.path.exists(self.socket_path):
-            os.unlink(self.socket_path)
-
-
-def _dispatch(stage: Stage, msg: Dict[str, Any]) -> Dict[str, Any]:
-    call = msg.get("call")
-    if call == "stage_info":
-        return {"ok": True, "info": stage.stage_info()}
-    if call == "rule":
-        rule = rule_from_wire(msg)
-        if isinstance(rule, HousekeepingRule):
-            return {"ok": stage.hsk_rule(rule)}
-        if isinstance(rule, DifferentiationRule):
-            return {"ok": stage.dif_rule(rule)}
-        return {"ok": stage.enf_rule(rule)}
-    if call == "collect":
-        stats = stage.collect()
-        return {"ok": True, "stats": {n: _snapshot_to_wire(s) for n, s in stats.per_channel.items()}}
-    return {"ok": False, "error": f"unknown call {call!r}"}
-
-
-class RemoteStageHandle(StageHandle):
-    """Control-plane side of the UDS transport."""
-
-    def __init__(self, socket_path: str, timeout: float = 5.0) -> None:
-        self.socket_path = socket_path
-        self.timeout = timeout
-        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        self._sock.settimeout(timeout)
-        self._sock.connect(socket_path)
-        self._file = self._sock.makefile("rwb")
-        self._lock = threading.Lock()
-
-    def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
-        with self._lock:
-            self._file.write(json.dumps(msg).encode() + b"\n")
-            self._file.flush()
-            line = self._file.readline()
-        if not line:
-            raise ConnectionError("stage closed the control socket")
-        return json.loads(line)
-
-    def stage_info(self) -> Dict[str, Any]:
-        return self._call({"call": "stage_info"})["info"]
-
-    def hsk_rule(self, rule: HousekeepingRule) -> bool:
-        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
-
-    def dif_rule(self, rule: DifferentiationRule) -> bool:
-        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
-
-    def enf_rule(self, rule: EnforcementRule) -> bool:
-        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
-
-    def collect(self) -> StageStats:
-        reply = self._call({"call": "collect"})
-        return StageStats(per_channel={n: _snapshot_from_wire(s) for n, s in reply["stats"].items()})
-
-    def close(self) -> None:
-        try:
-            self._file.close()
-        except OSError:  # a dead peer can fail the buffered flush
-            pass
-        try:
-            self._sock.close()
-        except OSError:  # pragma: no cover
-            pass
+# StageServer and RemoteStageHandle now live in repro.transport (binary
+# pipelined v2 protocol + JSON-line v1 fallback); re-exported here — and from
+# repro.core — so existing imports keep working.
+#
+# TRANSPORT_ERRORS (also from repro.transport): exception types treated as
+# "the transport/stage died" (stage marked down) rather than control-plane
+# bugs (propagated).
 
 
 # --------------------------------------------------------------------------- #
 # fleet state (liveness tracking per registered stage)                         #
 # --------------------------------------------------------------------------- #
-#: exception types treated as "the transport/stage died" (stage marked down)
-#: rather than control-plane bugs (propagated). socket.timeout is an OSError
-#: subclass; a half-written reply surfaces as json.JSONDecodeError.
-TRANSPORT_ERRORS = (ConnectionError, OSError, EOFError, TimeoutError, json.JSONDecodeError)
 
 
 @dataclass
@@ -219,6 +109,9 @@ class StageState:
     #: UDS path to reconnect on recovery probes (None → probe the live handle)
     socket_path: Optional[str] = None
     timeout: float = 5.0
+    #: protocol preference to reconnect with ("auto" renegotiates, so a stage
+    #: that restarted on a different version is re-admitted either way)
+    protocol: str = "auto"
     last_probe: float = -float("inf")
     deferred: Dict[Tuple, Any] = field(default_factory=dict)
     _defer_seq: int = 0
@@ -335,6 +228,7 @@ class ControlPlane:
             if isinstance(handle, RemoteStageHandle):
                 state.socket_path = handle.socket_path
                 state.timeout = handle.timeout
+                state.protocol = handle.protocol
             deferred = list(state.deferred.values())
             state.deferred.clear()
         if old_handle is not None and old_handle is not handle and hasattr(old_handle, "close"):
@@ -343,14 +237,22 @@ class ControlPlane:
             except Exception:  # noqa: BLE001 — replaced handle may be dead
                 pass
         self._publish_stage_up(name, True)
+        deferred = self._squash_deferred(name, deferred)
         if deferred:
             self._ship_rules(name, deferred)
 
     def register_stage(self, stage: Stage) -> None:
         self.register(stage.name, LocalStageHandle(stage))
 
-    def connect(self, name: str, socket_path: str, timeout: float = 5.0) -> None:
-        self.register(name, RemoteStageHandle(socket_path, timeout=timeout))
+    def connect(
+        self, name: str, socket_path: str, timeout: float = 5.0, protocol: str = "auto"
+    ) -> None:
+        """Register a stage reached over UDS. ``protocol`` is the transport
+        preference (``auto`` negotiates binary v2 and falls back to the v1
+        JSON-line protocol, ``binary``/``json`` force one end of that) — a
+        fleet can mix v1 and v2 stages on one plane with identical
+        semantics."""
+        self.register(name, RemoteStageHandle(socket_path, timeout=timeout, protocol=protocol))
 
     # -- fleet liveness ------------------------------------------------------
     def _metric_registry(self):
@@ -409,8 +311,56 @@ class ControlPlane:
             except Exception:  # noqa: BLE001 — the socket is already dead
                 pass
         self._publish_stage_up(name, True)
+        deferred = self._squash_deferred(name, deferred)
         if deferred:
             self._ship_rules(name, deferred)
+
+    def _squash_deferred(self, name: str, deferred: List[Any]) -> List[Any]:
+        """Reconcile a recovering stage's deferred rules with the *currently*
+        installed policy set before replay.
+
+        A DOWN window can span policy changes: a policy removed while the
+        stage was away left its teardown (remove channel/object/route) in the
+        deferred queue, and a successor policy may since have (re)claimed the
+        same entities. Replaying those housekeeping ops verbatim would tear
+        down live policy state the moment the stage recovers. Any deferred
+        remove op whose target an installed policy's install program creates
+        on this stage is obsolete — the entity must exist — and is dropped;
+        everything else (enforcement retunes, removes of genuinely unclaimed
+        entities, creates) replays in order as before.
+
+        Entity identity uses the policy compiler's own keying
+        (``_install_key``/``_teardown_key``), including its channel-BLIND
+        route identity: stage routing tables are keyed by classifier match,
+        not target channel, so a stale ``remove_route`` would delete a
+        successor policy's route even when the flow was re-homed to a
+        different channel.
+        """
+        if not deferred or self._policy_runtime is None:
+            return deferred
+        # lazy: the policy subsystem stays an optional import for planes
+        # that never install policies (and then there is nothing to squash)
+        from repro.policy.compile import _install_key, _teardown_key
+
+        owned: set = set()
+        for compiled in self._policy_runtime.installed():
+            for rule in compiled.install.get(name, ()):
+                key = _install_key(rule)
+                if key is not None:
+                    owned.add(key)
+        if not owned:
+            return deferred
+        owned_routes = {(k[2], k[3]) for k in owned if k[0] == "route"}
+        kept: List[Any] = []
+        for rule in deferred:
+            key = _teardown_key(rule) if isinstance(rule, HousekeepingRule) else None
+            if key is not None:
+                if key in owned:
+                    continue  # obsolete: a live policy owns this entity now
+                if key[0] == "route" and (key[2], key[3]) in owned_routes:
+                    continue  # channel-blind: the match is claimed elsewhere
+            kept.append(rule)
+        return kept
 
     def _probe_down_stages(self) -> None:
         """Attempt re-admission of DOWN stages (rate-limited per stage by
@@ -429,7 +379,9 @@ class ControlPlane:
             fresh: Optional[RemoteStageHandle] = None
             try:
                 if state.socket_path is not None:
-                    fresh = RemoteStageHandle(state.socket_path, timeout=state.timeout)
+                    fresh = RemoteStageHandle(
+                        state.socket_path, timeout=state.timeout, protocol=state.protocol
+                    )
                     fresh.stage_info()
                     self._recover(name, fresh)
                 elif handle is not None:
@@ -458,6 +410,13 @@ class ControlPlane:
                     "last_error": state.last_error or None,
                     "deferred_rules": len(state.deferred),
                     "transport": "uds" if state.socket_path else "local",
+                    # negotiated wire protocol (None for local handles):
+                    # "binary" = v2 pipelined frames, "jsonl" = v1 fallback
+                    "protocol": (
+                        ("binary" if getattr(self._handles.get(name), "proto", 1) == 2 else "jsonl")
+                        if state.socket_path
+                        else None
+                    ),
                 }
                 for name, state in self._stage_states.items()
             }
@@ -558,19 +517,45 @@ class ControlPlane:
     def _ship_rules(self, name: str, rules: List[Any]) -> List[Any]:
         """Apply ``rules`` to one stage in order; returns the applied subset.
         Rules for a DOWN stage are deferred (not dropped); a transport error
-        mid-ship marks the stage down and defers the remainder."""
+        mid-ship marks the stage down and defers the remainder.
+
+        Handles exposing ``apply_rules`` (the remote transport) get the whole
+        program as one pipelined batch — per-rule cost is one frame encode,
+        not one round trip; a :class:`RuleShipError` carries the
+        applied/pending split so deferral semantics are identical to the
+        sequential path."""
         applied: List[Any] = []
-        for rule in rules:
+        idx = 0
+        while idx < len(rules):
             # lock-free reads (GIL-atomic dict gets): a stale view at worst
             # tries a dead handle (raises → down-mark) or defers one rule
             # early — both converge on the next probe/replay
             handle = self._handles.get(name)
             state = self._stage_states.get(name)
             if handle is None:
-                continue  # unknown stage: nothing will ever apply this
+                return applied  # unknown stage: nothing will ever apply this
             if state is not None and not state.up:
-                self._defer(name, rule)
-                continue
+                for rule in rules[idx:]:
+                    self._defer(name, rule)
+                return applied
+            batch = rules[idx:]
+            ship = getattr(handle, "apply_rules", None)
+            if ship is not None:
+                try:
+                    ship(batch)
+                    applied.extend(batch)
+                except RuleShipError as exc:
+                    applied.extend(exc.applied)
+                    self._mark_down(name, exc.cause, handle)
+                    for rule in exc.pending:
+                        self._defer(name, rule)
+                except TRANSPORT_ERRORS as exc:  # pragma: no cover — defensive
+                    self._mark_down(name, exc, handle)
+                    for rule in batch:
+                        self._defer(name, rule)
+                return applied
+            rule = rules[idx]
+            idx += 1
             try:
                 self._apply_rule(handle, rule)
                 applied.append(rule)
@@ -833,16 +818,25 @@ class ControlPlane:
         return out
 
     # -- observability ------------------------------------------------------
-    def serve_metrics(self, port: int = 0, host: str = "127.0.0.1"):
+    def serve_metrics(
+        self,
+        port: int = 0,
+        host: str = "127.0.0.1",
+        allow_prefixes: Optional[Tuple[str, ...]] = None,
+        allow_all: bool = False,
+    ):
         """Start a Prometheus-text exporter over this plane's metric registry
         (by default the process-wide shared one — stage/channel gauges,
         policy versions, trigger states, serve-engine counters). Returns the
         started :class:`~repro.telemetry.exporter.MetricsExporter`; read the
-        bound port off ``.port`` (``port=0`` binds an ephemeral one)."""
+        bound port off ``.port`` (``port=0`` binds an ephemeral one).
+        Non-loopback ``host`` binds require ``allow_prefixes`` (serve only
+        matching metric families) or an explicit ``allow_all=True``."""
         from repro.telemetry.exporter import MetricsExporter
 
         exporter = MetricsExporter(
-            registry=self.policy_runtime.registry, host=host, port=port
+            registry=self.policy_runtime.registry, host=host, port=port,
+            allow_prefixes=allow_prefixes, allow_all=allow_all,
         ).start()
         self._exporters.append(exporter)  # torn down by close()
         return exporter

@@ -237,6 +237,13 @@ class PolicyRuntime:
         with self._lock:
             return self._policies.get(name)
 
+    def installed(self) -> List[CompiledPolicy]:
+        """Snapshot of the installed compiled policies — the authoritative
+        "what should exist on the stages" set the control plane reconciles
+        deferred-rule replay against at stage recovery."""
+        with self._lock:
+            return list(self._policies.values())
+
     def list(self) -> List[Dict[str, Any]]:
         with self._lock:
             policies = list(self._policies.values())

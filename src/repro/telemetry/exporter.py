@@ -22,13 +22,16 @@ from __future__ import annotations
 import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 from .metrics import MetricRegistry, MetricSample, get_registry
 
 CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
 
 _NAME_SANITIZE = re.compile(r"[^a-zA-Z0-9_:]")
+
+#: hosts considered loopback-only for the exporter's bind-address guard
+LOOPBACK_HOSTS = frozenset({"127.0.0.1", "localhost", "::1"})
 
 
 def family_name(sample: MetricSample) -> str:
@@ -58,11 +61,27 @@ def _fmt(value: float) -> str:
     return str(int(value)) if float(value).is_integer() else repr(float(value))
 
 
-def render_prometheus(registry: Optional[MetricRegistry] = None) -> str:
+def render_prometheus(
+    registry: Optional[MetricRegistry] = None,
+    allow_prefixes: Optional[Sequence[str]] = None,
+) -> str:
     """Render one coherent scrape of ``registry`` (default: the process-wide
-    one) in Prometheus text exposition format v0.0.4."""
+    one) in Prometheus text exposition format v0.0.4.
+
+    ``allow_prefixes`` (when given) is an allowlist: only samples whose
+    exported family name *or* raw dotted registry name starts with one of the
+    prefixes are rendered — e.g. ``("paio_stage_", "paio_policy_")`` serves
+    fleet liveness and policy versions while keeping per-tenant channel
+    gauges off the endpoint."""
     registry = registry if registry is not None else get_registry()
     samples = registry.collect()
+    if allow_prefixes is not None:
+        prefixes = tuple(allow_prefixes)
+        samples = [
+            s
+            for s in samples
+            if any(family_name(s).startswith(p) or s.name.startswith(p) for p in prefixes)
+        ]
     # group by family so each gets exactly one # TYPE header
     by_family: Dict[str, List[MetricSample]] = {}
     for s in samples:
@@ -113,6 +132,13 @@ class MetricsExporter:
     ``port=0`` binds an ephemeral port (read it back from ``.port`` /
     ``.url``). The server thread is a daemon: it never blocks interpreter
     exit, and ``stop()`` shuts it down deterministically for tests.
+
+    The endpoint has no auth, so a **bind-address guard** applies: binding a
+    non-loopback ``host`` requires either an explicit ``allow_prefixes``
+    allowlist (only matching metric families are served — see
+    :func:`render_prometheus`) or ``allow_all=True`` (the operator's explicit
+    "serve everything to the network" opt-in). Loopback binds stay
+    unrestricted by default, exactly as before.
     """
 
     def __init__(
@@ -120,8 +146,17 @@ class MetricsExporter:
         registry: Optional[MetricRegistry] = None,
         host: str = "127.0.0.1",
         port: int = 0,
+        allow_prefixes: Optional[Sequence[str]] = None,
+        allow_all: bool = False,
     ) -> None:
         self.registry = registry if registry is not None else get_registry()
+        self.allow_prefixes = tuple(allow_prefixes) if allow_prefixes is not None else None
+        if host not in LOOPBACK_HOSTS and self.allow_prefixes is None and not allow_all:
+            raise ValueError(
+                f"refusing to serve every registry metric on non-loopback host {host!r}: "
+                "pass allow_prefixes=(...) to allowlist metric families, or "
+                "allow_all=True to explicitly opt in"
+            )
         self._host = host
         self._want_port = port
         self._server: Optional[ThreadingHTTPServer] = None
@@ -129,7 +164,7 @@ class MetricsExporter:
 
     # -- the collect() API (no HTTP) ---------------------------------------
     def collect(self) -> str:
-        return render_prometheus(self.registry)
+        return render_prometheus(self.registry, allow_prefixes=self.allow_prefixes)
 
     @property
     def port(self) -> int:
@@ -178,7 +213,14 @@ class MetricsExporter:
 
 
 def start_exporter(
-    port: int = 0, host: str = "127.0.0.1", registry: Optional[MetricRegistry] = None
+    port: int = 0,
+    host: str = "127.0.0.1",
+    registry: Optional[MetricRegistry] = None,
+    allow_prefixes: Optional[Sequence[str]] = None,
+    allow_all: bool = False,
 ) -> MetricsExporter:
     """Convenience: build + start an exporter over the shared registry."""
-    return MetricsExporter(registry=registry, host=host, port=port).start()
+    return MetricsExporter(
+        registry=registry, host=host, port=port,
+        allow_prefixes=allow_prefixes, allow_all=allow_all,
+    ).start()

@@ -1,0 +1,77 @@
+"""``repro.transport`` — the stage-transport subsystem (control ↔ data plane).
+
+PAIO's control plane talks to stages over a dedicated channel (paper §4.3).
+This package is that channel as a first-class subsystem, grown out of the
+inline JSON-line code that used to live in ``repro.core.control``:
+
+* :mod:`~repro.transport.codec` — binary payload encodings for the wire
+  types (rules, stats snapshots, JSON-native values/policy dicts);
+* :mod:`~repro.transport.framing` — length-prefixed frames with correlation
+  ids + the hello negotiation constants;
+* :mod:`~repro.transport.connection` — :class:`PipelinedConnection`, many
+  calls in flight per socket;
+* :mod:`~repro.transport.server` — :class:`StageServer`, one socket serving
+  both protocols (v1 JSON lines, negotiated v2 binary);
+* :mod:`~repro.transport.handle` — :class:`RemoteStageHandle`, the
+  negotiating control-plane side.
+
+``repro.core`` re-exports :class:`StageServer` and :class:`RemoteStageHandle`
+so existing imports keep working; new code can depend on this package
+directly.
+"""
+from .codec import (
+    StageError,
+    TransportError,
+    decode_rule,
+    decode_stats,
+    encode_rule,
+    encode_stats,
+    pack_value,
+    unpack_value,
+)
+from .connection import PendingReply, PipelinedConnection
+from .framing import (
+    FLAG_ERROR,
+    FLAG_REPLY,
+    HEADER,
+    MAX_FRAME_BYTES,
+    OP_COLLECT,
+    OP_PING,
+    OP_RULE,
+    OP_STAGE_INFO,
+    read_frame,
+    write_frame,
+)
+from .handle import TRANSPORT_ERRORS, RemoteStageHandle, RuleShipError
+from .server import PROTO_VERSION, StageServer, dispatch_json, snapshot_from_wire, snapshot_to_wire
+
+__all__ = [
+    "FLAG_ERROR",
+    "FLAG_REPLY",
+    "HEADER",
+    "MAX_FRAME_BYTES",
+    "OP_COLLECT",
+    "OP_PING",
+    "OP_RULE",
+    "OP_STAGE_INFO",
+    "PROTO_VERSION",
+    "PendingReply",
+    "PipelinedConnection",
+    "RemoteStageHandle",
+    "RuleShipError",
+    "StageError",
+    "StageServer",
+    "TRANSPORT_ERRORS",
+    "TransportError",
+    "decode_rule",
+    "decode_stats",
+    "dispatch_json",
+    "encode_rule",
+    "encode_stats",
+    "pack_value",
+    "read_frame",
+    "snapshot_from_wire",
+    "snapshot_to_wire",
+    "unpack_value",
+    "write_frame",
+]

@@ -1,0 +1,169 @@
+"""Pipelined client connection: many calls in flight on one socket.
+
+The v1 JSON-line handle serialized every RPC on one lock — collect and rule
+shipping for the same stage could never overlap, so a tick's per-stage cost
+was Σ(RPCs) even with the fan-out pool. A :class:`PipelinedConnection` tags
+each request frame with a correlation id and parks the caller on a per-call
+event; a single reader thread dispatches replies (which may arrive out of
+order — the server runs collect concurrently with rules) back to their
+callers. Any number of threads can have calls in flight; only the *write* of
+a frame is serialized, and batched writes (``flush=False`` + one
+:meth:`flush`) collapse a whole rule program into one syscall.
+
+Connection death (EOF, reset, decode desync) fails every pending call with a
+:class:`ConnectionError` so the control plane's down-marking sees it on all
+paths at once, not just the call that happened to hit the socket.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from .codec import StageError, TransportError, unpack_value
+from .framing import FLAG_ERROR, read_frame, write_frame
+
+
+class PendingReply:
+    """One in-flight call: parks the caller until its reply frame lands."""
+
+    __slots__ = ("_event", "_decoder", "_payload", "_flags", "_exc", "corr_id")
+
+    def __init__(self, decoder: Callable[[bytes], Any]) -> None:
+        self._event = threading.Event()
+        self._decoder = decoder
+        self._payload: Optional[bytes] = None
+        self._flags = 0
+        self._exc: Optional[BaseException] = None
+        self.corr_id = 0
+
+    def _complete(self, flags: int, payload: bytes) -> None:
+        self._flags = flags
+        self._payload = payload
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def result(self, timeout: Optional[float]) -> Any:
+        """Wait for the reply and decode it (decode runs on the *caller's*
+        thread so a slow decode never stalls the shared reader)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"no reply within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        if self._flags & FLAG_ERROR:
+            raise StageError(str(unpack_value(self._payload)))
+        return self._decoder(self._payload)
+
+
+class PipelinedConnection:
+    """Correlation-id multiplexing over one connected stream socket."""
+
+    def __init__(self, sock: socket.socket, rfile=None, wfile=None) -> None:
+        self._sock = sock
+        self._rfile = rfile if rfile is not None else sock.makefile("rb")
+        self._wfile = wfile if wfile is not None else sock.makefile("wb")
+        self._wlock = threading.Lock()
+        self._plock = threading.Lock()
+        self._pending: Dict[int, PendingReply] = {}
+        self._corr = 0
+        self._closed = False
+        self._reader = threading.Thread(
+            target=self._read_loop, daemon=True, name="paio-transport-reader"
+        )
+        self._reader.start()
+
+    # -- sending ------------------------------------------------------------
+    def request(
+        self, op: int, payload: bytes, decoder: Callable[[bytes], Any], flush: bool = True
+    ) -> PendingReply:
+        """Write one request frame and return its :class:`PendingReply`.
+        ``flush=False`` leaves the frame in the send buffer — batch callers
+        follow up with one :meth:`flush` for the whole window."""
+        pending = PendingReply(decoder)
+        with self._wlock:
+            if self._closed:
+                raise ConnectionError("connection closed")
+            self._corr = corr = (self._corr + 1) & 0xFFFFFFFF
+            pending.corr_id = corr
+            with self._plock:
+                self._pending[corr] = pending
+            try:
+                write_frame(self._wfile, op, 0, corr, payload)
+                if flush:
+                    self._wfile.flush()
+            except OSError:
+                with self._plock:
+                    self._pending.pop(corr, None)
+                raise
+        return pending
+
+    def flush(self) -> None:
+        with self._wlock:
+            self._wfile.flush()
+
+    def call(self, op: int, payload: bytes, decoder: Callable[[bytes], Any], timeout: Optional[float]) -> Any:
+        """Request + wait: the blocking single-call path. On timeout the
+        pending entry is dropped so a late reply is discarded, not misfiled."""
+        pending = self.request(op, payload, decoder)
+        try:
+            return pending.result(timeout)
+        except TimeoutError:
+            with self._plock:
+                self._pending.pop(pending.corr_id, None)
+            raise
+
+    # -- receiving ----------------------------------------------------------
+    def _read_loop(self) -> None:
+        try:
+            while True:
+                frame = read_frame(self._rfile)
+                if frame is None:
+                    self._fail_all(ConnectionError("stage closed the control socket"))
+                    return
+                _op, flags, corr_id, payload = frame
+                with self._plock:
+                    pending = self._pending.pop(corr_id, None)
+                if pending is not None:
+                    pending._complete(flags, payload)
+                # an unmatched corr id is a reply whose caller timed out and
+                # walked away — drop it, the stream itself is still framed
+        except (OSError, TransportError, ValueError) as exc:
+            self._fail_all(
+                exc if isinstance(exc, ConnectionError) else TransportError(repr(exc))
+            )
+
+    def _fail_all(self, exc: BaseException) -> None:
+        with self._plock:
+            pending = list(self._pending.values())
+            self._pending.clear()
+            self._closed = True
+        for p in pending:
+            p._fail(exc)
+
+    # -- teardown -----------------------------------------------------------
+    def close(self) -> None:
+        with self._wlock:
+            self._closed = True
+        # unblock the reader FIRST: closing a buffered file while another
+        # thread is parked in its readinto deadlocks on the buffer lock, so
+        # shut the socket down (reader sees EOF and exits), join it, then
+        # close the file objects
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:  # peer already gone
+            pass
+        if self._reader is not threading.current_thread():
+            self._reader.join(timeout=5.0)
+        for closer in (self._wfile.close, self._rfile.close):
+            try:
+                closer()
+            except (OSError, ValueError):  # a dead peer can fail the buffered flush
+                pass
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover
+            pass
+        self._fail_all(ConnectionError("connection closed"))

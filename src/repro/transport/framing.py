@@ -1,0 +1,146 @@
+"""Length-prefixed binary framing for the v2 stage transport.
+
+Every v2 message is one frame::
+
+    <op:u8> <flags:u8> <corr_id:u32> <length:u32> <payload:length bytes>
+
+(all little-endian, 10-byte header). ``corr_id`` correlates a reply with its
+request so multiple calls can be in flight on one connection (pipelining);
+``flags`` carries the reply/error bits. Requests flow control-plane → stage,
+replies stage → control-plane; payload format is determined by ``op`` (see
+:mod:`repro.transport.codec`), error replies carry a :func:`pack_value`'d
+message string.
+
+Protocol negotiation happens BEFORE any frame: a v2 client opens with the
+JSON line ``{"call": "hello", "proto": 2}``. A v2 server acks with
+``{"ok": true, "proto": 2}`` and switches the connection to frames; a v1
+server answers its usual unknown-call error and the client stays on the
+JSON-line protocol. A v1 client never sends a hello, so a v2 server keeps
+speaking JSON lines to it. Both downgrades are lossless — same calls, same
+semantics, different encoding.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Optional, Tuple
+
+from .codec import TransportError
+
+#: frame header: op, flags, correlation id, payload length
+HEADER = struct.Struct("<BBII")
+
+#: refuse frames beyond this (a desynchronized stream decodes garbage lengths)
+MAX_FRAME_BYTES = 64 << 20
+
+# ops (request and reply share the op; flags distinguish direction)
+OP_STAGE_INFO = 0x01
+OP_RULE = 0x02
+OP_COLLECT = 0x03
+OP_PING = 0x04
+
+# flags
+FLAG_REPLY = 0x01
+FLAG_ERROR = 0x02
+
+#: negotiation opener (client → server) and ack (server → client)
+HELLO_LINE = b'{"call": "hello", "proto": 2}\n'
+HELLO_ACK = b'{"ok": true, "proto": 2}\n'
+
+
+class SocketFrameReader:
+    """Frame reader over a raw socket with an inspectable buffer.
+
+    ``io.BufferedReader`` hides how much it has prefetched, which breaks the
+    server's flush-when-idle heuristic (a ``select`` on the socket reports
+    idle while whole frames sit in the user-space buffer). This reader owns
+    its buffer, so :meth:`has_buffered` is exact.
+    """
+
+    def __init__(self, sock, recv_bytes: int = 1 << 16) -> None:
+        self._sock = sock
+        self._recv_bytes = recv_bytes
+        self._buf = bytearray()
+        self._off = 0
+
+    def has_buffered(self) -> bool:
+        return self._off < len(self._buf)
+
+    def _fill(self) -> bool:
+        """Pull one recv into the buffer; False on EOF. Always compacts the
+        consumed prefix first — on a sustained stream the buffer is rarely
+        *exactly* drained, and an uncompacted prefix would grow with total
+        bytes received."""
+        if self._off:
+            del self._buf[:self._off]
+            self._off = 0
+        chunk = self._sock.recv(self._recv_bytes)
+        if not chunk:
+            return False
+        self._buf += chunk
+        return True
+
+    def read_exact(self, n: int) -> Optional[bytes]:
+        while len(self._buf) - self._off < n:
+            at_boundary = self._off == len(self._buf)
+            if not self._fill():
+                if at_boundary:
+                    return None
+                raise TransportError(
+                    f"stream ended mid-frame ({len(self._buf) - self._off}/{n} bytes)"
+                )
+        out = bytes(self._buf[self._off:self._off + n])
+        self._off += n
+        if self._off == len(self._buf):
+            del self._buf[:]
+            self._off = 0
+        return out
+
+    def read_frame(self) -> Optional[Tuple[int, int, int, bytes]]:
+        header = self.read_exact(HEADER.size)
+        if header is None:
+            return None
+        op, flags, corr_id, length = HEADER.unpack(header)
+        if length > MAX_FRAME_BYTES:
+            raise TransportError(f"frame length {length} exceeds {MAX_FRAME_BYTES} bytes")
+        payload = self.read_exact(length) if length else b""
+        if payload is None:
+            raise TransportError("stream ended before frame payload")
+        return op, flags, corr_id, payload
+
+
+def read_exact(rfile, n: int) -> Optional[bytes]:
+    """Read exactly ``n`` bytes from a (buffered) file object; None on clean
+    EOF at a frame boundary, TransportError on EOF mid-frame."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = rfile.read(n - got)
+        if not chunk:
+            if got == 0:
+                return None
+            raise TransportError(f"stream ended mid-frame ({got}/{n} bytes)")
+        chunks.append(chunk)
+        got += len(chunk)
+    return chunks[0] if len(chunks) == 1 else b"".join(chunks)
+
+
+def read_frame(rfile) -> Optional[Tuple[int, int, int, bytes]]:
+    """Read one frame → ``(op, flags, corr_id, payload)``; None on clean EOF."""
+    header = read_exact(rfile, HEADER.size)
+    if header is None:
+        return None
+    op, flags, corr_id, length = HEADER.unpack(header)
+    if length > MAX_FRAME_BYTES:
+        raise TransportError(f"frame length {length} exceeds {MAX_FRAME_BYTES} bytes")
+    payload = read_exact(rfile, length) if length else b""
+    if payload is None:
+        raise TransportError("stream ended before frame payload")
+    return op, flags, corr_id, payload
+
+
+def write_frame(wfile, op: int, flags: int, corr_id: int, payload: bytes = b"") -> None:
+    """Append one frame to ``wfile`` (caller flushes — batching frames into
+    one flush is how pipelined rule shipping amortizes syscalls)."""
+    wfile.write(HEADER.pack(op, flags, corr_id, len(payload)))
+    if payload:
+        wfile.write(payload)

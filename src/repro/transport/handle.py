@@ -1,0 +1,200 @@
+"""Control-plane side of the stage transport: the negotiating remote handle.
+
+:class:`RemoteStageHandle` implements the five-call StageHandle interface
+(``stage_info`` / ``hsk_rule`` / ``dif_rule`` / ``enf_rule`` / ``collect``)
+over a UNIX domain socket. On connect it negotiates the protocol:
+
+* ``protocol="auto"`` (default) — offer v2; speak binary frames if the peer
+  acks, fall back to the v1 JSON-line protocol otherwise;
+* ``protocol="binary"`` — require v2 (raise if the peer is v1);
+* ``protocol="json"`` — force v1 (how a pre-v2 control plane looks to a
+  stage; used by the interop tests and the ``--rpc`` benchmark baseline).
+
+In binary mode calls go through a :class:`PipelinedConnection`: collect and
+rule shipping for the same stage overlap in flight instead of serializing on
+a handle lock, and :meth:`apply_rules` streams a whole rule program in one
+flush. In JSON mode behavior is exactly the v1 handle's: one lock, one
+call-reply per round trip.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.rules import (
+    DifferentiationRule,
+    EnforcementRule,
+    HousekeepingRule,
+)
+from repro.core.stats import StageStats
+
+from .codec import TransportError, decode_bool, decode_stats, encode_rule, unpack_value
+from .connection import PipelinedConnection
+from .framing import HELLO_LINE, OP_COLLECT, OP_PING, OP_RULE, OP_STAGE_INFO
+from .server import snapshot_from_wire
+
+#: exception types meaning "the transport/stage died" — kept here so the
+#: transport layer and the control plane agree on what is survivable.
+#: socket.timeout is an OSError subclass; a half-written JSON reply surfaces
+#: as json.JSONDecodeError; binary decode desync raises TransportError
+#: (a ConnectionError subclass).
+TRANSPORT_ERRORS = (ConnectionError, OSError, EOFError, TimeoutError, json.JSONDecodeError)
+
+
+class RuleShipError(ConnectionError):
+    """A pipelined rule batch died mid-flight. ``applied`` holds the rules
+    whose success replies arrived; ``pending`` the rest (the failed rule and
+    everything after it) — the control plane defers those for replay on
+    recovery. Replay may re-apply a rule the stage executed before dying;
+    rule application is idempotent (create-if-absent, retune-to-state), so
+    convergence is unaffected."""
+
+    def __init__(self, applied: List[Any], pending: List[Any], cause: BaseException) -> None:
+        super().__init__(f"rule ship failed after {len(applied)} rules: {cause!r}")
+        self.applied = applied
+        self.pending = pending
+        self.cause = cause
+
+
+class RemoteStageHandle:
+    """StageHandle over UDS with v1↔v2 protocol negotiation."""
+
+    def __init__(self, socket_path: str, timeout: float = 5.0, protocol: str = "auto") -> None:
+        if protocol not in ("auto", "binary", "json"):
+            raise ValueError(f"protocol must be auto|binary|json, not {protocol!r}")
+        self.socket_path = socket_path
+        self.timeout = timeout
+        self.protocol = protocol
+        #: negotiated protocol version (1 = JSON lines, 2 = binary frames)
+        self.proto = 1
+        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        self._sock.settimeout(timeout)
+        self._conn: Optional[PipelinedConnection] = None
+        self._file = None
+        self._lock = threading.Lock()  # v1 mode: one call-reply at a time
+        try:
+            self._sock.connect(socket_path)
+            file = self._sock.makefile("rwb")
+            if protocol != "json":
+                self._negotiate(file, require_binary=(protocol == "binary"))
+            if self.proto == 1:
+                self._file = file
+        except BaseException:
+            self.close()
+            raise
+
+    def _negotiate(self, file, require_binary: bool) -> None:
+        file.write(HELLO_LINE)
+        file.flush()
+        line = file.readline()
+        if not line:
+            raise ConnectionError("stage closed the control socket during negotiation")
+        reply = json.loads(line)
+        if reply.get("ok") and int(reply.get("proto", 1)) >= 2:
+            self.proto = 2
+            # reader-thread model: block forever on the socket, enforce
+            # timeouts per call at the waiter instead
+            self._sock.settimeout(None)
+            self._conn = PipelinedConnection(self._sock, rfile=file, wfile=file)
+        elif require_binary:
+            raise TransportError(
+                f"peer at {self.socket_path} does not speak the binary protocol: {reply}"
+            )
+        # else: v1 peer (unknown-call error or proto:1 ack) — stay on JSON
+
+    # -- v1 path -------------------------------------------------------------
+    def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
+        with self._lock:
+            self._file.write(json.dumps(msg).encode() + b"\n")
+            self._file.flush()
+            line = self._file.readline()
+        if not line:
+            raise ConnectionError("stage closed the control socket")
+        return json.loads(line)
+
+    # -- the five calls ------------------------------------------------------
+    def stage_info(self) -> Dict[str, Any]:
+        if self._conn is not None:
+            return self._conn.call(OP_STAGE_INFO, b"", unpack_value, self.timeout)
+        return self._call({"call": "stage_info"})["info"]
+
+    def _rule(self, rule) -> bool:
+        if self._conn is not None:
+            return self._conn.call(OP_RULE, encode_rule(rule), decode_bool, self.timeout)
+        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
+
+    def hsk_rule(self, rule: HousekeepingRule) -> bool:
+        return self._rule(rule)
+
+    def dif_rule(self, rule: DifferentiationRule) -> bool:
+        return self._rule(rule)
+
+    def enf_rule(self, rule: EnforcementRule) -> bool:
+        return self._rule(rule)
+
+    def collect(self) -> StageStats:
+        if self._conn is not None:
+            return self._conn.call(OP_COLLECT, b"", decode_stats, self.timeout)
+        reply = self._call({"call": "collect"})
+        return StageStats(
+            per_channel={n: snapshot_from_wire(s) for n, s in reply["stats"].items()}
+        )
+
+    def ping(self) -> None:
+        """Binary-mode liveness probe (no stage work); v1 falls back to
+        ``stage_info`` — the cheapest call that proves the stage answers."""
+        if self._conn is not None:
+            self._conn.call(OP_PING, b"", lambda _payload: None, self.timeout)
+        else:
+            self.stage_info()
+
+    # -- pipelined rule programs ---------------------------------------------
+    def apply_rules(self, rules: Sequence[Any]) -> List[bool]:
+        """Apply ``rules`` in order; returns each rule's outcome.
+
+        Binary mode streams the whole program in one flush, then drains the
+        replies — per-rule cost is one encode, not one round trip (the
+        server applies rule frames in arrival order, so ordering semantics
+        are identical to sequential calls). JSON mode degrades to the v1
+        call-per-rule loop. A transport failure raises
+        :class:`RuleShipError` carrying the applied/pending split.
+        """
+        rules = list(rules)
+        outcomes: List[bool] = []
+        if self._conn is not None:
+            pendings = []
+            try:
+                for rule in rules:
+                    pendings.append(
+                        self._conn.request(OP_RULE, encode_rule(rule), decode_bool, flush=False)
+                    )
+                self._conn.flush()
+                for pending in pendings:
+                    outcomes.append(pending.result(self.timeout))
+            except TRANSPORT_ERRORS as exc:
+                raise RuleShipError(rules[: len(outcomes)], rules[len(outcomes):], exc) from exc
+            return outcomes
+        for i, rule in enumerate(rules):
+            try:
+                outcomes.append(bool(self._call({"call": "rule", **rule.to_wire()})["ok"]))
+            except TRANSPORT_ERRORS as exc:
+                raise RuleShipError(rules[:i], rules[i:], exc) from exc
+        return outcomes
+
+    # -- teardown -------------------------------------------------------------
+    def close(self) -> None:
+        if self._conn is not None:
+            self._conn.close()
+            self._conn = None
+        if self._file is not None:
+            try:
+                self._file.close()
+            except OSError:  # a dead peer can fail the buffered flush
+                pass
+            self._file = None
+        try:
+            self._sock.close()
+        except OSError:  # pragma: no cover
+            pass

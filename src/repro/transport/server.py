@@ -1,0 +1,245 @@
+"""Data-plane side of the stage transport: one socket, two protocols.
+
+:class:`StageServer` serves a :class:`~repro.core.stage.Stage` on a UNIX
+domain socket. Every connection starts in the v1 JSON-line protocol (one
+JSON object per line — the protocol all pre-v2 control planes speak). A v2
+client upgrades by sending ``{"call": "hello", "proto": 2}`` as its first
+line; the server acks and the connection switches to binary frames
+(:mod:`repro.transport.framing`). A v1 client never sends the hello, so it
+keeps getting JSON lines — mixed-version fleets need no configuration.
+
+Binary-mode dispatch is **pipelined**:
+
+* rule frames execute inline on the connection's reader thread, so rules
+  apply in exactly the order the control plane sent them (rule programs are
+  order-sensitive: create channel → route → tune);
+* ``collect``/``stage_info`` frames are handed to a small per-connection
+  worker pool, so a slow stat collection (a stage embedded in a loaded
+  server walks many channels) never stalls the rule stream behind it.
+  Replies carry the request's correlation id and may complete out of order.
+"""
+from __future__ import annotations
+
+import json
+import os
+import select
+import socketserver
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import asdict
+from typing import Any, Dict, Optional
+
+from repro.core.rules import DifferentiationRule, HousekeepingRule, rule_from_wire
+from repro.core.stage import Stage
+from repro.core.stats import StatsSnapshot
+
+from .codec import TransportError, decode_rule, encode_stats, pack_value
+from .framing import (
+    FLAG_ERROR,
+    FLAG_REPLY,
+    HELLO_ACK,
+    OP_COLLECT,
+    OP_PING,
+    OP_RULE,
+    OP_STAGE_INFO,
+    HEADER,
+    SocketFrameReader,
+)
+
+#: highest protocol version this server speaks
+PROTO_VERSION = 2
+
+
+def snapshot_to_wire(s: StatsSnapshot) -> Dict[str, Any]:
+    return asdict(s)
+
+
+def snapshot_from_wire(d: Dict[str, Any]) -> StatsSnapshot:
+    return StatsSnapshot(**d)
+
+
+def dispatch_json(stage: Stage, msg: Dict[str, Any]) -> Dict[str, Any]:
+    """v1 JSON-line dispatch — the protocol every pre-v2 peer speaks."""
+    call = msg.get("call")
+    if call == "stage_info":
+        return {"ok": True, "info": stage.stage_info()}
+    if call == "rule":
+        return {"ok": _apply_rule(stage, rule_from_wire(msg))}
+    if call == "collect":
+        stats = stage.collect()
+        return {"ok": True, "stats": {n: snapshot_to_wire(s) for n, s in stats.per_channel.items()}}
+    return {"ok": False, "error": f"unknown call {call!r}"}
+
+
+def _apply_rule(stage: Stage, rule) -> bool:
+    if isinstance(rule, HousekeepingRule):
+        return stage.hsk_rule(rule)
+    if isinstance(rule, DifferentiationRule):
+        return stage.dif_rule(rule)
+    return stage.enf_rule(rule)
+
+
+def serve_binary(stage: Stage, sock) -> None:
+    """Frame loop for one upgraded connection (runs on the handler thread).
+
+    Reads frames straight off the socket (the client sends no frame until it
+    has our hello ack, so nothing is stranded in the line-mode read buffer)
+    and owns its output buffer (socketserver's ``wfile`` is unbuffered — one
+    syscall per write). Returns on clean EOF; any write failure means the
+    peer is gone and the connection unwinds. The per-connection pool is tiny
+    on purpose: one connection belongs to one control plane, which has at
+    most a collect and a rule program in flight per tick.
+
+    Inline (rule/ping) replies are **flushed lazily**: while more request
+    frames are already waiting (in our read buffer or the kernel's), replies
+    accumulate in the output buffer and go out in one ``sendall`` once the
+    input goes idle. A pipelined window of N rules costs one send syscall
+    and one client-side reader wakeup, not N — on a box where a thread
+    wakeup is ~100 µs that, not encoding, is the difference between wire-
+    floor and JSON-era latency. Async (collect/stage_info) replies flush
+    immediately: they are latency-sensitive singletons.
+    """
+    reader = SocketFrameReader(sock)
+    wlock = threading.Lock()
+    out = bytearray()  # unflushed reply frames (guarded by wlock)
+
+    def reply(op: int, corr_id: int, flags: int, payload: bytes, flush: bool = True) -> None:
+        with wlock:
+            out.extend(HEADER.pack(op, flags, corr_id, len(payload)))
+            out.extend(payload)
+            if flush:
+                sock.sendall(out)
+                del out[:]
+
+    def flush_if_idle() -> None:
+        """Flush buffered replies unless more input is already waiting —
+        exact for our own read buffer, kernel-level via a zero-timeout
+        select. Never stalls: the loop always flushes before a read that
+        could block."""
+        if not out:
+            return
+        if reader.has_buffered():
+            return
+        ready, _, _ = select.select([sock], [], [], 0)
+        if ready:
+            return
+        with wlock:
+            if out:
+                sock.sendall(out)
+                del out[:]
+
+    def serve_async(op: int, corr_id: int) -> None:
+        try:
+            if op == OP_COLLECT:
+                payload = encode_stats(stage.collect())
+            else:
+                payload = pack_value(stage.stage_info())
+            reply(op, corr_id, FLAG_REPLY, payload)
+        except OSError:  # peer vanished mid-reply: the reader loop unwinds
+            pass
+        except Exception as exc:  # noqa: BLE001 — report to controller
+            try:
+                reply(op, corr_id, FLAG_REPLY | FLAG_ERROR, pack_value(repr(exc)))
+            except OSError:
+                pass
+
+    pool = ThreadPoolExecutor(max_workers=2, thread_name_prefix=f"paio-stage-{stage.name}-rpc")
+    try:
+        while True:
+            flush_if_idle()
+            frame = reader.read_frame()
+            if frame is None:
+                return
+            op, _flags, corr_id, payload = frame
+            if op == OP_RULE:
+                # inline: rules must apply in arrival order
+                try:
+                    rule = decode_rule(payload)
+                except Exception as exc:  # noqa: BLE001 — framed, stream still sane
+                    reply(op, corr_id, FLAG_REPLY | FLAG_ERROR, pack_value(repr(exc)), flush=False)
+                    continue
+                try:
+                    ok = bool(_apply_rule(stage, rule))
+                except Exception:  # noqa: BLE001 — v1 parity: stage error → False
+                    ok = False
+                reply(op, corr_id, FLAG_REPLY, pack_value(ok), flush=False)
+            elif op in (OP_COLLECT, OP_STAGE_INFO):
+                pool.submit(serve_async, op, corr_id)
+            elif op == OP_PING:
+                reply(op, corr_id, FLAG_REPLY, b"", flush=False)
+            else:
+                reply(op, corr_id, FLAG_REPLY | FLAG_ERROR, pack_value(f"unknown op {op}"), flush=False)
+    except (TransportError, OSError):
+        # peer died unceremoniously (control plane killed mid-frame, socket
+        # reset under a reply): the connection is over — end quietly, the
+        # same way the v1 line loop ends at EOF
+        return
+    finally:
+        pool.shutdown(wait=False)
+
+
+class StageServer:
+    """Serves one Stage on a socket path, speaking v1 (JSON lines) and —
+    unless capped with ``max_protocol=1`` — v2 (negotiated binary frames).
+
+    ``max_protocol=1`` reproduces a pre-v2 stage byte-for-byte (hello gets
+    the v1 unknown-call error), which is how the interop tests and
+    mixed-fleet rehearsals stand up an "old" stage without old code.
+    """
+
+    def __init__(self, stage: Stage, socket_path: str, max_protocol: int = PROTO_VERSION) -> None:
+        self.stage = stage
+        self.socket_path = socket_path
+        self.max_protocol = max_protocol
+        if os.path.exists(socket_path):
+            os.unlink(socket_path)
+        stage_ref = stage
+        binary_enabled = max_protocol >= 2
+
+        class Handler(socketserver.StreamRequestHandler):
+            def handle(self) -> None:  # pragma: no cover - exercised via client
+                for line in self.rfile:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        msg = json.loads(line)
+                    except Exception as exc:  # noqa: BLE001 — report to controller
+                        self._reply({"ok": False, "error": repr(exc)})
+                        continue
+                    if binary_enabled and msg.get("call") == "hello":
+                        if int(msg.get("proto", 1)) >= 2:
+                            self.wfile.write(HELLO_ACK)
+                            self.wfile.flush()
+                            serve_binary(stage_ref, self.connection)
+                            return
+                        self._reply({"ok": True, "proto": 1})
+                        continue
+                    try:
+                        reply = dispatch_json(stage_ref, msg)
+                    except Exception as exc:  # noqa: BLE001 — report to controller
+                        reply = {"ok": False, "error": repr(exc)}
+                    self._reply(reply)
+
+            def _reply(self, obj: Dict[str, Any]) -> None:
+                self.wfile.write(json.dumps(obj).encode() + b"\n")
+                self.wfile.flush()
+
+        class Server(socketserver.ThreadingUnixStreamServer):
+            daemon_threads = True
+            allow_reuse_address = True
+
+        self._server = Server(socket_path, Handler)
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, daemon=True, name=f"paio-stage-{stage.name}"
+        )
+
+    def start(self) -> "StageServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        if os.path.exists(self.socket_path):
+            os.unlink(self.socket_path)

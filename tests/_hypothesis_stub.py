@@ -30,6 +30,12 @@ class _Strategy:
     def filter(self, fn: Any) -> "_Strategy":
         return self
 
+    def __or__(self, other: Any) -> "_Strategy":
+        return self
+
+    def __ror__(self, other: Any) -> "_Strategy":
+        return self
+
 
 class _StrategiesModule:
     def __getattr__(self, name: str) -> _Strategy:

@@ -539,3 +539,139 @@ class TestManualReRegistration:
         assert st.channel("io").get_object("0").rate == 9.0
         assert get_registry().sample()["stage.s.up"] == 1.0
         cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# deferred-rule squash at recovery                                             #
+# --------------------------------------------------------------------------- #
+SQUASH_P = {
+    "policy": "p_old",
+    "flows": [
+        {"name": "burst", "stage": "s1", "match": {"tenant": "x"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "10MiB/s"}}]},
+        {"name": "other", "stage": "s1", "match": {"tenant": "o"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "10MiB/s"}}]},
+    ],
+}
+
+SQUASH_Q = {
+    "policy": "q_new",
+    "flows": [
+        {"name": "burst", "stage": "s1", "match": {"tenant": "y"},
+         "objects": [{"kind": "drl", "id": "0", "params": {"rate": "20MiB/s"}}]},
+    ],
+}
+
+
+class TestDeferredSquash:
+    """A DOWN window spanning policy changes must not replay obsolete
+    housekeeping: removes whose target the *currently installed* policy set
+    owns are dropped at recovery; everything else replays verbatim."""
+
+    def _plane_with_stale_teardown(self):
+        from repro.policy import compile_policy as _compile, load_policy as _load
+
+        cp = ControlPlane(probe_interval=0.0)
+        st = Stage("s1")
+        cp.register_stage(st)
+        cp.install_policy(SQUASH_P)
+        assert st.channel("burst") is not None and st.channel("other") is not None
+        # the stage drops off; the operator removes p_old while it is away —
+        # its teardown (remove route/object/channel for burst AND other) is
+        # deferred, awaiting replay
+        cp._mark_down("s1", ConnectionError("boom"), cp._handles["s1"])
+        cp.remove_policy("p_old")
+        assert cp.fleet_status()["s1"]["deferred_rules"] >= 4
+        assert st.channel("burst") is not None  # teardown never reached it
+        # meanwhile the fleet moves on: q_new re-claims the burst channel
+        # (applied through the handle + registered in the runtime — the state
+        # a fleet reaches when policy churn outpaces a dead stage)
+        compiled_q = _compile(_load(SQUASH_Q), {"s1": {"channels": {}}})
+        for rule in compiled_q.install["s1"]:
+            cp._apply_rule(cp._handles["s1"], rule)
+        cp.policy_runtime.install(compiled_q)
+        return cp, st
+
+    def test_recovery_does_not_tear_down_live_policy_state(self):
+        cp, st = self._plane_with_stale_teardown()
+        try:
+            cp.run_once()  # probe re-admits the stage and replays deferred
+            assert cp.stage_up("s1")
+            # q_new's entities survived the stale p_old teardown …
+            assert st.channel("burst") is not None
+            obj = st.channel("burst").get_object("0")
+            assert obj is not None and obj.rate == pytest.approx(20 * MiB)
+            # … while removes q_new does NOT own still replayed: p_old's
+            # second channel and its stale route are gone
+            assert st.channel("other") is None
+            from repro.core import Context, RequestType
+
+            def ctx(tenant):
+                return Context(
+                    workflow_id=1, request_type=RequestType.read, size=0, tenant=tenant
+                )
+
+            # q_new's route survived; p_old's stale route was cleaned up
+            assert st.select_channel(ctx("y")) == "burst"
+            assert st.select_channel(ctx("x")) == "default"
+            assert cp.fleet_status()["s1"]["deferred_rules"] == 0
+        finally:
+            cp.close()
+
+    def test_manual_reregister_squashes_too(self):
+        cp, st = self._plane_with_stale_teardown()
+        try:
+            cp.register_stage(st)  # operator re-registers by hand
+            assert cp.stage_up("s1")
+            assert st.channel("burst") is not None
+            assert st.channel("other") is None
+        finally:
+            cp.close()
+
+    def test_rehomed_flow_route_survives_recovery(self):
+        # stage routing tables are channel-BLIND (keyed by classifier match):
+        # when the successor policy claims the same match under a DIFFERENT
+        # channel, the stale remove_route must still be squashed or it would
+        # delete the successor's route
+        from repro.core import Context, RequestType
+        from repro.policy import compile_policy as _compile, load_policy as _load
+
+        q_rehomed = {
+            "policy": "q_new",
+            "flows": [
+                {"name": "burst2", "stage": "s1", "match": {"tenant": "x"},
+                 "objects": [{"kind": "drl", "id": "0", "params": {"rate": "20MiB/s"}}]},
+            ],
+        }
+        cp = ControlPlane(probe_interval=0.0)
+        st = Stage("s1")
+        cp.register_stage(st)
+        try:
+            cp.install_policy(SQUASH_P)  # routes tenant=x -> channel "burst"
+            cp._mark_down("s1", ConnectionError("boom"), cp._handles["s1"])
+            cp.remove_policy("p_old")  # remove_route(burst, tenant=x) deferred
+            compiled_q = _compile(_load(q_rehomed), {"s1": {"channels": {}}})
+            for rule in compiled_q.install["s1"]:
+                cp._apply_rule(cp._handles["s1"], rule)
+            cp.policy_runtime.install(compiled_q)
+            cp.run_once()
+            assert cp.stage_up("s1")
+            ctx = Context(workflow_id=1, request_type=RequestType.read, size=0, tenant="x")
+            assert st.select_channel(ctx) == "burst2"
+        finally:
+            cp.close()
+
+    def test_without_reclaim_teardown_replays_verbatim(self):
+        # no successor policy → recovery must still clean up everything
+        cp = ControlPlane(probe_interval=0.0)
+        st = Stage("s1")
+        cp.register_stage(st)
+        try:
+            cp.install_policy(SQUASH_P)
+            cp._mark_down("s1", ConnectionError("boom"), cp._handles["s1"])
+            cp.remove_policy("p_old")
+            cp.run_once()
+            assert cp.stage_up("s1")
+            assert st.channel("burst") is None and st.channel("other") is None
+        finally:
+            cp.close()

@@ -223,3 +223,58 @@ class TestStatsPublication:
     def test_runtime_defaults_to_global_registry(self):
         rt = PolicyRuntime()
         assert rt.registry is get_registry()
+
+
+class TestAllowlist:
+    def _registry(self):
+        r = MetricRegistry()
+        r.set_gauge("stage.s1.up", 1.0)
+        r.describe("stage.s1.up", "paio_stage_up", {"stage": "s1"})
+        r.set_gauge("serve.tenant_a.tokens", 9.0)
+        r.set_gauge("train.step.p99_ms", 3.0)
+        return r
+
+    def test_render_filters_by_family_or_raw_name(self):
+        r = self._registry()
+        text = render_prometheus(r, allow_prefixes=("paio_stage_",))
+        assert 'paio_stage_up{stage="s1"} 1' in text
+        assert "tenant_a" not in text and "train" not in text
+        # raw dotted registry names match too (undescribed metrics)
+        text = render_prometheus(r, allow_prefixes=("train.",))
+        assert "paio_train_step_p99_ms 3" in text
+        assert "paio_stage_up" not in text
+
+    def test_exporter_serves_only_allowlisted_families(self):
+        exp = MetricsExporter(registry=self._registry(), allow_prefixes=("paio_stage_",)).start()
+        try:
+            body = urllib.request.urlopen(exp.url, timeout=5.0).read().decode()
+            assert "paio_stage_up" in body
+            assert "tenant_a" not in body
+        finally:
+            exp.stop()
+
+    def test_non_loopback_bind_requires_allowlist_or_opt_in(self):
+        with pytest.raises(ValueError, match="non-loopback"):
+            MetricsExporter(registry=MetricRegistry(), host="0.0.0.0")
+        # either escape hatch is accepted (constructor-level guard; no bind)
+        MetricsExporter(registry=MetricRegistry(), host="0.0.0.0", allow_prefixes=("paio_",))
+        MetricsExporter(registry=MetricRegistry(), host="0.0.0.0", allow_all=True)
+
+    def test_loopback_unrestricted_by_default(self):
+        exp = MetricsExporter(registry=self._registry()).start()
+        try:
+            body = urllib.request.urlopen(exp.url, timeout=5.0).read().decode()
+            assert "tenant_a" in body and "paio_stage_up" in body
+        finally:
+            exp.stop()
+
+    def test_control_plane_passthrough(self):
+        from repro.core import ControlPlane
+
+        with ControlPlane() as cp:
+            get_registry().set_gauge("stage.s1.up", 1.0)
+            get_registry().describe("stage.s1.up", "paio_stage_up", {"stage": "s1"})
+            get_registry().set_gauge("secret.detail", 7.0)
+            exp = cp.serve_metrics(allow_prefixes=("paio_stage_",))
+            body = urllib.request.urlopen(exp.url, timeout=5.0).read().decode()
+            assert "paio_stage_up" in body and "secret" not in body
