@@ -21,9 +21,25 @@ control plane actually ships rule programs). With ``--smoke`` it exits
 non-zero unless pipelined binary is ≥ 3x faster per RPC than JSON — the CI
 gate for the wire layer.
 
+``--chaos`` instead runs the chaos soak: a 3-process fleet serving the
+checked-in fleet fair-share policy under a fixed-seed fault plan — wire-level
+delays, drops and connection resets injected by every stage's
+:class:`~repro.transport.faults.FaultPlan`, plus a seeded ``kill -9``/restart
+schedule driven by the parent. Every stage journals its applied config to a
+snapshot, so a killed stage restores enforcement *before* rebinding its
+socket. After the fault window closes the plans disarm and the fleet gets a
+quiet tail; the run then asserts convergence — every stage UP with zero
+deferred rules, the restarted stages re-admitted from their snapshots
+(``snapshot_version > 0``), every tenant's summed DRL rate across the fleet
+within ``--chaos-tolerance`` of its granted share, and the resilience metric
+families (``paio_rpc_retries_total``, ``paio_stage_breaker_state``,
+``paio_stage_up``) present on a self-scraped exporter. Exit 1 on any
+violation — the CI gate for the failure paths.
+
 Usage: python -m benchmarks.bench_fleet_control [--stage-counts 1,4,8]
        [--iters 30] [--stage-delay 0.02] [--json PATH] [--smoke]
        [--rpc] [--rpc-iters 3000] [--rpc-window 64]
+       [--chaos] [--chaos-seed 7] [--chaos-seconds 8] [--chaos-kills 2]
 """
 from __future__ import annotations
 
@@ -31,12 +47,18 @@ import argparse
 import json
 import multiprocessing
 import os
+import random
+import signal
 import sys
 import tempfile
+import threading
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 MiB = float(1 << 20)
+CHAOS_POLICY = os.path.join(
+    os.path.dirname(__file__), "..", "examples", "policies", "fleet_fairshare.json"
+)
 
 
 def _stage_server(name: str, socket_path: str, collect_delay: float, seconds: float) -> None:
@@ -239,7 +261,287 @@ def run_rpc(args) -> int:
     return 0
 
 
-def main() -> int:
+# --------------------------------------------------------------------------- #
+# chaos soak (--chaos)                                                         #
+# --------------------------------------------------------------------------- #
+def _chaos_stage(
+    name: str,
+    socket_path: str,
+    snapshot_path: str,
+    arm_file: str,
+    quiet_file: str,
+    tenants: List[str],
+    seconds: float,
+    chunk: int,
+    fault_kw: Optional[Dict[str, object]],
+    seed: int,
+) -> None:
+    """Child process: one crash-safe stage under chaos — config journal at
+    ``snapshot_path`` (restored before the socket binds, so a restarted
+    process enforces its last-known policy before the plane reaches it), a
+    seeded wire fault plan, and a greedy driver thread per tenant.
+
+    The plan is armed/disarmed through sentinel files the parent creates:
+    ``arm_file`` appears once policy install is done (install's rule path
+    raises out of the installer rather than deferring, so it must stay
+    clean), ``quiet_file`` opens the fault-free convergence tail.
+    """
+    from repro.core import RequestType, Stage, StageServer, build_context, propagate_tenant
+    from repro.transport.faults import FaultPlan
+
+    plan = None
+    if fault_kw:
+        plan = FaultPlan(seed=seed, armed=os.path.exists(arm_file), **fault_kw)
+    stage = Stage(name)
+    server = StageServer(
+        stage, socket_path, snapshot_path=snapshot_path, fault_plan=plan
+    ).start()
+    deadline = time.monotonic() + seconds
+
+    if plan is not None:
+
+        def watch_sentinels() -> None:
+            while not plan.armed:
+                if os.path.exists(arm_file):
+                    plan.arm()
+                    break
+                if time.monotonic() >= deadline:
+                    return
+                time.sleep(0.01)
+            while not os.path.exists(quiet_file):
+                if time.monotonic() >= deadline:
+                    return
+                time.sleep(0.01)
+            plan.armed = False
+
+        threading.Thread(target=watch_sentinels, daemon=True).start()
+
+    def drive(tenant: str) -> None:
+        # wait for the tenant channel (policy install, or the snapshot
+        # restore on a crash-restart — then it exists immediately)
+        while stage.channel(tenant) is None:
+            if time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
+        with propagate_tenant(tenant):
+            ctx = build_context(RequestType.read, size=chunk)
+        while time.monotonic() < deadline:
+            stage.enforce(ctx, None)
+
+    for tenant in tenants:
+        threading.Thread(target=drive, args=(tenant,), daemon=True).start()
+    while time.monotonic() < deadline:
+        time.sleep(0.05)
+    server.stop()
+
+
+def run_chaos(args) -> int:
+    import urllib.request
+
+    from benchmarks.bench_bandwidth_fairshare import _scaled_policy
+    from repro.core import ControlPlane, RemoteStageHandle
+    from repro.telemetry import parse_prometheus
+    from repro.transport.handle import TRANSPORT_ERRORS, RetryPolicy
+
+    seed = args.chaos_seed
+    rng = random.Random(seed)
+    policy = _scaled_policy(CHAOS_POLICY, 1.0)
+    tenants = [f.name for f in policy.flows]
+    demands = {
+        name: float(qty)
+        for name, qty in dict(dict(policy.objective.params)["demands"]).items()
+    }
+    names = [f"s{i+1}" for i in range(args.chaos_stages)]
+    fault_kw: Dict[str, object] = {
+        "delay_prob": 0.05,
+        "delay_range": (0.001, 0.02),
+        "drop_prob": 0.02,
+        "reset_prob": 0.02,
+        "max_faults": args.chaos_faults,
+    }
+    lifetime = args.chaos_seconds + 10.0
+    chunk = 128 * 1024
+    mp = multiprocessing.get_context(
+        "fork" if "fork" in multiprocessing.get_all_start_methods() else None
+    )
+    failures: List[str] = []
+    restarted: List[str] = []
+    kills = 0
+    with tempfile.TemporaryDirectory() as d:
+        arm_file = os.path.join(d, "faults.armed")
+        quiet_file = os.path.join(d, "faults.quiet")
+        paths = {n: os.path.join(d, f"{n}.sock") for n in names}
+        snaps = {n: os.path.join(d, f"{n}.snapshot") for n in names}
+        procs: Dict[str, object] = {}
+
+        def spawn(name: str) -> None:
+            p = mp.Process(
+                target=_chaos_stage,
+                args=(
+                    name, paths[name], snaps[name], arm_file, quiet_file,
+                    tenants, lifetime, chunk, fault_kw, seed * 1000 + int(name[1:]),
+                ),
+                daemon=True,
+            )
+            p.start()
+            procs[name] = p
+
+        def await_socket(name: str) -> None:
+            t0 = time.monotonic()
+            while not os.path.exists(paths[name]):
+                if time.monotonic() - t0 > 10.0:
+                    raise SystemExit(f"stage {name} never opened {paths[name]}")
+                time.sleep(0.01)
+
+        for n in names:
+            spawn(n)
+        for n in names:
+            await_socket(n)
+
+        with ControlPlane(loop_interval=0.05, probe_interval=0.2) as cp:
+            for n in names:
+                # short per-call timeout: recovery probes inherit it, so a
+                # fault landing on a probe stalls the loop for 1s, not 5s
+                cp.connect(n, paths[n], timeout=1.0)
+            cp.install_policy(policy)
+            cp.keep_history = True
+            exporter = cp.serve_metrics(port=0)
+            with open(arm_file, "w") as f:
+                f.write("armed\n")
+            cp.start()
+
+            # seeded kill -9 / restart schedule inside the fault window; the
+            # last ~2.5 s of the run are the fault-free convergence tail
+            fault_window_ends = time.monotonic() + max(args.chaos_seconds - 2.5, 1.0)
+            for _ in range(args.chaos_kills):
+                time.sleep(rng.uniform(0.6, 1.2))
+                if time.monotonic() >= fault_window_ends:
+                    break
+                victim = rng.choice(names)
+                print(f"chaos: kill -9 {victim} (pid {procs[victim].pid})")
+                os.kill(procs[victim].pid, signal.SIGKILL)
+                procs[victim].join(timeout=5.0)
+                kills += 1
+                time.sleep(rng.uniform(0.3, 0.6))
+                spawn(victim)  # same socket + snapshot: restore-before-bind
+                await_socket(victim)
+                restarted.append(victim)
+            time.sleep(max(fault_window_ends - time.monotonic(), 0.0))
+            with open(quiet_file, "w") as f:
+                f.write("quiet\n")
+            time.sleep(2.5)  # fault-free tail: re-admission + convergence
+            cp.stop()
+
+            # -- convergence assertions -----------------------------------
+            status = cp.fleet_status()
+            for n in names:
+                st = status[n]
+                if not st["up"]:
+                    failures.append(f"stage {n} still DOWN after quiet tail: {st['last_error']}")
+                if st["deferred_rules"]:
+                    failures.append(f"stage {n} has {st['deferred_rules']} deferred rules")
+                if st["breaker"] not in (0, None):
+                    failures.append(f"stage {n} breaker not closed (state {st['breaker']})")
+            if kills == 0:
+                failures.append("kill schedule never fired (chaos window too short?)")
+            for n in sorted(set(restarted)):
+                if status[n]["snapshot_version"] <= 0:
+                    failures.append(
+                        f"restarted stage {n} reported snapshot_version "
+                        f"{status[n]['snapshot_version']} (snapshot restore did not run)"
+                    )
+            installed = cp.list_policies()
+            if len(installed) != 1:
+                failures.append(f"expected 1 installed policy, found {len(installed)}")
+            for summary in installed:
+                if summary["down_stages"] or summary["deferred_rules"]:
+                    failures.append(
+                        f"policy {summary['name']!r} not converged: "
+                        f"down_stages={summary['down_stages']} "
+                        f"deferred_rules={summary['deferred_rules']}"
+                    )
+
+            # fair share: each tenant's DRL rates across the fleet must sum
+            # to its granted share (= its demand: demands fill capacity)
+            rates = {t: 0.0 for t in tenants}
+            for n in names:
+                try:
+                    handle = RemoteStageHandle(
+                        paths[n], timeout=2.0, retry=RetryPolicy(attempts=4, seed=seed)
+                    )
+                    try:
+                        info = handle.stage_info()
+                    finally:
+                        handle.close()
+                except TRANSPORT_ERRORS as exc:
+                    failures.append(f"stage {n} unreachable for the final audit: {exc!r}")
+                    continue
+                for t in tenants:
+                    chan = info["channels"].get(t)
+                    obj = (chan or {}).get("objects", {}).get("0")
+                    if obj is None:
+                        failures.append(f"stage {n}: tenant {t} has no DRL object")
+                    else:
+                        rates[t] += float(obj.get("rate") or 0.0)
+            print(f"\n{'tenant':<10} {'granted MiB/s':>14} {'fleet DRL MiB/s':>16} {'ok':>4}")
+            for t in tenants:
+                err = abs(rates[t] - demands[t]) / demands[t]
+                ok = err <= args.chaos_tolerance
+                if not ok:
+                    failures.append(
+                        f"tenant {t} fleet rate {rates[t]/MiB:.2f} MiB/s vs grant "
+                        f"{demands[t]/MiB:.2f} MiB/s ({err:.1%} > {args.chaos_tolerance:.0%})"
+                    )
+                print(f"{t:<10} {demands[t]/MiB:>14.1f} {rates[t]/MiB:>16.2f} {'yes' if ok else 'NO':>4}")
+
+            # resilience metric families must be on the scrape endpoint
+            with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+                metrics = parse_prometheus(resp.read().decode())
+            for n in names:
+                if metrics.get(f'paio_stage_up{{stage="{n}"}}') != 1.0:
+                    failures.append(f'paio_stage_up{{stage="{n}"}} != 1 on scrape endpoint')
+                for key in (
+                    f'paio_rpc_retries_total{{stage="{n}"}}',
+                    f'paio_stage_breaker_state{{stage="{n}"}}',
+                ):
+                    if key not in metrics:
+                        failures.append(f"{key} missing from scrape endpoint")
+            ticks = len(cp.history)
+        for p in procs.values():
+            p.terminate()
+        for p in procs.values():
+            p.join(timeout=10.0)
+
+    print(
+        f"\nchaos soak: seed={seed} stages={len(names)} kills={kills} "
+        f"restarts={len(restarted)} ({sorted(set(restarted))}) ticks={ticks}"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {
+                    "benchmark": "bench_fleet_control --chaos",
+                    "seed": seed,
+                    "stages": len(names),
+                    "kills": kills,
+                    "restarted": restarted,
+                    "ticks": ticks,
+                    "fleet_rates_mib": {t: rates[t] / MiB for t in tenants},
+                    "failures": failures,
+                },
+                f,
+                indent=2,
+            )
+        print(f"wrote {args.json}")
+    if failures:
+        for line in failures:
+            print(f"FAIL: {line}", file=sys.stderr)
+        return 1
+    print("chaos soak converged: fleet up, zero deferred rules, fair share within tolerance")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--stage-counts", default="1,4,8", help="comma-separated fleet sizes")
     ap.add_argument("--iters", type=int, default=30, help="measured loop iterations per mode")
@@ -262,8 +564,21 @@ def main() -> int:
     )
     ap.add_argument("--rpc-iters", type=int, default=3000, help="RPCs per transport in --rpc mode")
     ap.add_argument("--rpc-window", type=int, default=64, help="pipelined rules in flight in --rpc mode")
-    args = ap.parse_args()
+    ap.add_argument(
+        "--chaos", action="store_true",
+        help="chaos soak: fleet under a fixed-seed fault plan (wire faults + "
+        "kill -9/restart) must converge — the CI gate for the failure paths",
+    )
+    ap.add_argument("--chaos-seed", type=int, default=7, help="seed for the fault plans and the kill schedule")
+    ap.add_argument("--chaos-seconds", type=float, default=8.0, help="total soak duration (last ~2.5s are the fault-free tail)")
+    ap.add_argument("--chaos-stages", type=int, default=3, help="fleet size in --chaos mode")
+    ap.add_argument("--chaos-kills", type=int, default=2, help="kill -9/restart cycles in the fault window")
+    ap.add_argument("--chaos-faults", type=int, default=12, help="wire-fault budget per stage process")
+    ap.add_argument("--chaos-tolerance", type=float, default=0.02, help="allowed relative error on each tenant's fleet-summed DRL rate")
+    args = ap.parse_args(argv)
 
+    if args.chaos:
+        return run_chaos(args)
     if args.rpc:
         return run_rpc(args)
 

@@ -1,0 +1,25 @@
+"""Fixed-seed chaos smoke — the CI entry point for the fleet's failure paths.
+
+Runs ``benchmarks.bench_fleet_control --chaos`` with the pinned seed: a
+3-process fleet serving the checked-in fleet fair-share policy under a
+deterministic fault plan (wire delays/drops/resets per stage) plus a seeded
+kill -9/restart schedule, followed by a fault-free convergence tail. The run
+exits non-zero unless the fleet converges — every stage UP with zero
+deferred rules, kill -9'd stages restored from their config snapshots before
+re-registering (``snapshot_version > 0``), each tenant's fleet-summed DRL
+rate within 2% of its granted share, and the resilience metric families
+(``paio_rpc_retries_total``, ``paio_stage_breaker_state``, ``paio_stage_up``)
+present on the self-scraped exporter endpoint.
+
+Run: python scripts/chaos_smoke.py [extra bench_fleet_control args]
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.bench_fleet_control import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(["--chaos", "--chaos-seed", "7"] + sys.argv[1:]))

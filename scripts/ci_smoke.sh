@@ -35,5 +35,8 @@ python -m benchmarks.bench_fleet_control --smoke
 echo "== binary transport e2e (one stage process: v2 negotiated, rules/collect/policy) =="
 python scripts/transport_smoke.py
 
+echo "== chaos smoke (fixed-seed fault plan + kill -9/restart: fleet converges, snapshots restore, retry/breaker metrics scraped) =="
+python scripts/chaos_smoke.py
+
 echo "== per-RPC wire bench (pipelined binary >= 3x JSON-line per rule RPC) =="
 python -m benchmarks.bench_fleet_control --rpc --smoke

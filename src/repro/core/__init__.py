@@ -67,6 +67,7 @@ from .rules import (
     rules_from_wire,
     rules_to_wire,
 )
+from .snapshot import StageConfigJournal
 from .stage import Stage
 from .stats import StageStats, StatsSnapshot
 
@@ -107,6 +108,7 @@ __all__ = [
     "RequestType",
     "Result",
     "Stage",
+    "StageConfigJournal",
     "StageServer",
     "StageState",
     "StageStats",

@@ -14,17 +14,24 @@ from __future__ import annotations
 
 import functools
 import threading
+import time
 import weakref
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.transport import (
+from repro.ft.monitor import HeartbeatMonitor, StragglerReport
+
+# submodule imports (not the repro.transport package) so that importing
+# repro.transport first doesn't hit a partially-initialized package cycle
+from repro.transport.handle import (
     TRANSPORT_ERRORS,
+    CircuitBreaker,
     RemoteStageHandle,
+    RetryPolicy,
     RuleShipError,
-    StageServer,
 )
+from repro.transport.server import StageServer
 
 from .clock import Clock, DEFAULT_CLOCK
 from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
@@ -115,6 +122,10 @@ class StageState:
     last_probe: float = -float("inf")
     deferred: Dict[Tuple, Any] = field(default_factory=dict)
     _defer_seq: int = 0
+    #: snapshot version the stage reported at its last (re)admission — >0
+    #: means the stage restored enforcement from its config journal before
+    #: the plane reached it (see repro.core.snapshot)
+    snapshot_version: int = 0
 
     def defer(self, rule: Any) -> None:
         if isinstance(rule, EnforcementRule):
@@ -173,6 +184,9 @@ class ControlPlane:
         concurrent: bool = True,
         stage_deadline: float = 1.0,
         probe_interval: float = 0.5,
+        retry: Any = "default",
+        breaker: bool = True,
+        heartbeats: Optional[HeartbeatMonitor] = None,
     ) -> None:
         self.algorithm = algorithm
         self._clock = clock
@@ -193,6 +207,27 @@ class ControlPlane:
         self.stage_deadline = stage_deadline
         #: minimum plane-clock seconds between recovery probes of a DOWN stage
         self.probe_interval = probe_interval
+        #: retry policy handed to connect()-created handles for their
+        #: idempotent calls: "default" → a seeded exponential-backoff policy,
+        #: None → one attempt per call (pre-resilience behavior), or any
+        #: RetryPolicy. One shared policy is fine — it is thread-safe and
+        #: per-call state is local to the handle.
+        self._retry: Optional[RetryPolicy] = (
+            RetryPolicy(seed=0) if retry == "default" else retry
+        )
+        #: per-stage circuit breakers (created on connect, survive handle
+        #: swaps across down/probe/recover cycles so breaker history is a
+        #: property of the stage, not of one socket)
+        self._breaker_enabled = breaker
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        #: fleet heartbeat/straggler monitor: every successful collect beats
+        #: it with the stage's collect latency as the "step time", so
+        #: fleet_status() carries dead/straggler verdicts and
+        #: squeeze_stragglers() can act on them — one liveness mechanism,
+        #: not two disconnected ones
+        self.heartbeats = (
+            heartbeats if heartbeats is not None else HeartbeatMonitor(clock=clock)
+        )
         self._handles: Dict[str, StageHandle] = {}
         #: per-stage liveness + deferred-rule state; guarded by _fleet_lock
         self._stage_states: Dict[str, StageState] = {}
@@ -251,8 +286,36 @@ class ControlPlane:
         preference (``auto`` negotiates binary v2 and falls back to the v1
         JSON-line protocol, ``binary``/``json`` force one end of that) — a
         fleet can mix v1 and v2 stages on one plane with identical
-        semantics."""
-        self.register(name, RemoteStageHandle(socket_path, timeout=timeout, protocol=protocol))
+        semantics.
+
+        Handles created here get the plane's resilience defaults: idempotent
+        calls retry with backoff (``retry=None`` in the constructor disables
+        this), and the stage's circuit breaker — shared across reconnects —
+        fails fast once the stage keeps dying (``paio_stage_breaker_state``).
+        """
+        self.register(
+            name,
+            RemoteStageHandle(
+                socket_path,
+                timeout=timeout,
+                protocol=protocol,
+                retry=self._retry,
+                breaker=self._breaker_for(name),
+                name=name,
+                registry=self._registry,
+            ),
+        )
+
+    def _breaker_for(self, name: str) -> Optional[CircuitBreaker]:
+        if not self._breaker_enabled:
+            return None
+        with self._fleet_lock:
+            br = self._breakers.get(name)
+            if br is None:
+                br = self._breakers[name] = CircuitBreaker(
+                    name=name, registry=self._registry
+                )
+            return br
 
     # -- fleet liveness ------------------------------------------------------
     def _metric_registry(self):
@@ -290,10 +353,23 @@ class ControlPlane:
         registry.inc(key)
         registry.describe(key, "paio_stage_down", {"stage": name})
 
-    def _recover(self, name: str, fresh_handle: Optional[StageHandle]) -> None:
+    def _recover(
+        self,
+        name: str,
+        fresh_handle: Optional[StageHandle],
+        info: Optional[Dict[str, Any]] = None,
+    ) -> None:
         """Re-admit a DOWN stage: swap in the reconnected handle (UDS) and
         replay the rules deferred while it was away, in submission order with
-        same-target enforcement retunes collapsed to the latest."""
+        same-target enforcement retunes collapsed to the latest.
+
+        When the probe's ``stage_info`` is passed in, recovery also
+        **reconciles** the stage against the installed policy set: a stage
+        that restored its configuration from a snapshot (``snapshot_version``
+        in the info) gets nothing re-shipped unless an entity is actually
+        missing; a stage that came back empty gets the full install programs
+        of the policies that own it. See
+        :func:`repro.policy.engine.missing_install_rules`."""
         with self._fleet_lock:
             state = self._stage_states.get(name)
             if state is None:
@@ -303,6 +379,8 @@ class ControlPlane:
                 self._handles[name] = fresh_handle
             state.up = True
             state.recoveries += 1
+            if info is not None:
+                state.snapshot_version = int(info.get("snapshot_version") or 0)
             deferred = list(state.deferred.values())
             state.deferred.clear()
         if fresh_handle is not None and old_handle is not None and hasattr(old_handle, "close"):
@@ -310,10 +388,29 @@ class ControlPlane:
                 old_handle.close()
             except Exception:  # noqa: BLE001 — the socket is already dead
                 pass
+        breaker = self._breakers.get(name)
+        if breaker is not None:
+            breaker.success()  # re-admission closes the circuit
         self._publish_stage_up(name, True)
+        # reconcile BEFORE deferred replay: missing install programs restore
+        # the entities (channels/objects/routes) the deferred retunes target
+        if info is not None:
+            reconcile = self._reconcile_rules(name, info)
+            if reconcile:
+                self._ship_rules(name, reconcile)
         deferred = self._squash_deferred(name, deferred)
         if deferred:
             self._ship_rules(name, deferred)
+
+    def _reconcile_rules(self, name: str, info: Dict[str, Any]) -> List[Any]:
+        """Install rules a recovered stage is missing relative to the
+        installed policy set (empty when no policies are installed or the
+        stage's snapshot restore already covers them)."""
+        if self._policy_runtime is None:
+            return []
+        from repro.policy.engine import missing_install_rules
+
+        return missing_install_rules(self._policy_runtime.installed(), name, info)
 
     def _squash_deferred(self, name: str, deferred: List[Any]) -> List[Any]:
         """Reconcile a recovering stage's deferred rules with the *currently*
@@ -379,14 +476,25 @@ class ControlPlane:
             fresh: Optional[RemoteStageHandle] = None
             try:
                 if state.socket_path is not None:
+                    # the probe handle is built bare — no retry (the probe IS
+                    # the rate-limited retry) and no breaker (a probe is the
+                    # half-open trial; the plane's probe_interval already
+                    # paces it). Resilience is attached once the stage
+                    # answers, so the recovered handle has it.
                     fresh = RemoteStageHandle(
-                        state.socket_path, timeout=state.timeout, protocol=state.protocol
+                        state.socket_path,
+                        timeout=state.timeout,
+                        protocol=state.protocol,
+                        name=name,
+                        registry=self._registry,
                     )
-                    fresh.stage_info()
-                    self._recover(name, fresh)
+                    info = fresh.stage_info()
+                    fresh.retry = self._retry
+                    fresh.breaker = self._breaker_for(name)
+                    self._recover(name, fresh, info)
                 elif handle is not None:
-                    handle.stage_info()
-                    self._recover(name, None)
+                    info = handle.stage_info()
+                    self._recover(name, None, info)
             except TRANSPORT_ERRORS as exc:
                 state.last_error = repr(exc)
                 if fresh is not None:
@@ -399,7 +507,12 @@ class ControlPlane:
 
     def fleet_status(self) -> Dict[str, Dict[str, Any]]:
         """Per-stage liveness snapshot: ``up``, transition counters, the last
-        transport error, and how many rules are deferred awaiting recovery."""
+        transport error, how many rules are deferred awaiting recovery, the
+        stage's last-reported snapshot version, the heartbeat monitor's
+        verdict (``ok`` / ``straggler`` / ``dead`` / None before any beat),
+        and the circuit-breaker state (0 closed / 1 open / 2 half-open)."""
+        hb = self.heartbeats.report()
+        breakers = dict(self._breakers)
         with self._fleet_lock:
             return {
                 name: {
@@ -409,6 +522,19 @@ class ControlPlane:
                     "down_since": state.down_since if not state.up else None,
                     "last_error": state.last_error or None,
                     "deferred_rules": len(state.deferred),
+                    "snapshot_version": state.snapshot_version,
+                    "heartbeat": (
+                        "dead"
+                        if name in hb.dead
+                        else "straggler"
+                        if name in hb.stragglers
+                        else "ok"
+                        if name in hb.per_host_step
+                        else None
+                    ),
+                    "breaker": (
+                        breakers[name].state if name in breakers else None
+                    ),
                     "transport": "uds" if state.socket_path else "local",
                     # negotiated wire protocol (None for local handles):
                     # "binary" = v2 pipelined frames, "jsonl" = v1 fallback
@@ -420,6 +546,25 @@ class ControlPlane:
                 }
                 for name, state in self._stage_states.items()
             }
+
+    def squeeze_stragglers(
+        self, rules_for: Callable[[str, StragglerReport], List[Any]]
+    ) -> Dict[str, List[Any]]:
+        """Act on the heartbeat monitor's straggler verdicts: ``rules_for``
+        maps each flagged stage (plus the full report, for context like the
+        fleet median step) to the squeeze rules to apply — typically
+        enforcement rules dropping the stage's background DRL rates to
+        ``min_b``, the paper's Algorithm 1 philosophy applied to fleet
+        health. Rules ship through :meth:`_ship_rules` like everything else,
+        so a straggler that dies mid-squeeze gets its rules deferred and
+        replayed on recovery, not dropped. Returns {stage: applied rules}."""
+        report = self.heartbeats.report()
+        to_ship: Dict[str, List[Any]] = {}
+        for name in report.stragglers:
+            rules = rules_for(name, report)
+            if rules:
+                to_ship[name] = list(rules)
+        return self._ship_fanout(to_ship)
 
     def _fanout_pool(self) -> ThreadPoolExecutor:
         """The (lazily created, fixed-size) fan-out pool. A fixed worker cap
@@ -498,15 +643,60 @@ class ControlPlane:
             ]
 
     def _collect_all(self) -> Dict[str, StageStats]:
-        """Collect stats from every UP stage — concurrently (one worker per
-        stage, ``stage_deadline`` budget) unless ``concurrent=False``. A stage
-        that errors or blows the deadline is marked DOWN and skipped; its
-        metrics vanish from this tick (trigger windows freeze rather than see
-        a stale constant), and the loop keeps controlling the rest."""
+        """Collect stats from every UP stage. A stage that errors or blows
+        the ``stage_deadline`` budget is marked DOWN and skipped; its metrics
+        vanish from this tick (trigger windows freeze rather than see a stale
+        constant), and the loop keeps controlling the rest. Every successful
+        collect beats the heartbeat monitor with the stage's collect latency
+        as its step time, feeding the dead/straggler verdicts.
+
+        Stages on the pipelined binary transport are collected **from the
+        loop thread**: all collect frames are issued back-to-back (the
+        per-stage :meth:`~repro.transport.handle.RemoteStageHandle.
+        collect_begin` request is microseconds of enqueue work), then the
+        replies are drained against a shared deadline measured from issue
+        time — no fan-out worker is parked per stage, so the pool is only
+        touched for handles that genuinely block (v1 JSON peers, local
+        handles), and for a typical small fleet it is never touched at all.
+        ``concurrent=False`` keeps the strict sequential path."""
         self._probe_down_stages()
-        return self._fanout(
-            [(name, h, h.collect) for name, h in self._live_handles()], "collect"
-        )
+        waits: List[Tuple[str, StageHandle, Any]] = []
+        sync_tasks: List[Tuple[str, Optional[StageHandle], Callable[[], Any]]] = []
+        t0 = time.perf_counter()
+        for name, h in self._live_handles():
+            begin = getattr(h, "collect_begin", None) if self.concurrent else None
+            if begin is not None:
+                try:
+                    waiter = begin()
+                except TRANSPORT_ERRORS as exc:
+                    self._mark_down(name, exc, h)
+                    continue
+                if waiter is not None:
+                    waits.append((name, h, waiter))
+                    continue
+            sync_tasks.append((name, h, self._timed_collect(name, h)))
+        out: Dict[str, StageStats] = self._fanout(sync_tasks, "collect")
+        for name, h, waiter in waits:
+            remaining = self.stage_deadline - (time.perf_counter() - t0)
+            try:
+                out[name] = waiter.result(max(remaining, 0.001))
+            except TRANSPORT_ERRORS as exc:
+                self._mark_down(name, exc, h)
+            else:
+                self.heartbeats.beat(name, time.perf_counter() - t0)
+        return out
+
+    def _timed_collect(self, name: str, handle: StageHandle) -> Callable[[], StageStats]:
+        """A collect thunk (for the blocking fan-out path) that beats the
+        heartbeat monitor on success with the observed collect latency."""
+
+        def thunk() -> StageStats:
+            start = time.perf_counter()
+            stats = handle.collect()
+            self.heartbeats.beat(name, time.perf_counter() - start)
+            return stats
+
+        return thunk
 
     def _defer(self, name: str, rule: Any) -> None:
         with self._fleet_lock:
@@ -996,6 +1186,8 @@ class ControlPlane:
         for name in names:
             registry.unregister(f"stage.{name}.up")
             registry.unregister(f"stage.{name}.down")
+            registry.unregister(f"stage.{name}.breaker")
+            registry.unregister(f"rpc.{name}.retries")
         for handle in handles:
             if hasattr(handle, "close"):
                 try:

@@ -1,0 +1,207 @@
+"""Crash-safe persistence of a stage's control-applied configuration.
+
+A stage process that dies and restarts comes back with an empty policy set:
+no channels, no enforcement objects, no routes — and until the control plane
+notices, probes, re-admits and re-ships everything, the stage enforces
+*nothing*. For a data plane whose whole point is that enforcement is always
+on, that window is the failure mode.
+
+:class:`StageConfigJournal` closes it. It tracks the stage's **configuration
+state** — the minimal keyed set of control rules whose replay reconstructs
+the stage — and persists it as a versioned JSON snapshot with an atomic
+write-then-rename on every mutation. A restarted stage process replays the
+snapshot into its fresh :class:`~repro.core.stage.Stage` *before* opening its
+control socket (:class:`~repro.transport.server.StageServer` does this when
+given ``snapshot_path=``), so enforcement is restored before the control
+plane can even see the stage again.
+
+State is keyed, not journaled verbatim: repeated enforcement retunes of the
+same (channel, object) collapse to the latest one, and a remove deletes the
+matching create (plus, for ``remove_channel``, everything scoped under the
+channel) — the snapshot stays proportional to live configuration, not to
+control-loop uptime. Replay order is key insertion order, which preserves the
+original apply order of the surviving creates (channel before its objects
+before its routes), with enforcement state retuned in place.
+
+The snapshot ``version`` is monotonic per journal lifetime, restored from the
+file on load — a restarted stage reports ``snapshot_version`` in
+``stage_info()`` so the control plane's recovery path can tell "restored from
+snapshot vN" from "came back empty" and reconcile instead of replaying from
+zero.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from .rules import (
+    DifferentiationRule,
+    EnforcementRule,
+    HousekeepingRule,
+    rule_from_wire,
+)
+
+
+def _freeze_match(match: Dict[str, Any]) -> Tuple:
+    return tuple(sorted(match.items()))
+
+
+def _config_key(rule: Any) -> Optional[Tuple]:
+    """Identity of the configuration entry ``rule`` creates or retunes
+    (None: the rule is a remove — handled separately — or not configuration).
+    Mirrors the policy compiler's entity keying so the control plane and the
+    stage snapshot agree on what an entity is."""
+    if isinstance(rule, HousekeepingRule):
+        if rule.op == "create_channel":
+            return ("chan", rule.channel)
+        if rule.op == "create_object":
+            return ("obj", rule.channel, rule.object_id)
+        return None
+    if isinstance(rule, DifferentiationRule):
+        return ("route", rule.channel, _freeze_match(rule.match), rule.object_id)
+    if isinstance(rule, EnforcementRule):
+        return ("enf", rule.channel, rule.object_id)
+    return None
+
+
+def _remove_key(rule: Any) -> Optional[Tuple]:
+    """Identity of the entry a remove rule deletes (mirror of _config_key)."""
+    if isinstance(rule, HousekeepingRule):
+        if rule.op == "remove_channel":
+            return ("chan", rule.channel)
+        if rule.op == "remove_object":
+            return ("obj", rule.channel, rule.object_id)
+        if rule.op == "remove_route":
+            return (
+                "route",
+                rule.channel,
+                _freeze_match(rule.params.get("match") or {}),
+                rule.object_id,
+            )
+    return None
+
+
+class StageConfigJournal:
+    """Keyed, versioned, atomically-persisted stage configuration.
+
+    Thread-safe: the stage server records from per-connection threads. Saves
+    are synchronous (one small JSON file per mutation, tmp + ``os.replace``);
+    there is no fsync — the contract is atomicity (a reader never sees a torn
+    file), not durability against power loss, which is the right trade for a
+    process-crash recovery path.
+    """
+
+    def __init__(self, path: str, stage: Optional[str] = None) -> None:
+        self.path = path
+        self.stage = stage
+        self._lock = threading.Lock()
+        self._entries: Dict[Tuple, Dict[str, Any]] = {}
+        self._version = 0
+        self._restored_version = 0
+        if os.path.exists(path):
+            self._load()
+
+    # -- persistence ---------------------------------------------------------
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            # a missing/torn snapshot (crash before the first rename) means
+            # "no restored state", never a refusal to start
+            return
+        self._version = self._restored_version = int(doc.get("version", 0))
+        if doc.get("stage") and self.stage is None:
+            self.stage = doc["stage"]
+        for wire in doc.get("rules", []):
+            rule = rule_from_wire(wire)
+            key = _config_key(rule)
+            if key is not None:
+                self._entries[key] = wire
+
+    def _save_locked(self) -> None:
+        doc = {
+            "version": self._version,
+            "stage": self.stage,
+            "rules": list(self._entries.values()),
+        }
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, self.path)
+
+    # -- recording -----------------------------------------------------------
+    def record(self, rule: Any) -> None:
+        """Fold one successfully-applied rule into the snapshot and persist.
+
+        Creates/retunes upsert their entry (an existing key keeps its replay
+        position — a retune must not reorder a create past its channel);
+        removes delete the matching entry, ``remove_channel`` cascading to
+        every object/route/enforcement entry scoped under the channel."""
+        with self._lock:
+            key = _config_key(rule)
+            if key is not None:
+                self._entries[key] = rule.to_wire()
+            else:
+                rkey = _remove_key(rule)
+                if rkey is None:
+                    return  # not configuration (unknown op): nothing to do
+                self._entries.pop(rkey, None)
+                if rkey[0] == "chan":
+                    channel = rkey[1]
+                    for k in [k for k in self._entries if k[1] == channel]:
+                        del self._entries[k]
+                elif rkey[0] == "obj":
+                    # the object's enforcement state dies with it
+                    self._entries.pop(("enf", rkey[1], rkey[2]), None)
+            self._version += 1
+            self._save_locked()
+
+    # -- restore -------------------------------------------------------------
+    def restore(self, stage: Any) -> int:
+        """Replay the snapshot into ``stage`` (a fresh process's empty stage);
+        returns the number of rules replayed. Replay is in original apply
+        order; a rule the stage rejects is skipped (the control plane's
+        recovery reconcile repairs any gap)."""
+        with self._lock:
+            wires = list(self._entries.values())
+        replayed = 0
+        for wire in wires:
+            rule = rule_from_wire(wire)
+            try:
+                if isinstance(rule, HousekeepingRule):
+                    ok = stage.hsk_rule(rule)
+                elif isinstance(rule, DifferentiationRule):
+                    ok = stage.dif_rule(rule)
+                else:
+                    ok = stage.enf_rule(rule)
+            except Exception:  # noqa: BLE001 — restore is best-effort
+                ok = False
+            if ok:
+                replayed += 1
+        return replayed
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+    @property
+    def restored_version(self) -> int:
+        """Version loaded from disk at construction (0: started empty)."""
+        return self._restored_version
+
+    def rules(self) -> List[Any]:
+        """The current configuration as replayable rules (snapshot order)."""
+        with self._lock:
+            return [rule_from_wire(w) for w in self._entries.values()]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+__all__ = ["StageConfigJournal"]

@@ -354,3 +354,49 @@ class PolicyRuntime:
         # actually landed (and the scraped reaction latency includes rule
         # application, not just predicate evaluation)
         return self.trigger_engine.observe(now, samples)
+
+
+def missing_install_rules(
+    installed: List[CompiledPolicy], stage_name: str, info: Mapping[str, Any]
+) -> List[Any]:
+    """Install rules to re-ship to a recovered stage, judged against its live
+    ``stage_info()``.
+
+    A recovered stage is not necessarily empty: a crash-restarted process may
+    have restored its configuration from a :class:`~repro.core.snapshot.
+    StageConfigJournal` before re-registering, and replaying every installed
+    policy from zero would be pure waste (and, at fleet scale, a recovery
+    stampede). Instead, each installed policy's install program for
+    ``stage_name`` is checked against the entities the stage actually has:
+    only policies with a **missing** channel or enforcement object get their
+    program back — in full, because rule application is idempotent
+    (create-if-present retunes, routes re-install over themselves) and routes
+    are not individually introspectable from ``stage_info`` (the routing
+    table exposes masks and entry counts, not matches), so a partial re-ship
+    could not prove route coverage anyway.
+    """
+    from repro.core.channel import DEFAULT_OBJECT_ID
+
+    from .compile import _install_key
+
+    channels = info.get("channels") or {}
+    out: List[Any] = []
+    for compiled in installed:
+        rules = compiled.install.get(stage_name) or []
+        missing = False
+        for rule in rules:
+            key = _install_key(rule)
+            if key is None:
+                continue
+            if key[0] == "chan" and key[1] not in channels:
+                missing = True
+                break
+            if key[0] == "obj":
+                chan = channels.get(key[1])
+                oid = key[2] or DEFAULT_OBJECT_ID
+                if chan is None or oid not in (chan.get("objects") or {}):
+                    missing = True
+                    break
+        if missing:
+            out.extend(rules)
+    return out

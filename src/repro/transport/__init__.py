@@ -13,12 +13,19 @@ inline JSON-line code that used to live in ``repro.core.control``:
 * :mod:`~repro.transport.server` — :class:`StageServer`, one socket serving
   both protocols (v1 JSON lines, negotiated v2 binary);
 * :mod:`~repro.transport.handle` — :class:`RemoteStageHandle`, the
-  negotiating control-plane side.
+  negotiating control-plane side, with opt-in retry (:class:`RetryPolicy`)
+  and per-stage circuit breaking (:class:`CircuitBreaker`);
+* :mod:`~repro.transport.faults` — :class:`FaultPlan`, deterministic
+  seedable wire-level fault injection for tests and chaos soaks.
 
 ``repro.core`` re-exports :class:`StageServer` and :class:`RemoteStageHandle`
 so existing imports keep working; new code can depend on this package
 directly.
 """
+import repro.core  # noqa: F401  — finish core init first: core.control imports
+# our submodules, and entering them while this package is half-built (because
+# a codec → core.rules import re-entered repro.core) is the one real cycle
+
 from .codec import (
     StageError,
     TransportError,
@@ -42,22 +49,42 @@ from .framing import (
     read_frame,
     write_frame,
 )
-from .handle import TRANSPORT_ERRORS, RemoteStageHandle, RuleShipError
+from .connection import ConnectionClosed
+from .faults import DELAY, DROP, PARTIAL, RESET, Fault, FaultPlan, InjectedReset
+from .handle import (
+    TRANSPORT_ERRORS,
+    CircuitBreaker,
+    CircuitOpenError,
+    RemoteStageHandle,
+    RetryPolicy,
+    RuleShipError,
+)
 from .server import PROTO_VERSION, StageServer, dispatch_json, snapshot_from_wire, snapshot_to_wire
 
 __all__ = [
+    "CircuitBreaker",
+    "CircuitOpenError",
+    "ConnectionClosed",
+    "DELAY",
+    "DROP",
+    "Fault",
+    "FaultPlan",
     "FLAG_ERROR",
     "FLAG_REPLY",
     "HEADER",
     "MAX_FRAME_BYTES",
     "OP_COLLECT",
     "OP_PING",
+    "InjectedReset",
     "OP_RULE",
     "OP_STAGE_INFO",
+    "PARTIAL",
     "PROTO_VERSION",
     "PendingReply",
     "PipelinedConnection",
+    "RESET",
     "RemoteStageHandle",
+    "RetryPolicy",
     "RuleShipError",
     "StageError",
     "StageServer",

@@ -10,9 +10,12 @@ callers. Any number of threads can have calls in flight; only the *write* of
 a frame is serialized, and batched writes (``flush=False`` + one
 :meth:`flush`) collapse a whole rule program into one syscall.
 
-Connection death (EOF, reset, decode desync) fails every pending call with a
-:class:`ConnectionError` so the control plane's down-marking sees it on all
-paths at once, not just the call that happened to hit the socket.
+Connection death (EOF, reset, decode desync, a local :meth:`close`, or the
+reader thread dying for *any* reason) fails every pending call immediately
+with a terminal :class:`ConnectionClosed`/:class:`ConnectionError` so the
+control plane's down-marking sees it on all paths at once — a waiter must
+never sit out its full per-call timeout against a connection that is already
+known dead.
 """
 from __future__ import annotations
 
@@ -22,6 +25,13 @@ from typing import Any, Callable, Dict, Optional
 
 from .codec import StageError, TransportError, unpack_value
 from .framing import FLAG_ERROR, read_frame, write_frame
+
+
+class ConnectionClosed(ConnectionError):
+    """Terminal: the connection was closed (locally or by the peer) — no
+    reply is ever coming. Subclasses ConnectionError, so every existing
+    transport-error path (down-marking, RuleShipError) treats it as the
+    stage dying."""
 
 
 class PendingReply:
@@ -85,7 +95,7 @@ class PipelinedConnection:
         pending = PendingReply(decoder)
         with self._wlock:
             if self._closed:
-                raise ConnectionError("connection closed")
+                raise ConnectionClosed("connection closed")
             self._corr = corr = (self._corr + 1) & 0xFFFFFFFF
             pending.corr_id = corr
             with self._plock:
@@ -105,9 +115,15 @@ class PipelinedConnection:
             self._wfile.flush()
 
     def call(self, op: int, payload: bytes, decoder: Callable[[bytes], Any], timeout: Optional[float]) -> Any:
-        """Request + wait: the blocking single-call path. On timeout the
-        pending entry is dropped so a late reply is discarded, not misfiled."""
-        pending = self.request(op, payload, decoder)
+        """Request + wait: the blocking single-call path."""
+        return self.wait(self.request(op, payload, decoder), timeout)
+
+    def wait(self, pending: PendingReply, timeout: Optional[float]) -> Any:
+        """Wait for an in-flight :class:`PendingReply` (from :meth:`request`).
+        On timeout the pending entry is dropped so a late reply is discarded,
+        not misfiled — callers issuing pipelined requests themselves (e.g.
+        the control plane's loop-thread collect fan-in) get the same timeout
+        hygiene as :meth:`call`."""
         try:
             return pending.result(timeout)
         except TimeoutError:
@@ -117,11 +133,16 @@ class PipelinedConnection:
 
     # -- receiving ----------------------------------------------------------
     def _read_loop(self) -> None:
+        # whatever takes this thread down — clean EOF, a transport error, or
+        # an exception nobody anticipated — every in-flight waiter is failed
+        # terminally on the way out; waiters must never be left to ride out
+        # their own per-call timeouts against a dead reader
+        failure: BaseException = ConnectionClosed("connection closed")
         try:
             while True:
                 frame = read_frame(self._rfile)
                 if frame is None:
-                    self._fail_all(ConnectionError("stage closed the control socket"))
+                    failure = ConnectionClosed("stage closed the control socket")
                     return
                 _op, flags, corr_id, payload = frame
                 with self._plock:
@@ -131,9 +152,11 @@ class PipelinedConnection:
                 # an unmatched corr id is a reply whose caller timed out and
                 # walked away — drop it, the stream itself is still framed
         except (OSError, TransportError, ValueError) as exc:
-            self._fail_all(
-                exc if isinstance(exc, ConnectionError) else TransportError(repr(exc))
-            )
+            failure = exc if isinstance(exc, ConnectionError) else TransportError(repr(exc))
+        except BaseException as exc:  # noqa: BLE001 — reader death is terminal
+            failure = TransportError(f"transport reader died: {exc!r}")
+        finally:
+            self._fail_all(failure)
 
     def _fail_all(self, exc: BaseException) -> None:
         with self._plock:
@@ -147,7 +170,12 @@ class PipelinedConnection:
     def close(self) -> None:
         with self._wlock:
             self._closed = True
-        # unblock the reader FIRST: closing a buffered file while another
+        # fail every in-flight waiter NOW, terminally: if the reader is wedged
+        # (shutdown racing a peer that is already gone can leave it parked in
+        # recv), waiters must not hang behind the join below — close() is the
+        # caller's statement that no reply is ever coming
+        self._fail_all(ConnectionClosed("connection closed"))
+        # then unblock the reader: closing a buffered file while another
         # thread is parked in its readinto deadlocks on the buffer lock, so
         # shut the socket down (reader sees EOF and exits), join it, then
         # close the file objects
@@ -166,4 +194,3 @@ class PipelinedConnection:
             self._sock.close()
         except OSError:  # pragma: no cover
             pass
-        self._fail_all(ConnectionError("connection closed"))

@@ -1,0 +1,223 @@
+"""Deterministic fault injection for the stage transport.
+
+The fleet layer's failure paths (down-marking, deferred-rule replay, probe
+re-admission, the RuleShipError applied/pending split) existed before anything
+*exercised* them under real faults. This module is the exerciser: a seedable
+:class:`FaultPlan` wired into :class:`~repro.transport.server.StageServer`
+(``StageServer(stage, path, fault_plan=...)``) injects faults at the wire
+layer, per request frame, on the data-plane side — exactly where a real
+shared-storage fleet sees them:
+
+* ``delay``  — sleep before serving the request (slow stage / loaded box);
+* ``drop``   — swallow the request, never reply (lost frame: the caller hits
+  its per-call timeout);
+* ``reset``  — flush whatever replies are buffered, then hard-close the
+  connection (process crash / RST mid-program — the deterministic way to
+  produce a mid-batch :class:`~repro.transport.handle.RuleShipError` split);
+* ``partial``— write a truncated frame header, then close (torn write: the
+  client's frame decoder must fail the stream, not misparse it).
+
+Two authoring modes:
+
+* **seeded** — ``FaultPlan(seed=7, reset_prob=0.02, delay_prob=0.1)`` draws
+  per-request decisions from a :class:`random.Random` stream. Each accepted
+  connection gets its own child stream (seed XOR connection index), so
+  decisions are reproducible per (seed, connection order) and independent of
+  cross-connection thread interleaving. This is the chaos-soak mode.
+* **scripted** — ``FaultPlan.scripted({"rule": [(2, RESET)]})`` fires an
+  exact action on the Nth request of an op, counted across all connections.
+  This is the unit-test mode: "reset after exactly 2 applied rules" is a
+  statement, not a probability.
+
+Process-level faults (kill -9, restart) are outside the wire layer on
+purpose — the chaos driver (``bench_fleet_control --chaos``) owns those,
+scheduled from the same seed.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+#: fault actions (the strings are the public API — plans serialize to argv)
+DELAY = "delay"
+DROP = "drop"
+RESET = "reset"
+PARTIAL = "partial"
+
+#: ops a plan can target, as seen by the server dispatch (both protocols)
+FAULT_OPS = ("rule", "collect", "stage_info", "ping")
+
+
+class InjectedReset(ConnectionError):
+    """Raised inside the server loop to unwind a connection the plan reset.
+
+    Subclasses ConnectionError so the server's existing peer-died handling
+    ends the connection quietly, the same way a real reset would.
+    """
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One injected fault decision for one request frame."""
+
+    action: str
+    delay_s: float = 0.0
+
+
+class ConnectionFaults:
+    """Per-connection fault decisions (seeded mode: own RNG stream)."""
+
+    def __init__(
+        self,
+        plan: "FaultPlan",
+        rng: Optional[random.Random],
+    ) -> None:
+        self._plan = plan
+        self._rng = rng
+
+    def before(self, op: str) -> Optional[Fault]:
+        """Decide the fault (if any) for the next request of ``op``."""
+        return self._plan._decide(op, self._rng)
+
+
+class FaultPlan:
+    """Seedable, deterministic fault schedule for a :class:`StageServer`.
+
+    Thread-safe: scripted counters and the injection budget are shared across
+    connections under one lock; seeded decisions use per-connection RNG
+    streams (see module docstring).
+    """
+
+    def __init__(
+        self,
+        seed: int = 0,
+        delay_prob: float = 0.0,
+        delay_range: Tuple[float, float] = (0.001, 0.02),
+        drop_prob: float = 0.0,
+        reset_prob: float = 0.0,
+        partial_prob: float = 0.0,
+        ops: Sequence[str] = FAULT_OPS,
+        max_faults: Optional[int] = None,
+        armed: bool = True,
+    ) -> None:
+        self.seed = int(seed)
+        self.delay_prob = float(delay_prob)
+        self.delay_range = (float(delay_range[0]), float(delay_range[1]))
+        self.drop_prob = float(drop_prob)
+        self.reset_prob = float(reset_prob)
+        self.partial_prob = float(partial_prob)
+        self.ops = tuple(ops)
+        #: total injection budget across the plan (None = unlimited); lets a
+        #: soak guarantee a quiet convergence tail after N faults
+        self.max_faults = max_faults
+        #: ``armed=False`` starts the plan inert — every decision is "no
+        #: fault" and NO RNG draws are made, so the seeded streams begin at
+        #: :meth:`arm` time. The chaos soak uses this to keep policy install
+        #: (whose rule path raises out of the installer rather than
+        #: deferring) clean, then arms the plan for the measured window.
+        self.armed = bool(armed)
+        self._lock = threading.Lock()
+        self._conn_count = 0
+        self._injected = 0
+        #: scripted mode: op -> {nth request -> action}, counters shared
+        #: across connections (see :meth:`scripted`)
+        self._script: Optional[Dict[str, Dict[int, str]]] = None
+        self._script_seen: Dict[str, int] = {}
+        #: injection log (action name -> count), for assertions/telemetry
+        self.injected_by_action: Dict[str, int] = {}
+
+    @classmethod
+    def scripted(cls, events: Mapping[str, Sequence[Tuple[int, str]]]) -> "FaultPlan":
+        """Exact-schedule plan: ``{"rule": [(2, RESET)]}`` fires RESET on the
+        3rd (0-based index 2) rule request served, counted plan-wide."""
+        plan = cls()
+        plan._script = {op: dict(pairs) for op, pairs in events.items()}
+        return plan
+
+    # -- server-side hooks ---------------------------------------------------
+    def connection(self) -> ConnectionFaults:
+        """A per-connection decision stream (the server calls this once per
+        accepted connection)."""
+        with self._lock:
+            idx = self._conn_count
+            self._conn_count += 1
+        rng = None
+        if self._script is None:
+            rng = random.Random((self.seed << 16) ^ (idx * 0x9E3779B1 + 1))
+        return ConnectionFaults(self, rng)
+
+    def _budget_ok_locked(self) -> bool:
+        return self.max_faults is None or self._injected < self.max_faults
+
+    def _note_locked(self, action: str) -> None:
+        self._injected += 1
+        self.injected_by_action[action] = self.injected_by_action.get(action, 0) + 1
+
+    def arm(self) -> None:
+        """Start injecting (idempotent). See ``armed`` in the constructor."""
+        self.armed = True
+
+    def _decide(self, op: str, rng: Optional[random.Random]) -> Optional[Fault]:
+        if not self.armed:
+            return None
+        if self._script is not None:
+            with self._lock:
+                table = self._script.get(op)
+                if table is None:
+                    return None
+                nth = self._script_seen.get(op, 0)
+                self._script_seen[op] = nth + 1
+                action = table.get(nth)
+                if action is None or not self._budget_ok_locked():
+                    return None
+                self._note_locked(action)
+            return Fault(action)
+        if op not in self.ops or rng is None:
+            return None
+        # one draw per request keeps the stream aligned no matter which
+        # probabilities are zero — changing one knob does not reshuffle the
+        # others' decisions for the same seed
+        roll = rng.random()
+        delay_roll = rng.uniform(*self.delay_range)
+        action = None
+        edge = self.reset_prob
+        if roll < edge:
+            action = RESET
+        elif roll < (edge := edge + self.partial_prob):
+            action = PARTIAL
+        elif roll < (edge := edge + self.drop_prob):
+            action = DROP
+        elif roll < edge + self.delay_prob:
+            action = DELAY
+        if action is None:
+            return None
+        with self._lock:
+            if not self._budget_ok_locked():
+                return None
+            self._note_locked(action)
+        return Fault(action, delay_s=delay_roll if action == DELAY else 0.0)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def injected(self) -> int:
+        with self._lock:
+            return self._injected
+
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self.injected_by_action)
+
+
+__all__ = [
+    "DELAY",
+    "DROP",
+    "PARTIAL",
+    "RESET",
+    "FAULT_OPS",
+    "ConnectionFaults",
+    "Fault",
+    "FaultPlan",
+    "InjectedReset",
+]

@@ -15,13 +15,37 @@ rule shipping for the same stage overlap in flight instead of serializing on
 a handle lock, and :meth:`apply_rules` streams a whole rule program in one
 flush. In JSON mode behavior is exactly the v1 handle's: one lock, one
 call-reply per round trip.
+
+Resilience (opt-in via ``retry=`` / ``breaker=``; the control plane turns
+both on for fleet handles):
+
+* **retry** — the idempotent read-only calls (``ping`` / ``collect`` /
+  ``stage_info``) retry transport failures with exponential backoff +
+  deterministic jitter, reconnecting (and re-negotiating) between attempts.
+  Rule calls are never retried here: a mid-program failure must surface as
+  :class:`RuleShipError` so the control plane's applied/pending deferral
+  owns replay.
+* **circuit breaker** — after ``failure_threshold`` consecutive transport
+  failures the breaker OPENs and every call fails fast with
+  :class:`CircuitOpenError` (a ConnectionError: the control plane's
+  down-mark machinery takes over instead of every tick hammering a dead
+  socket). After ``reset_timeout`` one trial call is let through
+  (HALF_OPEN); success re-CLOSEs the breaker.
+
+Named handles (``name=``, set by ``ControlPlane.connect``) publish
+``rpc.<name>.retries`` (export family ``paio_rpc_retries`` → rendered
+``paio_rpc_retries_total``) and the breaker publishes
+``stage.<name>.breaker`` (``paio_stage_breaker_state``: 0 closed, 1 open,
+2 half-open) into the shared metric registry.
 """
 from __future__ import annotations
 
 import json
+import random
 import socket
 import threading
-from typing import Any, Dict, List, Optional, Sequence
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from repro.core.rules import (
     DifferentiationRule,
@@ -58,34 +82,270 @@ class RuleShipError(ConnectionError):
         self.cause = cause
 
 
-class RemoteStageHandle:
-    """StageHandle over UDS with v1↔v2 protocol negotiation."""
+class CircuitOpenError(ConnectionError):
+    """The per-stage circuit breaker is OPEN: the stage failed repeatedly and
+    the cooldown has not elapsed — fail fast instead of touching the socket."""
 
-    def __init__(self, socket_path: str, timeout: float = 5.0, protocol: str = "auto") -> None:
+
+class RetryPolicy:
+    """Exponential backoff + deterministic jitter for idempotent RPC retries.
+
+    ``attempts`` is the total number of tries (1 = no retries). Backoff for
+    retry *k* (0-based) is ``base * factor**k``, capped at ``max_backoff``,
+    scaled by a jitter factor drawn uniformly from ``[1-jitter, 1]`` — seeded,
+    so a fixed-seed chaos run retries on a reproducible schedule.
+    """
+
+    def __init__(
+        self,
+        attempts: int = 3,
+        base: float = 0.02,
+        factor: float = 2.0,
+        max_backoff: float = 0.5,
+        jitter: float = 0.5,
+        seed: Optional[int] = None,
+    ) -> None:
+        if attempts < 1:
+            raise ValueError("attempts must be >= 1")
+        self.attempts = int(attempts)
+        self.base = float(base)
+        self.factor = float(factor)
+        self.max_backoff = float(max_backoff)
+        self.jitter = float(jitter)
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+
+    def backoff(self, retry_index: int) -> float:
+        """Seconds to sleep before retry number ``retry_index`` (0-based)."""
+        raw = min(self.base * (self.factor ** retry_index), self.max_backoff)
+        with self._lock:
+            scale = 1.0 - self._rng.random() * self.jitter
+        return raw * scale
+
+
+class CircuitBreaker:
+    """Consecutive-failure circuit breaker for one stage's transport.
+
+    States: CLOSED (0, calls flow), OPEN (1, calls fail fast), HALF_OPEN
+    (2, one trial call in flight after the cooldown). The breaker outlives
+    individual handles on purpose — the control plane keeps one per stage in
+    its :class:`StageState` and threads it through probe reconnects, so
+    breaker history survives handle swaps.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = 0, 1, 2
+
+    def __init__(
+        self,
+        failure_threshold: int = 3,
+        reset_timeout: float = 1.0,
+        name: Optional[str] = None,
+        registry=None,
+        time_fn: Callable[[], float] = time.monotonic,
+    ) -> None:
+        self.failure_threshold = int(failure_threshold)
+        self.reset_timeout = float(reset_timeout)
+        self.name = name
+        self._registry = registry
+        self._time = time_fn
+        self._lock = threading.Lock()
+        self._state = self.CLOSED
+        self._failures = 0
+        self._opened_at = 0.0
+        self.trips = 0  #: CLOSED→OPEN transitions observed
+        if name is not None:
+            self._publish(self.CLOSED)
+
+    def _metric_registry(self):
+        if self._registry is not None:
+            return self._registry
+        from repro.telemetry import get_registry  # local: avoid import cycle
+
+        return get_registry()
+
+    def _publish(self, state: int) -> None:
+        if self.name is None:
+            return
+        registry = self._metric_registry()
+        key = f"stage.{self.name}.breaker"
+        registry.set_gauge(key, float(state))
+        registry.describe(key, "paio_stage_breaker_state", {"stage": self.name})
+
+    @property
+    def state(self) -> int:
+        with self._lock:
+            return self._state
+
+    def allow(self) -> None:
+        """Gate one call: no-op when CLOSED; when OPEN, either transitions to
+        HALF_OPEN (cooldown elapsed — this call is the trial) or raises
+        :class:`CircuitOpenError`."""
+        publish: Optional[int] = None
+        with self._lock:
+            if self._state == self.CLOSED:
+                return
+            if self._state == self.OPEN:
+                if (self._time() - self._opened_at) < self.reset_timeout:
+                    raise CircuitOpenError(
+                        f"circuit open for stage {self.name or '?'} after "
+                        f"{self._failures} consecutive transport failures"
+                    )
+                self._state = self.HALF_OPEN
+                publish = self._state
+            # HALF_OPEN: let the trial(s) through — a failed trial re-opens
+        if publish is not None:
+            self._publish(publish)
+
+    def success(self) -> None:
+        publish: Optional[int] = None
+        with self._lock:
+            self._failures = 0
+            if self._state != self.CLOSED:
+                self._state = self.CLOSED
+                publish = self._state
+        if publish is not None:
+            self._publish(publish)
+
+    def failure(self) -> None:
+        publish: Optional[int] = None
+        with self._lock:
+            self._failures += 1
+            tripped = (
+                self._state == self.HALF_OPEN or self._failures >= self.failure_threshold
+            )
+            if tripped and self._state != self.OPEN:
+                self._state = self.OPEN
+                self._opened_at = self._time()
+                self.trips += 1
+                publish = self._state
+            elif self._state == self.OPEN:
+                self._opened_at = self._time()  # still failing: restart cooldown
+        if publish is not None:
+            self._publish(publish)
+
+
+class _PipelinedCollect:
+    """In-flight pipelined collect (see :meth:`RemoteStageHandle.collect_begin`)."""
+
+    __slots__ = ("_handle", "_conn", "_pending")
+
+    def __init__(self, handle: "RemoteStageHandle", conn: PipelinedConnection, pending) -> None:
+        self._handle = handle
+        self._conn = conn
+        self._pending = pending
+
+    def result(self, timeout: Optional[float]) -> StageStats:
+        try:
+            stats = self._conn.wait(self._pending, timeout)
+        except TRANSPORT_ERRORS:
+            self._handle._record_failure()
+            raise
+        self._handle._record_success()
+        return stats
+
+
+class RemoteStageHandle:
+    """StageHandle over UDS with v1↔v2 protocol negotiation and optional
+    retry/circuit-breaker resilience."""
+
+    def __init__(
+        self,
+        socket_path: str,
+        timeout: float = 5.0,
+        protocol: str = "auto",
+        retry: Optional[RetryPolicy] = None,
+        breaker: Optional[CircuitBreaker] = None,
+        name: Optional[str] = None,
+        registry=None,
+    ) -> None:
         if protocol not in ("auto", "binary", "json"):
             raise ValueError(f"protocol must be auto|binary|json, not {protocol!r}")
         self.socket_path = socket_path
         self.timeout = timeout
         self.protocol = protocol
+        self.retry = retry
+        self.breaker = breaker
+        self.name = name
+        self._registry = registry
         #: negotiated protocol version (1 = JSON lines, 2 = binary frames)
         self.proto = 1
-        self._sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-        self._sock.settimeout(timeout)
+        self._sock: Optional[socket.socket] = None
         self._conn: Optional[PipelinedConnection] = None
         self._file = None
         self._lock = threading.Lock()  # v1 mode: one call-reply at a time
+        #: bumped per (re)connect; a failed caller reconnects only if nobody
+        #: else already did (the generation it failed on is still current)
+        self._generation = 0
+        self._reconnect_lock = threading.Lock()
+        self._closed = False
+        if name is not None:
+            # pre-register the retry counter at 0 so the paio_rpc_retries
+            # family is on the scrape endpoint from the first connect, not
+            # only after the first fault
+            registry_ = self._metric_registry()
+            key = f"rpc.{name}.retries"
+            registry_.inc(key, 0.0)
+            registry_.describe(key, "paio_rpc_retries", {"stage": name})
         try:
-            self._sock.connect(socket_path)
-            file = self._sock.makefile("rwb")
-            if protocol != "json":
-                self._negotiate(file, require_binary=(protocol == "binary"))
-            if self.proto == 1:
-                self._file = file
+            # the initial dial honors the retry policy too: a stage whose
+            # socket file exists but is not yet listening (bind→listen race
+            # at startup) or is mid-restart answers on the next attempt
+            # instead of failing handle creation outright
+            attempt = 0
+            while True:
+                try:
+                    self._connect()
+                    break
+                except TRANSPORT_ERRORS:
+                    attempt += 1
+                    if self.retry is None or attempt >= self.retry.attempts:
+                        raise
+                    self._count_retry()
+                    time.sleep(self.retry.backoff(attempt - 1))
         except BaseException:
             self.close()
             raise
 
-    def _negotiate(self, file, require_binary: bool) -> None:
+    # -- connection management ----------------------------------------------
+    def _metric_registry(self):
+        if self._registry is not None:
+            return self._registry
+        from repro.telemetry import get_registry  # local: avoid import cycle
+
+        return get_registry()
+
+    def _connect(self) -> None:
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(self.timeout)
+        conn: Optional[PipelinedConnection] = None
+        file = None
+        try:
+            sock.connect(self.socket_path)
+            file = sock.makefile("rwb")
+            proto = 1
+            if self.protocol != "json":
+                proto = self._negotiate(sock, file, require_binary=(self.protocol == "binary"))
+            if proto == 2:
+                conn = PipelinedConnection(sock, rfile=file, wfile=file)
+        except BaseException:
+            if file is not None:
+                try:
+                    file.close()
+                except OSError:
+                    pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+            raise
+        self.proto = proto
+        self._sock = sock
+        self._conn = conn
+        self._file = file if proto == 1 else None
+        self._generation += 1
+
+    def _negotiate(self, sock: socket.socket, file, require_binary: bool) -> int:
         file.write(HELLO_LINE)
         file.flush()
         line = file.readline()
@@ -93,37 +353,137 @@ class RemoteStageHandle:
             raise ConnectionError("stage closed the control socket during negotiation")
         reply = json.loads(line)
         if reply.get("ok") and int(reply.get("proto", 1)) >= 2:
-            self.proto = 2
             # reader-thread model: block forever on the socket, enforce
             # timeouts per call at the waiter instead
-            self._sock.settimeout(None)
-            self._conn = PipelinedConnection(self._sock, rfile=file, wfile=file)
-        elif require_binary:
+            sock.settimeout(None)
+            return 2
+        if require_binary:
             raise TransportError(
                 f"peer at {self.socket_path} does not speak the binary protocol: {reply}"
             )
-        # else: v1 peer (unknown-call error or proto:1 ack) — stay on JSON
+        # v1 peer (unknown-call error or proto:1 ack) — stay on JSON
+        return 1
+
+    def _teardown_transport(self) -> None:
+        conn, self._conn = self._conn, None
+        file, self._file = self._file, None
+        sock, self._sock = self._sock, None
+        if conn is not None:
+            conn.close()
+        if file is not None:
+            try:
+                file.close()
+            except OSError:  # a dead peer can fail the buffered flush
+                pass
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:  # pragma: no cover
+                pass
+
+    def _reconnect(self, failed_generation: int) -> None:
+        """Tear down and re-dial (+ re-negotiate). Generation-guarded: if
+        another thread already reconnected since ``failed_generation``, the
+        fresh connection is reused instead of being torn down again."""
+        with self._reconnect_lock:
+            if self._closed:
+                raise ConnectionError("handle closed")
+            if self._generation != failed_generation:
+                return  # somebody else already swapped in a fresh connection
+            self._teardown_transport()
+            self._connect()
+
+    # -- resilience plumbing -------------------------------------------------
+    def _record_success(self) -> None:
+        if self.breaker is not None:
+            self.breaker.success()
+
+    def _record_failure(self) -> None:
+        if self.breaker is not None:
+            self.breaker.failure()
+
+    def _count_retry(self) -> None:
+        if self.name is not None:
+            registry = self._metric_registry()
+            key = f"rpc.{self.name}.retries"
+            registry.inc(key)
+            registry.describe(key, "paio_rpc_retries", {"stage": self.name})
+
+    def _idempotent(self, op: Callable[[], Any]) -> Any:
+        """Run one idempotent call under the breaker, retrying transport
+        failures per the retry policy (reconnecting between attempts). A
+        failed re-dial counts as a failed attempt too — ``attempts=N``
+        bounds total transport failures, so against a stage that is fully
+        gone the breaker sees exactly N failures before the caller gets the
+        error (N = failure_threshold makes retries-exhausted and
+        breaker-open coincide)."""
+        if self.breaker is not None:
+            self.breaker.allow()
+        attempts = self.retry.attempts if self.retry is not None else 1
+        failures = 0
+        while True:
+            generation = self._generation
+            try:
+                if self._conn is None and self._file is None:
+                    # a previous attempt tore the transport down and the
+                    # re-dial failed: this attempt IS the re-dial
+                    self._reconnect(generation)
+                    generation = self._generation
+                result = op()
+            except TRANSPORT_ERRORS:
+                self._record_failure()
+                failures += 1
+                if failures >= attempts or self._closed:
+                    raise
+                self._count_retry()
+                time.sleep(self.retry.backoff(failures - 1))
+                try:
+                    self._reconnect(generation)
+                except TRANSPORT_ERRORS:
+                    pass  # next loop iteration retries the dial (and counts it)
+                continue
+            self._record_success()
+            return result
 
     # -- v1 path -------------------------------------------------------------
     def _call(self, msg: Dict[str, Any]) -> Dict[str, Any]:
         with self._lock:
-            self._file.write(json.dumps(msg).encode() + b"\n")
-            self._file.flush()
-            line = self._file.readline()
+            file = self._file
+            if file is None:
+                raise ConnectionError("handle closed")
+            file.write(json.dumps(msg).encode() + b"\n")
+            file.flush()
+            line = file.readline()
         if not line:
             raise ConnectionError("stage closed the control socket")
         return json.loads(line)
 
     # -- the five calls ------------------------------------------------------
-    def stage_info(self) -> Dict[str, Any]:
-        if self._conn is not None:
-            return self._conn.call(OP_STAGE_INFO, b"", unpack_value, self.timeout)
+    def _stage_info_once(self) -> Dict[str, Any]:
+        conn = self._conn
+        if conn is not None:
+            return conn.call(OP_STAGE_INFO, b"", unpack_value, self.timeout)
         return self._call({"call": "stage_info"})["info"]
 
+    def stage_info(self) -> Dict[str, Any]:
+        return self._idempotent(self._stage_info_once)
+
     def _rule(self, rule) -> bool:
-        if self._conn is not None:
-            return self._conn.call(OP_RULE, encode_rule(rule), decode_bool, self.timeout)
-        return bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
+        # rules are NOT retried: mid-program replay belongs to the control
+        # plane's applied/pending deferral, not a per-call retry loop
+        if self.breaker is not None:
+            self.breaker.allow()
+        try:
+            conn = self._conn
+            if conn is not None:
+                ok = conn.call(OP_RULE, encode_rule(rule), decode_bool, self.timeout)
+            else:
+                ok = bool(self._call({"call": "rule", **rule.to_wire()})["ok"])
+        except TRANSPORT_ERRORS:
+            self._record_failure()
+            raise
+        self._record_success()
+        return ok
 
     def hsk_rule(self, rule: HousekeepingRule) -> bool:
         return self._rule(rule)
@@ -134,21 +494,51 @@ class RemoteStageHandle:
     def enf_rule(self, rule: EnforcementRule) -> bool:
         return self._rule(rule)
 
-    def collect(self) -> StageStats:
-        if self._conn is not None:
-            return self._conn.call(OP_COLLECT, b"", decode_stats, self.timeout)
+    def _collect_once(self) -> StageStats:
+        conn = self._conn
+        if conn is not None:
+            return conn.call(OP_COLLECT, b"", decode_stats, self.timeout)
         reply = self._call({"call": "collect"})
         return StageStats(
             per_channel={n: snapshot_from_wire(s) for n, s in reply["stats"].items()}
         )
 
-    def ping(self) -> None:
-        """Binary-mode liveness probe (no stage work); v1 falls back to
-        ``stage_info`` — the cheapest call that proves the stage answers."""
-        if self._conn is not None:
-            self._conn.call(OP_PING, b"", lambda _payload: None, self.timeout)
+    def collect(self) -> StageStats:
+        return self._idempotent(self._collect_once)
+
+    def collect_begin(self) -> Optional[_PipelinedCollect]:
+        """Issue a collect WITHOUT blocking; returns a waiter whose
+        ``result(timeout)`` yields the :class:`StageStats` — or None when the
+        peer is v1 (strict call-reply: the caller falls back to blocking
+        :meth:`collect`). This is how the control plane issues a whole
+        fleet's collects from its loop thread in one burst instead of parking
+        one fan-out worker per stage on a blocking call. Failures feed the
+        breaker but are not retried (the plane's down-mark/probe machinery
+        owns recovery for in-flight fan-outs)."""
+        conn = self._conn
+        if conn is None:
+            return None
+        if self.breaker is not None:
+            self.breaker.allow()
+        try:
+            pending = conn.request(OP_COLLECT, b"", decode_stats)
+        except TRANSPORT_ERRORS:
+            self._record_failure()
+            raise
+        return _PipelinedCollect(self, conn, pending)
+
+    def _ping_once(self) -> None:
+        conn = self._conn
+        if conn is not None:
+            conn.call(OP_PING, b"", lambda _payload: None, self.timeout)
         else:
-            self.stage_info()
+            # v1 fallback: stage_info is the cheapest call that proves the
+            # stage answers
+            self._call({"call": "stage_info"})
+
+    def ping(self) -> None:
+        """Liveness probe (no stage work on v2; ``stage_info`` on v1)."""
+        self._idempotent(self._ping_once)
 
     # -- pipelined rule programs ---------------------------------------------
     def apply_rules(self, rules: Sequence[Any]) -> List[bool]:
@@ -159,42 +549,39 @@ class RemoteStageHandle:
         server applies rule frames in arrival order, so ordering semantics
         are identical to sequential calls). JSON mode degrades to the v1
         call-per-rule loop. A transport failure raises
-        :class:`RuleShipError` carrying the applied/pending split.
+        :class:`RuleShipError` carrying the applied/pending split; rule
+        programs are never auto-retried (see :meth:`_rule`).
         """
+        if self.breaker is not None:
+            self.breaker.allow()
         rules = list(rules)
         outcomes: List[bool] = []
-        if self._conn is not None:
+        conn = self._conn
+        if conn is not None:
             pendings = []
             try:
                 for rule in rules:
                     pendings.append(
-                        self._conn.request(OP_RULE, encode_rule(rule), decode_bool, flush=False)
+                        conn.request(OP_RULE, encode_rule(rule), decode_bool, flush=False)
                     )
-                self._conn.flush()
+                conn.flush()
                 for pending in pendings:
                     outcomes.append(pending.result(self.timeout))
             except TRANSPORT_ERRORS as exc:
+                self._record_failure()
                 raise RuleShipError(rules[: len(outcomes)], rules[len(outcomes):], exc) from exc
+            self._record_success()
             return outcomes
         for i, rule in enumerate(rules):
             try:
                 outcomes.append(bool(self._call({"call": "rule", **rule.to_wire()})["ok"]))
             except TRANSPORT_ERRORS as exc:
+                self._record_failure()
                 raise RuleShipError(rules[:i], rules[i:], exc) from exc
+        self._record_success()
         return outcomes
 
     # -- teardown -------------------------------------------------------------
     def close(self) -> None:
-        if self._conn is not None:
-            self._conn.close()
-            self._conn = None
-        if self._file is not None:
-            try:
-                self._file.close()
-            except OSError:  # a dead peer can fail the buffered flush
-                pass
-            self._file = None
-        try:
-            self._sock.close()
-        except OSError:  # pragma: no cover
-            pass
+        self._closed = True
+        self._teardown_transport()

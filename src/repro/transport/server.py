@@ -17,23 +17,40 @@ Binary-mode dispatch is **pipelined**:
   worker pool, so a slow stat collection (a stage embedded in a loaded
   server walks many channels) never stalls the rule stream behind it.
   Replies carry the request's correlation id and may complete out of order.
+
+Robustness hooks (both optional, both off by default):
+
+* ``snapshot_path=`` — successfully-applied rules are folded into a
+  :class:`~repro.core.snapshot.StageConfigJournal`; on construction the
+  journal is replayed into the stage **before the socket is bound**, so a
+  crash-restarted stage process enforces its last-known policy before the
+  control plane can reach it. ``stage_info`` replies gain a
+  ``snapshot_version`` field the control plane's recovery reconcile keys on.
+* ``fault_plan=`` — a :class:`~repro.transport.faults.FaultPlan` injects
+  per-request delays, drops, resets, and partial frames at the wire layer
+  (see :mod:`repro.transport.faults`); this is how tests and the chaos soak
+  make the fleet's failure paths deterministic.
 """
 from __future__ import annotations
 
 import json
 import os
 import select
+import socket as socket_mod
 import socketserver
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import asdict
 from typing import Any, Dict, Optional
 
 from repro.core.rules import DifferentiationRule, HousekeepingRule, rule_from_wire
+from repro.core.snapshot import StageConfigJournal
 from repro.core.stage import Stage
 from repro.core.stats import StatsSnapshot
 
 from .codec import TransportError, decode_rule, encode_stats, pack_value
+from .faults import DELAY, DROP, PARTIAL, RESET, ConnectionFaults, FaultPlan, InjectedReset
 from .framing import (
     FLAG_ERROR,
     FLAG_REPLY,
@@ -49,6 +66,9 @@ from .framing import (
 #: highest protocol version this server speaks
 PROTO_VERSION = 2
 
+#: binary op → the op name fault plans target (shared with the v1 loop)
+_OP_NAMES = {OP_RULE: "rule", OP_COLLECT: "collect", OP_STAGE_INFO: "stage_info", OP_PING: "ping"}
+
 
 def snapshot_to_wire(s: StatsSnapshot) -> Dict[str, Any]:
     return asdict(s)
@@ -58,28 +78,47 @@ def snapshot_from_wire(d: Dict[str, Any]) -> StatsSnapshot:
     return StatsSnapshot(**d)
 
 
-def dispatch_json(stage: Stage, msg: Dict[str, Any]) -> Dict[str, Any]:
+def _stage_info(stage: Stage, journal: Optional[StageConfigJournal]) -> Dict[str, Any]:
+    info = stage.stage_info()
+    if journal is not None:
+        info["snapshot_version"] = journal.version
+        info["snapshot_restored_version"] = journal.restored_version
+    return info
+
+
+def dispatch_json(
+    stage: Stage, msg: Dict[str, Any], journal: Optional[StageConfigJournal] = None
+) -> Dict[str, Any]:
     """v1 JSON-line dispatch — the protocol every pre-v2 peer speaks."""
     call = msg.get("call")
     if call == "stage_info":
-        return {"ok": True, "info": stage.stage_info()}
+        return {"ok": True, "info": _stage_info(stage, journal)}
     if call == "rule":
-        return {"ok": _apply_rule(stage, rule_from_wire(msg))}
+        return {"ok": _apply_rule(stage, rule_from_wire(msg), journal)}
     if call == "collect":
         stats = stage.collect()
         return {"ok": True, "stats": {n: snapshot_to_wire(s) for n, s in stats.per_channel.items()}}
     return {"ok": False, "error": f"unknown call {call!r}"}
 
 
-def _apply_rule(stage: Stage, rule) -> bool:
+def _apply_rule(stage: Stage, rule, journal: Optional[StageConfigJournal] = None) -> bool:
     if isinstance(rule, HousekeepingRule):
-        return stage.hsk_rule(rule)
-    if isinstance(rule, DifferentiationRule):
-        return stage.dif_rule(rule)
-    return stage.enf_rule(rule)
+        ok = stage.hsk_rule(rule)
+    elif isinstance(rule, DifferentiationRule):
+        ok = stage.dif_rule(rule)
+    else:
+        ok = stage.enf_rule(rule)
+    if ok and journal is not None:
+        journal.record(rule)
+    return ok
 
 
-def serve_binary(stage: Stage, sock) -> None:
+def serve_binary(
+    stage: Stage,
+    sock,
+    journal: Optional[StageConfigJournal] = None,
+    faults: Optional[ConnectionFaults] = None,
+) -> None:
     """Frame loop for one upgraded connection (runs on the handler thread).
 
     Reads frames straight off the socket (the client sends no frame until it
@@ -98,6 +137,11 @@ def serve_binary(stage: Stage, sock) -> None:
     wakeup is ~100 µs that, not encoding, is the difference between wire-
     floor and JSON-era latency. Async (collect/stage_info) replies flush
     immediately: they are latency-sensitive singletons.
+
+    Injected faults act *before* the request is served: a dropped rule is
+    never applied (a lost frame never reached us), and a reset flushes the
+    replies already buffered before closing — so a scripted mid-program
+    reset yields an exact applied/pending split on the client.
     """
     reader = SocketFrameReader(sock)
     wlock = threading.Lock()
@@ -128,12 +172,18 @@ def serve_binary(stage: Stage, sock) -> None:
                 sock.sendall(out)
                 del out[:]
 
+    def flush_now() -> None:
+        with wlock:
+            if out:
+                sock.sendall(out)
+                del out[:]
+
     def serve_async(op: int, corr_id: int) -> None:
         try:
             if op == OP_COLLECT:
                 payload = encode_stats(stage.collect())
             else:
-                payload = pack_value(stage.stage_info())
+                payload = pack_value(_stage_info(stage, journal))
             reply(op, corr_id, FLAG_REPLY, payload)
         except OSError:  # peer vanished mid-reply: the reader loop unwinds
             pass
@@ -151,6 +201,25 @@ def serve_binary(stage: Stage, sock) -> None:
             if frame is None:
                 return
             op, _flags, corr_id, payload = frame
+            if faults is not None:
+                fault = faults.before(_OP_NAMES.get(op, "?"))
+                if fault is not None:
+                    if fault.action == DELAY:
+                        time.sleep(fault.delay_s)
+                    elif fault.action == DROP:
+                        continue  # the frame "never arrived": no apply, no reply
+                    elif fault.action == RESET:
+                        # deliver what already succeeded, then die mid-program
+                        flush_now()
+                        sock.shutdown(socket_mod.SHUT_RDWR)
+                        raise InjectedReset("fault plan: connection reset")
+                    elif fault.action == PARTIAL:
+                        # torn write: half a frame header, then gone — the
+                        # client's decoder must fail the stream, not misparse
+                        flush_now()
+                        sock.sendall(HEADER.pack(op, FLAG_REPLY, corr_id, 64)[:6])
+                        sock.shutdown(socket_mod.SHUT_RDWR)
+                        raise InjectedReset("fault plan: partial frame")
             if op == OP_RULE:
                 # inline: rules must apply in arrival order
                 try:
@@ -159,7 +228,7 @@ def serve_binary(stage: Stage, sock) -> None:
                     reply(op, corr_id, FLAG_REPLY | FLAG_ERROR, pack_value(repr(exc)), flush=False)
                     continue
                 try:
-                    ok = bool(_apply_rule(stage, rule))
+                    ok = bool(_apply_rule(stage, rule, journal))
                 except Exception:  # noqa: BLE001 — v1 parity: stage error → False
                     ok = False
                 reply(op, corr_id, FLAG_REPLY, pack_value(ok), flush=False)
@@ -171,8 +240,9 @@ def serve_binary(stage: Stage, sock) -> None:
                 reply(op, corr_id, FLAG_REPLY | FLAG_ERROR, pack_value(f"unknown op {op}"), flush=False)
     except (TransportError, OSError):
         # peer died unceremoniously (control plane killed mid-frame, socket
-        # reset under a reply): the connection is over — end quietly, the
-        # same way the v1 line loop ends at EOF
+        # reset under a reply) or a fault plan reset us: the connection is
+        # over — end quietly, the same way the v1 line loop ends at EOF
+        # (InjectedReset is a ConnectionError, so it lands here too)
         return
     finally:
         pool.shutdown(wait=False)
@@ -185,19 +255,42 @@ class StageServer:
     ``max_protocol=1`` reproduces a pre-v2 stage byte-for-byte (hello gets
     the v1 unknown-call error), which is how the interop tests and
     mixed-fleet rehearsals stand up an "old" stage without old code.
+
+    ``snapshot_path=`` makes the stage crash-safe (see module docstring):
+    the journal restore runs here, in the constructor, before the listening
+    socket exists — "restores enforcement before re-registering" is a
+    property of construction order, not of anyone remembering to call it.
     """
 
-    def __init__(self, stage: Stage, socket_path: str, max_protocol: int = PROTO_VERSION) -> None:
+    def __init__(
+        self,
+        stage: Stage,
+        socket_path: str,
+        max_protocol: int = PROTO_VERSION,
+        snapshot_path: Optional[str] = None,
+        fault_plan: Optional[FaultPlan] = None,
+    ) -> None:
         self.stage = stage
         self.socket_path = socket_path
         self.max_protocol = max_protocol
+        self.fault_plan = fault_plan
+        self.journal: Optional[StageConfigJournal] = None
+        #: rules replayed from the snapshot before the socket was bound
+        self.restored_rules = 0
+        if snapshot_path is not None:
+            self.journal = StageConfigJournal(snapshot_path, stage=stage.name)
+            if len(self.journal):
+                self.restored_rules = self.journal.restore(stage)
         if os.path.exists(socket_path):
             os.unlink(socket_path)
         stage_ref = stage
+        journal_ref = self.journal
+        plan_ref = fault_plan
         binary_enabled = max_protocol >= 2
 
         class Handler(socketserver.StreamRequestHandler):
             def handle(self) -> None:  # pragma: no cover - exercised via client
+                faults = plan_ref.connection() if plan_ref is not None else None
                 for line in self.rfile:
                     line = line.strip()
                     if not line:
@@ -211,12 +304,27 @@ class StageServer:
                         if int(msg.get("proto", 1)) >= 2:
                             self.wfile.write(HELLO_ACK)
                             self.wfile.flush()
-                            serve_binary(stage_ref, self.connection)
+                            serve_binary(stage_ref, self.connection, journal_ref, faults)
                             return
                         self._reply({"ok": True, "proto": 1})
                         continue
+                    if faults is not None:
+                        call = msg.get("call")
+                        fault = faults.before("rule" if call == "rule" else str(call))
+                        if fault is not None:
+                            if fault.action == DELAY:
+                                time.sleep(fault.delay_s)
+                            elif fault.action == DROP:
+                                continue
+                            elif fault.action == RESET:
+                                return  # v1 replies are per-call flushed: just die
+                            elif fault.action == PARTIAL:
+                                # torn line: valid JSON prefix, no newline
+                                self.wfile.write(b'{"ok": tru')
+                                self.wfile.flush()
+                                return
                     try:
-                        reply = dispatch_json(stage_ref, msg)
+                        reply = dispatch_json(stage_ref, msg, journal_ref)
                     except Exception as exc:  # noqa: BLE001 — report to controller
                         reply = {"ok": False, "error": repr(exc)}
                     self._reply(reply)

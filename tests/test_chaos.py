@@ -1,0 +1,699 @@
+"""Chaos hardening: fault injection (repro.transport.faults), retry/circuit
+breaker resilience, terminal ConnectionClosed semantics, the crash-safe stage
+config journal, and control-plane recovery reconcile against restored
+snapshots.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ControlPlane,
+    DifferentiationRule,
+    EnforcementRule,
+    HousekeepingRule,
+    Stage,
+    StageConfigJournal,
+    StageServer,
+    VirtualClock,
+)
+from repro.ft import HeartbeatMonitor
+from repro.transport import (
+    DELAY,
+    DROP,
+    PARTIAL,
+    RESET,
+    CircuitBreaker,
+    CircuitOpenError,
+    ConnectionClosed,
+    FaultPlan,
+    RemoteStageHandle,
+    RetryPolicy,
+    RuleShipError,
+)
+
+MiB = float(1 << 20)
+
+
+@pytest.fixture
+def stage_dir():
+    with tempfile.TemporaryDirectory() as d:
+        yield d
+
+
+def _stage(name: str) -> Stage:
+    stage = Stage(name)
+    stage.hsk_rule(HousekeepingRule(op="create_channel", channel="io"))
+    stage.hsk_rule(HousekeepingRule(
+        op="create_object", channel="io", object_id="0", object_kind="drl",
+        params={"rate": 100 * MiB},
+    ))
+    return stage
+
+
+def _kill_conn(handle) -> None:
+    """Sever a handle's live connection (StageServer.stop() only closes the
+    listener; established per-connection threads keep serving) — the test
+    equivalent of the stage process dying."""
+    import socket as socket_mod
+
+    sock = getattr(handle, "_sock", None)
+    if sock is not None:
+        try:
+            sock.shutdown(socket_mod.SHUT_RDWR)
+        except OSError:
+            pass
+
+
+def _rules(n: int):
+    return [
+        EnforcementRule(channel="io", object_id="0", state={"rate": float(i + 1) * MiB})
+        for i in range(n)
+    ]
+
+
+# --------------------------------------------------------------------------- #
+# fault plan semantics                                                         #
+# --------------------------------------------------------------------------- #
+class TestFaultPlan:
+    def test_seeded_decisions_are_reproducible(self):
+        def trace(plan: FaultPlan):
+            conn = plan.connection()
+            return [
+                (f.action if f else None)
+                for f in (conn.before("rule") for _ in range(200))
+            ]
+
+        mk = lambda: FaultPlan(seed=7, drop_prob=0.05, reset_prob=0.02, delay_prob=0.1)
+        t1, t2 = trace(mk()), trace(mk())
+        assert t1 == t2
+        assert any(a is not None for a in t1)  # the plan actually fires
+
+    def test_per_connection_streams_are_independent(self):
+        plan = FaultPlan(seed=3, drop_prob=0.2)
+        c1, c2 = plan.connection(), plan.connection()
+        t1 = [(c1.before("rule") or None) for _ in range(50)]
+        t2 = [(c2.before("rule") or None) for _ in range(50)]
+        assert t1 != t2  # different streams, same seed
+
+    def test_scripted_fires_exactly_once_at_the_nth_request(self):
+        plan = FaultPlan.scripted({"rule": [(2, RESET)]})
+        conn = plan.connection()
+        decisions = [conn.before("rule") for _ in range(5)]
+        assert [d.action if d else None for d in decisions] == [
+            None, None, RESET, None, None,
+        ]
+        assert plan.counts() == {RESET: 1}
+
+    def test_max_faults_budget_caps_injection(self):
+        plan = FaultPlan(seed=1, drop_prob=1.0, max_faults=3)
+        conn = plan.connection()
+        fired = [conn.before("rule") for _ in range(10)]
+        assert sum(1 for f in fired if f is not None) == 3
+        assert plan.injected == 3
+
+    def test_changing_one_probability_keeps_other_streams_aligned(self):
+        # one RNG draw per request: adding delays must not reshuffle which
+        # requests get reset for the same seed
+        def resets(plan):
+            conn = plan.connection()
+            return [
+                i for i in range(300)
+                if (f := conn.before("rule")) is not None and f.action == RESET
+            ]
+
+        only_resets = resets(FaultPlan(seed=11, reset_prob=0.03))
+        with_delays = resets(FaultPlan(seed=11, reset_prob=0.03, delay_prob=0.2))
+        assert only_resets == with_delays
+
+
+# --------------------------------------------------------------------------- #
+# terminal ConnectionClosed (satellite regression)                             #
+# --------------------------------------------------------------------------- #
+class TestConnectionClosed:
+    def test_close_fails_inflight_waiters_immediately(self, stage_dir):
+        # a stage that never answers collect: waiters would previously hang
+        # until their own per-call timeout even after close()
+        stage = _stage("s")
+        release = threading.Event()
+        original = stage.collect
+        stage.collect = lambda: (release.wait(5.0), original())[1]
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path).start()
+        try:
+            handle = RemoteStageHandle(path, timeout=30.0)
+            assert handle.proto == 2
+            errors = []
+
+            def blocked_collect():
+                try:
+                    handle.collect()
+                except BaseException as exc:  # noqa: BLE001
+                    errors.append(exc)
+
+            t = threading.Thread(target=blocked_collect)
+            t.start()
+            time.sleep(0.1)  # let the collect get in flight
+            start = time.perf_counter()
+            handle.close()
+            t.join(timeout=2.0)
+            elapsed = time.perf_counter() - start
+            assert not t.is_alive(), "waiter still blocked after close()"
+            assert elapsed < 2.0  # nowhere near the 30s call timeout
+            assert len(errors) == 1
+            assert isinstance(errors[0], ConnectionClosed)
+            release.set()
+        finally:
+            release.set()
+            server.stop()
+
+    def test_peer_death_fails_inflight_waiters_with_terminal_error(self, stage_dir):
+        stage = _stage("s")
+        release = threading.Event()
+        original = stage.collect
+        stage.collect = lambda: (release.wait(5.0), original())[1]
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path).start()
+        handle = RemoteStageHandle(path, timeout=30.0)
+        try:
+            pending = handle._conn.request(2, b"", lambda p: p)  # OP_COLLECT
+            server._server.shutdown()
+            server._server.server_close()  # kills the connection under us
+            with pytest.raises(ConnectionError):
+                handle._conn.wait(pending, timeout=2.0)
+            release.set()
+        finally:
+            release.set()
+            handle.close()
+            try:
+                server.stop()
+            except Exception:  # noqa: BLE001 — already stopped above
+                pass
+
+
+# --------------------------------------------------------------------------- #
+# retry + circuit breaker                                                      #
+# --------------------------------------------------------------------------- #
+class TestRetryPolicy:
+    def test_backoff_is_deterministic_and_capped(self):
+        a = RetryPolicy(attempts=5, base=0.01, factor=2.0, max_backoff=0.03, seed=42)
+        b = RetryPolicy(attempts=5, base=0.01, factor=2.0, max_backoff=0.03, seed=42)
+        sa = [a.backoff(i) for i in range(4)]
+        sb = [b.backoff(i) for i in range(4)]
+        assert sa == sb
+        assert all(0 < s <= 0.03 for s in sa)
+
+    def test_attempts_must_be_positive(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(attempts=0)
+
+    def test_collect_retries_through_injected_reset(self, stage_dir):
+        # first collect request is reset by the fault plan; the handle must
+        # reconnect and succeed on the retry, counting one retry
+        from repro.telemetry import get_registry
+
+        plan = FaultPlan.scripted({"collect": [(0, RESET)]})
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            handle = RemoteStageHandle(
+                path, timeout=2.0,
+                retry=RetryPolicy(attempts=3, base=0.01, seed=0),
+                name="s",
+            )
+            try:
+                stats = handle.collect()
+                assert "io" in stats.per_channel
+                assert get_registry().sample()["rpc.s.retries"] >= 1.0
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+    def test_rules_are_never_retried(self, stage_dir):
+        # a mid-batch reset must surface as RuleShipError even on a handle
+        # with retries enabled — replay belongs to the control plane
+        plan = FaultPlan.scripted({"rule": [(2, RESET)]})
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            handle = RemoteStageHandle(
+                path, timeout=2.0, retry=RetryPolicy(attempts=3, base=0.01, seed=0)
+            )
+            try:
+                with pytest.raises(RuleShipError):
+                    handle.apply_rules(_rules(6))
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+
+class TestCircuitBreaker:
+    def test_trips_after_threshold_and_half_opens(self):
+        t = [0.0]
+        br = CircuitBreaker(failure_threshold=3, reset_timeout=1.0, time_fn=lambda: t[0])
+        for _ in range(2):
+            br.failure()
+        br.allow()  # still closed
+        br.failure()
+        assert br.state == CircuitBreaker.OPEN
+        assert br.trips == 1
+        with pytest.raises(CircuitOpenError):
+            br.allow()
+        t[0] = 1.5  # cooldown elapsed: next call is the half-open trial
+        br.allow()
+        assert br.state == CircuitBreaker.HALF_OPEN
+        br.success()
+        assert br.state == CircuitBreaker.CLOSED
+
+    def test_failed_trial_reopens(self):
+        t = [0.0]
+        br = CircuitBreaker(failure_threshold=1, reset_timeout=1.0, time_fn=lambda: t[0])
+        br.failure()
+        assert br.state == CircuitBreaker.OPEN
+        t[0] = 2.0
+        br.allow()
+        br.failure()  # trial failed
+        assert br.state == CircuitBreaker.OPEN
+        with pytest.raises(CircuitOpenError):
+            br.allow()
+
+    def test_named_breaker_publishes_state_gauge(self):
+        from repro.telemetry import get_registry
+
+        br = CircuitBreaker(failure_threshold=1, name="s9")
+        assert get_registry().sample()["stage.s9.breaker"] == 0.0
+        br.failure()
+        assert get_registry().sample()["stage.s9.breaker"] == 1.0
+
+    def test_exhausted_retries_trip_the_breaker_to_down_mark(self, stage_dir):
+        # a dead socket + retry(attempts=3) → 3 failures → breaker OPEN, and
+        # the raised error is an OSError (here: the re-dial's
+        # FileNotFoundError) — inside TRANSPORT_ERRORS, so the plane's
+        # down-mark eats it
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path).start()
+        br = CircuitBreaker(failure_threshold=3, reset_timeout=30.0)
+        handle = RemoteStageHandle(
+            path, timeout=1.0,
+            retry=RetryPolicy(attempts=3, base=0.01, seed=0), breaker=br,
+        )
+        try:
+            server.stop()  # kill the stage entirely
+            _kill_conn(handle)
+            with pytest.raises(OSError):
+                handle.collect()
+            assert br.state == CircuitBreaker.OPEN
+            with pytest.raises(CircuitOpenError):
+                handle.collect()  # fails fast, no socket touched
+        finally:
+            handle.close()
+
+
+# --------------------------------------------------------------------------- #
+# RuleShipError split under injected reset + plane replay (satellite)          #
+# --------------------------------------------------------------------------- #
+class TestMidBatchReset:
+    def test_exact_applied_pending_split(self, stage_dir):
+        plan = FaultPlan.scripted({"rule": [(2, RESET)]})
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            handle = RemoteStageHandle(path, timeout=2.0)
+            rules = _rules(6)
+            with pytest.raises(RuleShipError) as err:
+                handle.apply_rules(rules)
+            handle.close()
+            # rules 0 and 1 were served and their replies flushed before the
+            # reset; rule 2 (the reset trigger) and everything after is pending
+            assert err.value.applied == rules[:2]
+            assert err.value.pending == rules[2:]
+            assert stage.channel("io").get_object("0").rate == pytest.approx(2 * MiB)
+        finally:
+            server.stop()
+
+    def test_plane_defers_pending_and_replays_on_recovery(self, stage_dir):
+        plan = FaultPlan.scripted({"rule": [(2, RESET)]})
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            cp = ControlPlane(probe_interval=0.0, retry=None)
+            try:
+                cp.connect("s", path, timeout=2.0)
+                rules = _rules(6)
+                applied = cp._ship_rules("s", rules)
+                assert applied == rules[:2]
+                assert not cp.stage_up("s")
+                status = cp.fleet_status()["s"]
+                # retunes of the same (channel, object) squash to the latest
+                assert status["deferred_rules"] == 1
+                # recovery probe re-admits over a fresh socket and replays
+                deadline = time.time() + 5.0
+                while time.time() < deadline and not cp.stage_up("s"):
+                    cp._probe_down_stages()
+                    time.sleep(0.02)
+                assert cp.stage_up("s")
+                assert cp.fleet_status()["s"]["deferred_rules"] == 0
+                assert stage.channel("io").get_object("0").rate == pytest.approx(6 * MiB)
+            finally:
+                cp.close()
+        finally:
+            server.stop()
+
+
+# --------------------------------------------------------------------------- #
+# drop / partial / delay faults end to end                                     #
+# --------------------------------------------------------------------------- #
+class TestWireFaults:
+    def test_drop_times_out_the_caller_and_skips_the_rule(self, stage_dir):
+        plan = FaultPlan.scripted({"rule": [(0, DROP)]})
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            handle = RemoteStageHandle(path, timeout=0.3)
+            try:
+                with pytest.raises(RuleShipError) as err:
+                    handle.apply_rules(_rules(1))
+                assert isinstance(err.value.cause, TimeoutError)
+                # the dropped frame never reached the stage
+                assert stage.channel("io").get_object("0").rate == pytest.approx(100 * MiB)
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+    def test_partial_frame_fails_the_stream_cleanly(self, stage_dir):
+        plan = FaultPlan.scripted({"collect": [(0, PARTIAL)]})
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            handle = RemoteStageHandle(path, timeout=2.0)
+            try:
+                with pytest.raises(ConnectionError):
+                    handle.collect()
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+    def test_delay_slows_but_does_not_fail(self, stage_dir):
+        plan = FaultPlan.scripted({})  # no faults
+        plan = FaultPlan(seed=5, delay_prob=1.0, delay_range=(0.05, 0.05))
+        stage = _stage("s")
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, fault_plan=plan).start()
+        try:
+            handle = RemoteStageHandle(path, timeout=2.0)
+            try:
+                start = time.perf_counter()
+                stats = handle.collect()
+                assert time.perf_counter() - start >= 0.05
+                assert "io" in stats.per_channel
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+
+# --------------------------------------------------------------------------- #
+# stage config journal (crash-safe recovery)                                   #
+# --------------------------------------------------------------------------- #
+class TestStageConfigJournal:
+    def test_roundtrip_restores_config(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        j = StageConfigJournal(path, stage="s")
+        j.record(HousekeepingRule(op="create_channel", channel="t"))
+        j.record(HousekeepingRule(
+            op="create_object", channel="t", object_id="0", object_kind="drl",
+            params={"rate": MiB}))
+        j.record(DifferentiationRule(channel="t", match={"tenant": "a"}))
+        j.record(EnforcementRule(channel="t", object_id="0", state={"rate": 9 * MiB}))
+        # a fresh journal (new process) restores into a fresh stage
+        fresh = Stage("s")
+        j2 = StageConfigJournal(path)
+        assert j2.restored_version == j.version
+        assert j2.restore(fresh) == 4
+        assert fresh.channel("t").get_object("0").rate == pytest.approx(9 * MiB)
+
+    def test_retunes_collapse_to_latest(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        j = StageConfigJournal(path)
+        j.record(HousekeepingRule(op="create_channel", channel="t"))
+        for i in range(50):
+            j.record(EnforcementRule(channel="t", object_id="0", state={"rate": float(i)}))
+        assert len(j) == 2  # channel + one (latest) enf entry
+        assert j.version == 51  # but the version saw every mutation
+
+    def test_remove_channel_cascades(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        j = StageConfigJournal(path)
+        j.record(HousekeepingRule(op="create_channel", channel="t"))
+        j.record(HousekeepingRule(
+            op="create_object", channel="t", object_id="0", object_kind="noop"))
+        j.record(DifferentiationRule(channel="t", match={"tenant": "a"}))
+        j.record(EnforcementRule(channel="t", object_id="0", state={}))
+        j.record(HousekeepingRule(op="create_channel", channel="u"))
+        j.record(HousekeepingRule(op="remove_channel", channel="t"))
+        assert [r.channel for r in j.rules()] == ["u"]
+
+    def test_torn_snapshot_is_not_fatal(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        with open(path, "w") as f:
+            f.write('{"version": 3, "rules": [')  # torn mid-write
+        j = StageConfigJournal(path)
+        assert len(j) == 0
+        assert j.restored_version == 0
+
+    def test_server_restores_before_serving(self, stage_dir):
+        sock = os.path.join(stage_dir, "s.sock")
+        snap = os.path.join(stage_dir, "snap.json")
+        stage = Stage("s")
+        server = StageServer(stage, sock, snapshot_path=snap).start()
+        handle = RemoteStageHandle(sock, timeout=2.0)
+        handle.apply_rules([
+            HousekeepingRule(op="create_channel", channel="t"),
+            HousekeepingRule(op="create_object", channel="t", object_id="0",
+                             object_kind="drl", params={"rate": MiB}),
+            EnforcementRule(channel="t", object_id="0", state={"rate": 5 * MiB}),
+        ])
+        info = handle.stage_info()
+        assert info["snapshot_version"] == 3
+        handle.close()
+        server.stop()
+        # "crash": a brand-new process would build a fresh Stage; the server
+        # restores the journal in its constructor, before the socket binds
+        stage2 = Stage("s")
+        server2 = StageServer(stage2, sock, snapshot_path=snap)
+        assert server2.restored_rules == 3
+        assert stage2.channel("t").get_object("0").rate == pytest.approx(5 * MiB)
+        server2.start()
+        try:
+            handle2 = RemoteStageHandle(sock, timeout=2.0)
+            info2 = handle2.stage_info()
+            assert info2["snapshot_version"] >= 3
+            assert "t" in info2["channels"]
+            handle2.close()
+        finally:
+            server2.stop()
+
+
+# --------------------------------------------------------------------------- #
+# recovery reconcile against the restored snapshot                             #
+# --------------------------------------------------------------------------- #
+POLICY_TEXT = """
+policy chaostest
+for tenant=a as A: limit bandwidth 50MiB/s
+"""
+
+
+class TestRecoveryReconcile:
+    def _install(self, cp):
+        from repro.policy import load_policy
+
+        cp.install_policy(load_policy(POLICY_TEXT), stage="s")
+
+    def _recover_loop(self, cp, deadline=5.0):
+        end = time.time() + deadline
+        while time.time() < end and not cp.stage_up("s"):
+            cp._probe_down_stages()
+            time.sleep(0.02)
+        assert cp.stage_up("s")
+
+    def test_empty_restart_gets_full_install_program(self, stage_dir):
+        sock = os.path.join(stage_dir, "s.sock")
+        stage = _stage("s")
+        server = StageServer(stage, sock).start()
+        cp = ControlPlane(probe_interval=0.0, retry=None)
+        try:
+            cp.connect("s", sock, timeout=2.0)
+            self._install(cp)
+            assert "A" in stage.stage_info()["channels"]
+            server.stop()
+            _kill_conn(cp._handles["s"])
+            cp._collect_all()  # failed collect marks the stage down
+            assert not cp.stage_up("s")
+            # restart EMPTY (no snapshot): reconcile must re-ship the program
+            stage2 = Stage("s")
+            server = StageServer(stage2, sock).start()
+            self._recover_loop(cp)
+            assert "A" in stage2.stage_info()["channels"]
+            assert cp.fleet_status()["s"]["snapshot_version"] == 0
+        finally:
+            cp.close()
+            server.stop()
+
+    def test_snapshot_restart_reconciles_not_replays(self, stage_dir):
+        sock = os.path.join(stage_dir, "s.sock")
+        snap = os.path.join(stage_dir, "snap.json")
+        stage = _stage("s")
+        server = StageServer(stage, sock, snapshot_path=snap).start()
+        cp = ControlPlane(probe_interval=0.0, retry=None)
+        try:
+            cp.connect("s", sock, timeout=2.0)
+            self._install(cp)
+            server.stop()
+            _kill_conn(cp._handles["s"])
+            cp._collect_all()  # failed collect marks the stage down
+            assert not cp.stage_up("s")
+            # restart WITH the snapshot: enforcement is restored before the
+            # socket binds, and the plane records the restored version
+            stage2 = Stage("s")
+            server = StageServer(stage2, sock, snapshot_path=snap)
+            assert "A" in stage2.stage_info()["channels"]  # restored pre-bind
+            server.start()
+            applied_before = len(stage2.stage_info()["channels"])
+            self._recover_loop(cp)
+            assert cp.fleet_status()["s"]["snapshot_version"] > 0
+            # nothing was missing, so reconcile shipped nothing structural
+            assert len(stage2.stage_info()["channels"]) == applied_before
+        finally:
+            cp.close()
+            server.stop()
+
+    def test_missing_install_rules_helper(self):
+        from repro.policy import compile_policy, load_policy
+        from repro.policy.engine import missing_install_rules
+
+        stage = _stage("s")
+        compiled = compile_policy(
+            load_policy(POLICY_TEXT), {"s": stage.stage_info()}, default_stage="s"
+        )
+        # apply the program to a stage, then ask: nothing to re-ship
+        target = _stage("t")
+        for rule in compiled.install["s"]:
+            if isinstance(rule, HousekeepingRule):
+                target.hsk_rule(rule)
+            elif isinstance(rule, DifferentiationRule):
+                target.dif_rule(rule)
+            else:
+                target.enf_rule(rule)
+        assert missing_install_rules([compiled], "s", target.stage_info()) == []
+        # against an empty stage → the full program comes back
+        empty = Stage("e")
+        missing = missing_install_rules([compiled], "s", empty.stage_info())
+        assert missing == compiled.install["s"]
+
+
+# --------------------------------------------------------------------------- #
+# heartbeat wiring                                                             #
+# --------------------------------------------------------------------------- #
+class TestHeartbeatWiring:
+    def test_collect_beats_and_fleet_status_reports_ok(self):
+        cp = ControlPlane()
+        try:
+            cp.register_stage(_stage("s"))
+            cp.run_once()
+            assert cp.fleet_status()["s"]["heartbeat"] == "ok"
+        finally:
+            cp.close()
+
+    def test_dead_verdict_after_silence(self):
+        clock = VirtualClock()
+        monitor = HeartbeatMonitor(dead_after=5.0, clock=clock)
+        cp = ControlPlane(clock=clock, heartbeats=monitor)
+        try:
+            cp.register_stage(_stage("s"))
+            cp.run_once()
+            assert cp.fleet_status()["s"]["heartbeat"] == "ok"
+            clock.sleep(10.0)  # silence past dead_after
+            assert cp.fleet_status()["s"]["heartbeat"] == "dead"
+        finally:
+            cp.close()
+
+    def test_straggler_squeeze_ships_through_ship_rules(self):
+        monitor = HeartbeatMonitor(straggler_factor=1.5)
+        cp = ControlPlane(heartbeats=monitor)
+        try:
+            slow = _stage("slow")
+            for name in ("a", "b", "slow"):
+                cp.register_stage(_stage(name) if name != "slow" else slow)
+            # seed step times directly: slow is 10× the median
+            for name in ("a", "b"):
+                monitor.beat(name, 0.01)
+            monitor.beat("slow", 0.1)
+            report = monitor.report()
+            assert report.stragglers == ["slow"]
+            shipped = cp.squeeze_stragglers(
+                lambda name, rep: [
+                    EnforcementRule(channel="io", object_id="0", state={"rate": MiB})
+                ]
+            )
+            assert list(shipped) == ["slow"]
+            assert slow.channel("io").get_object("0").rate == pytest.approx(MiB)
+            assert cp.fleet_status()["slow"]["heartbeat"] == "straggler"
+        finally:
+            cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# pipelined _collect_all (satellite: no fan-out worker per binary stage)       #
+# --------------------------------------------------------------------------- #
+class TestPipelinedCollect:
+    def test_collects_whole_fleet_without_pool(self, stage_dir):
+        servers, stages = [], []
+        cp = ControlPlane(retry=None)
+        try:
+            for i in range(4):
+                st = _stage(f"s{i}")
+                path = os.path.join(stage_dir, f"s{i}.sock")
+                servers.append(StageServer(st, path).start())
+                stages.append(st)
+                cp.connect(f"s{i}", path, timeout=2.0)
+            stats = cp._collect_all()
+            assert sorted(stats) == [f"s{i}" for i in range(4)]
+            # all binary handles → the fan-out pool was never created
+            assert cp._executor is None
+            for i in range(4):
+                assert cp.fleet_status()[f"s{i}"]["heartbeat"] == "ok"
+        finally:
+            cp.close()
+            for s in servers:
+                s.stop()
+
+    def test_dead_stage_marked_down_not_hung(self, stage_dir):
+        cp = ControlPlane(stage_deadline=0.5, retry=None)
+        server = StageServer(_stage("s"), os.path.join(stage_dir, "s.sock")).start()
+        try:
+            cp.connect("s", os.path.join(stage_dir, "s.sock"), timeout=2.0)
+            server.stop()
+            _kill_conn(cp._handles["s"])
+            start = time.perf_counter()
+            stats = cp._collect_all()
+            assert time.perf_counter() - start < 2.0
+            assert stats == {}
+            assert not cp.stage_up("s")
+        finally:
+            cp.close()

@@ -498,7 +498,8 @@ class TestClose:
                 cp.connect("r", f"{d}/r.sock")
                 handle = cp._handles["r"]
                 cp.close()
-                assert handle._sock.fileno() == -1  # closed
+                # a closed handle either drops its socket or leaves it closed
+                assert handle._sock is None or handle._sock.fileno() == -1
             finally:
                 srv.stop()
 
