@@ -1,0 +1,241 @@
+"""Fleet SLO autopilot: cluster-scoped triggers re-weighting shards.
+
+One checked-in policy (``examples/policies/fleet_slo_autopilot.json``)
+declares both halves of a per-tenant SLO over a 3-process fleet:
+
+* **bandwidth** — a fair-share objective guaranteeing ``frontend`` 60 MiB/s
+  and ``batch`` 40 MiB/s in aggregate across every stage process, and
+* **tail latency** — a ``@fleet.p99`` trigger: when the p99 of frontend
+  waits *merged across every member's histogram* breaches 25 ms, demote the
+  batch flow fleet-wide (its DRLs drop to the 5 MiB/s demote floor) until
+  the tail clears.
+
+The run injects a latency hotspot on ONE member's frontend shard — every
+other member stays fast, so only the fleet-merged histogram sees the SLO
+breach (each healthy member's own p99 never moves). Everything is verified
+off the Prometheus scrape endpoint, exactly as an operator would see it:
+
+1. before the hotspot: ``paio_trigger_fired`` is 0 (pre-registered at zero),
+2. under the hotspot: fired flips to 1, ``paio_fleet_wait_p99_ms`` breaches,
+   and batch's fleet throughput collapses to the demote floor,
+3. after the hotspot: the trigger releases and batch recovers, and
+4. the merged fleet histogram renders as a valid native Prometheus family
+   (cumulative ``_bucket`` rows non-decreasing, ``+Inf`` row == ``_count``).
+
+Run: PYTHONPATH=src python examples/fleet_slo_autopilot.py [--stages 3]
+     [--seconds 9]
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import os
+import sys
+import tempfile
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MiB = float(1 << 20)
+POLICY_FILE = os.path.join(os.path.dirname(__file__), "policies", "fleet_slo_autopilot.json")
+
+HOT_START = 2.5  # hotspot window, seconds after the member's channels appear
+HOT_END = 5.5
+
+
+def _stage_process(name: str, socket_path: str, seconds: float, hot: bool) -> None:
+    """One storage-server process: greedy enforce-driven traffic on both
+    tenants (the policy's DRLs are the only thing shaping it). A ``hot``
+    member also injects 100 ms service-latency observations into its
+    frontend shard between HOT_START and HOT_END — the synthetic hotspot."""
+    from repro.core import RequestType, Stage, StageServer, build_context, propagate_tenant
+
+    stage = Stage(name)
+    server = StageServer(stage, socket_path).start()
+    deadline = time.monotonic() + seconds
+
+    def drive(tenant: str) -> None:
+        while stage.channel(tenant) is None:
+            if time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
+        with propagate_tenant(tenant):
+            ctx = build_context(RequestType.read, size=64 * 1024)
+        while time.monotonic() < deadline:
+            stage.enforce(ctx, None)
+
+    def inject_hotspot() -> None:
+        while stage.channel("frontend") is None:
+            if time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
+        born = time.monotonic()
+        ch = stage.channel("frontend")
+        while time.monotonic() < deadline:
+            t = time.monotonic() - born
+            if HOT_START < t < HOT_END:
+                # a slow device/shard: ops completing with 100 ms latency
+                ch.stats.record(0, wait=0.1)
+            time.sleep(0.005)
+
+    threads = [threading.Thread(target=drive, args=(t,), daemon=True) for t in ("frontend", "batch")]
+    if hot:
+        threads.append(threading.Thread(target=inject_hotspot, daemon=True))
+    for t in threads:
+        t.start()
+    while time.monotonic() < deadline:
+        time.sleep(0.1)
+    server.stop()
+
+
+def _check_histogram(vals, flow: str):
+    """Validate the merged fleet histogram family for ``flow`` as rendered:
+    cumulative _bucket rows non-decreasing in le, +Inf row == _count > 0."""
+    from repro.telemetry import parse_labels
+
+    rows = []
+    for series, v in vals.items():
+        fam, labels = parse_labels(series)
+        if fam == "paio_fleet_wait_hist_ms_bucket" and labels.get("flow") == flow:
+            le = labels["le"]
+            rows.append((float("inf") if le == "+Inf" else float(le), v))
+    rows.sort()
+    count = vals.get(f'paio_fleet_wait_hist_ms_count{{flow="{flow}"}}')
+    if len(rows) < 2:
+        return f"too few _bucket rows for flow={flow!r} ({len(rows)})"
+    counts = [v for _, v in rows]
+    if counts != sorted(counts):
+        return f"non-monotone cumulative _bucket rows for flow={flow!r}: {counts}"
+    if rows[-1][0] != float("inf") or rows[-1][1] != count or not count:
+        return f"+Inf bucket ({rows[-1][1]}) != _count ({count}) for flow={flow!r}"
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", type=int, default=3, help="fleet size (stage server processes)")
+    ap.add_argument("--seconds", type=float, default=9.0, help="traffic duration per stage process")
+    args = ap.parse_args()
+
+    from repro.core import ControlPlane
+    from repro.telemetry import parse_prometheus
+
+    stage_names = [f"s{i+1}" for i in range(args.stages)]
+    mp = multiprocessing.get_context(
+        "fork" if "fork" in multiprocessing.get_all_start_methods() else None
+    )
+    timeline = []  # (t, fired, fleet_p99_frontend, fleet_tput_batch)
+    hist_failure = "never scraped a fired sample"
+    with tempfile.TemporaryDirectory() as sock_dir, ControlPlane(loop_interval=0.05) as cp:
+        procs = []
+        for i, name in enumerate(stage_names):
+            path = os.path.join(sock_dir, f"{name}.sock")
+            p = mp.Process(
+                target=_stage_process,
+                args=(name, path, args.seconds + 5.0, i == len(stage_names) - 1),
+                daemon=True,
+            )
+            p.start()
+            procs.append((name, path, p))
+        for name, path, _ in procs:
+            t0 = time.monotonic()
+            while not os.path.exists(path):
+                if time.monotonic() - t0 > 10.0:
+                    raise SystemExit(f"stage {name} never opened {path}")
+                time.sleep(0.01)
+            cp.connect(name, path)
+
+        cp.install_policy(POLICY_FILE)
+        exporter = cp.serve_metrics()
+        print(f"policy installed on {len(stage_names)} stages; exporter on {exporter.url}")
+
+        # pre-registration: the trigger + fleet families are on the endpoint
+        # at zero BEFORE the loop has run a single tick
+        with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+            vals = parse_prometheus(resp.read().decode())
+        fired_keys = [k for k in vals if k.startswith("paio_trigger_fired")]
+        if not fired_keys or any(vals[k] != 0.0 for k in fired_keys):
+            print(f"FAIL: trigger not pre-registered at zero: {fired_keys}", file=sys.stderr)
+            return 1
+        if vals.get('paio_fleet_wait_p99_ms{flow="frontend"}') != 0.0:
+            print("FAIL: paio_fleet_wait_p99_ms not pre-registered at zero", file=sys.stderr)
+            return 1
+        (fired_key,) = fired_keys
+        print(f"pre-registered at zero: {fired_key}, paio_fleet_* families")
+
+        cp.start()
+        t0 = time.monotonic()
+        deadline = t0 + args.seconds + 6.0
+        released_after_fire = False
+        while time.monotonic() < deadline:
+            time.sleep(0.2)
+            with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+                vals = parse_prometheus(resp.read().decode())
+            fired = vals.get(fired_key, 0.0)
+            timeline.append(
+                (
+                    time.monotonic() - t0,
+                    fired,
+                    vals.get('paio_fleet_wait_p99_ms{flow="frontend"}', 0.0),
+                    vals.get('paio_fleet_throughput{flow="batch"}', 0.0),
+                )
+            )
+            if fired == 1.0:
+                hist_failure = _check_histogram(vals, "frontend")
+            if fired == 0.0 and any(s[1] == 1.0 for s in timeline):
+                released_after_fire = True
+                break
+        cp.stop()
+        for _, _, p in procs:
+            p.terminate()
+            p.join(timeout=10.0)
+
+    pre = [s for s in timeline if s[1] == 0.0 and not any(x[1] == 1.0 for x in timeline[: timeline.index(s)])]
+    during = [s for s in timeline if s[1] == 1.0]
+    failures = []
+    if not pre:
+        failures.append("no pre-hotspot samples with the trigger armed")
+    if not during:
+        failures.append("@fleet.p99 trigger never fired under the injected hotspot")
+    if not released_after_fire:
+        failures.append("trigger never released after the hotspot cleared")
+    if during:
+        peak_p99 = max(s[2] for s in during)
+        if peak_p99 <= 25.0:
+            failures.append(f"fired but scraped fleet p99 never breached the SLO ({peak_p99:.1f} ms)")
+        if hist_failure:
+            failures.append(f"fleet histogram family invalid: {hist_failure}")
+    if pre and during:
+        # skip the first second of armed samples: fair-share convergence
+        settled = [s for s in pre if s[0] > 1.0] or pre
+        batch_before = sum(s[3] for s in settled) / len(settled)
+        batch_during = sum(s[3] for s in during) / len(during)
+        if batch_before > 0 and batch_during >= 0.7 * batch_before:
+            failures.append(
+                f"demote did not re-weight the fleet: batch {batch_before / MiB:.1f} -> "
+                f"{batch_during / MiB:.1f} MiB/s"
+            )
+        else:
+            print(
+                f"batch re-weighted under the breach: {batch_before / MiB:.1f} -> "
+                f"{batch_during / MiB:.1f} MiB/s aggregate; "
+                f"fleet frontend p99 peaked at {max(s[2] for s in during):.1f} ms"
+            )
+
+    for f in failures:
+        print(f"slo_autopilot FAIL: {f}", file=sys.stderr)
+    if failures:
+        return 1
+    fire_at = next(s[0] for s in timeline if s[1] == 1.0)
+    release_at = next(s[0] for s in timeline if s[1] == 0.0 and s[0] > fire_at)
+    print(
+        f"SLO autopilot OK: fired at t={fire_at:.1f}s, released at t={release_at:.1f}s; "
+        f"merged fleet histogram valid ({len(timeline)} scrapes)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,8 +23,11 @@ python -m benchmarks.run --smoke
 echo "== policy smoke (example policies parse/compile + trigger reaction, exporter-scraped) =="
 python -m benchmarks.bench_policy_reaction --smoke --scrape
 
-echo "== observability smoke (exporter endpoint: policy version + p99 gauges) =="
+echo "== observability smoke (exporter endpoint: policy version + p99 gauges + merged fleet histogram _bucket families) =="
 python scripts/scrape_smoke.py
+
+echo "== fleet SLO autopilot (3 stage processes: @fleet.p99 trigger fires under injected hotspot, batch demoted, all scraped) =="
+python examples/fleet_slo_autopilot.py --stages 3
 
 echo "== fleet smoke (3 stage processes over UDS: global fair-share guarantees + paio_stage_up) =="
 python examples/fleet_fairshare.py --stages 3 --seconds 5 --export 0

@@ -7,6 +7,12 @@ policy installed on a bare serve stage (no model weights — the data plane and
 control plane are the system under test), with traffic driven through both
 tenant channels so stage gauges carry live values.
 
+A second section stands up a two-stage in-process fleet under a ``scope:
+global`` policy and asserts the **fleet metric plane** renders correctly:
+``paio_fleet_*`` views sum the members, and the merged wait histogram is a
+valid native Prometheus histogram family (cumulative ``_bucket`` rows
+non-decreasing in ``le``, ``+Inf`` row equal to ``_count``).
+
 Run: PYTHONPATH=src python scripts/scrape_smoke.py
 Exit status is non-zero on any missing/unparseable metric.
 """
@@ -19,11 +25,98 @@ import urllib.request
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import ControlPlane, RequestType, Stage, build_context, propagate_tenant
-from repro.telemetry import parse_prometheus
+from repro.telemetry import parse_labels, parse_prometheus
 
 POLICY_FILE = os.path.join(
     os.path.dirname(__file__), "..", "examples", "policies", "serve_multitenant.json"
 )
+
+FLEET_POLICY = """
+policy scrape_fleet
+for tenant=a global as A: limit bandwidth 60MiB/s
+for tenant=b global as B: limit bandwidth 40MiB/s
+objective fairshare capacity 100MiB/s demands A=60MiB/s,B=40MiB/s
+"""
+
+
+def check_histogram_family(metrics, family: str, want_labels) -> list:
+    """Validate one rendered histogram series: cumulative ``_bucket`` rows
+    monotone non-decreasing in ``le`` with the ``+Inf`` row == ``_count``."""
+    rows = []
+    count = None
+    for series, v in metrics.items():
+        fam, labels = parse_labels(series)
+        if not all(labels.get(k) == want for k, want in want_labels.items()):
+            continue
+        if fam == f"{family}_bucket":
+            le = labels["le"]
+            rows.append((float("inf") if le == "+Inf" else float(le), v))
+        elif fam == f"{family}_count":
+            count = v
+    rows.sort()
+    where = f"{family}{want_labels}"
+    if len(rows) < 2:
+        return [f"{where}: too few _bucket rows ({len(rows)})"]
+    failures = []
+    counts = [v for _, v in rows]
+    if counts != sorted(counts):
+        failures.append(f"{where}: non-monotone cumulative _bucket rows: {counts}")
+    if rows[-1][0] != float("inf"):
+        failures.append(f"{where}: no +Inf bucket row")
+    elif count is None or rows[-1][1] != count:
+        failures.append(f"{where}: +Inf row ({rows[-1][1]}) != _count ({count})")
+    if not count:
+        failures.append(f"{where}: empty histogram (no observations made it through)")
+    return failures
+
+
+def fleet_histogram_smoke() -> list:
+    """Two-stage fleet, asymmetric tails: the @fleet.* views and the merged
+    histogram family must render on the endpoint, scraped over real HTTP."""
+    s1, s2 = Stage("s1"), Stage("s2")
+    cp = ControlPlane(loop_interval=0.02)
+    cp.register_stage(s1)
+    cp.register_stage(s2)
+    cp.install_policy(FLEET_POLICY)
+    exporter = cp.serve_metrics()
+    try:
+        for _ in range(50):
+            s1.channel("A").stats.record(1 << 20, wait=0.001)
+            s2.channel("A").stats.record(1 << 20, wait=0.05)  # the slow member
+        cp.run_once()
+        with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+            metrics = parse_prometheus(resp.read().decode())
+
+        failures = check_histogram_family(
+            metrics, "paio_fleet_wait_hist_ms", {"flow": "A"}
+        )
+        failures += check_histogram_family(
+            metrics, "paio_channel_wait_hist_ms", {"stage": "s1", "channel": "A"}
+        )
+        fleet_tput = metrics.get('paio_fleet_throughput{flow="A"}')
+        member_sum = sum(
+            metrics.get(f'paio_channel_throughput{{channel="A",stage="{s}"}}', 0.0)
+            for s in ("s1", "s2")
+        )
+        if fleet_tput is None or abs(fleet_tput - member_sum) > 1e-6 * max(member_sum, 1.0):
+            failures.append(
+                f"paio_fleet_throughput ({fleet_tput}) != sum of members ({member_sum})"
+            )
+        # the merged tail: the slow member dominates the fleet p99 even
+        # though the fast member's own p99 is ~1 ms
+        fleet_p99 = metrics.get('paio_fleet_wait_p99_ms{flow="A"}', 0.0)
+        if not fleet_p99 > 10.0:
+            failures.append(f"fleet p99 lost the slow member's tail ({fleet_p99} ms)")
+        if not failures:
+            n = metrics[f'paio_fleet_wait_hist_ms_count{{flow="A"}}']
+            print(
+                f"fleet histogram OK: merged _bucket family valid ({int(n)} observations), "
+                f"fleet p99 {fleet_p99:.1f} ms, Σ-member throughput matches"
+            )
+        return failures
+    finally:
+        cp.close()
+        exporter.stop()
 
 
 def main() -> int:
@@ -65,6 +158,10 @@ def main() -> int:
         if not any('channel="tenant_a"' in k for k in metrics):
             failures.append("tenant_a channel gauges missing (traffic not visible)")
 
+        failures += check_histogram_family(
+            metrics, "paio_channel_wait_hist_ms", {"channel": "tenant_a"}
+        )
+
         for f in failures:
             print(f"scrape_smoke FAIL: {f}", file=sys.stderr)
         if failures:
@@ -74,10 +171,14 @@ def main() -> int:
             f"versions={[f'{k}={int(metrics[k])}' for k in version_keys]}; "
             f"{len(p99_keys)} wait_p99 gauges"
         )
-        return 0
     finally:
         cp.close()
         exporter.stop()
+
+    failures = fleet_histogram_smoke()
+    for f in failures:
+        print(f"scrape_smoke FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -214,9 +214,13 @@ class Channel:
                 )
         # gated on kind, not on the drl/priority allowlist: any object whose
         # kind is not known non-blocking feeds wait telemetry identically
-        # batch vs sequential, while noop/transform batches skip the O(n) sum
-        wait = sum(r.wait_seconds for r in results) if self._track_wait else 0.0
-        self.stats.record_batch(n, c0.size * n if homogeneous else sum(c.size for c in ctxs), wait)
+        # batch vs sequential — per-op waits, so the histogram sees the same
+        # distribution either way — while noop/transform batches skip the O(n) pass
+        nbytes = c0.size * n if homogeneous else sum(c.size for c in ctxs)
+        if self._track_wait:
+            self.stats.record_batch(n, nbytes, waits=[r.wait_seconds for r in results])
+        else:
+            self.stats.record_batch(n, nbytes)
         return results
 
     # -- control ------------------------------------------------------------

@@ -36,7 +36,7 @@ from repro.transport.server import StageServer
 from .clock import Clock, DEFAULT_CLOCK
 from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
 from .stage import Stage
-from .stats import StageStats
+from .stats import StageStats, fleet_view
 
 
 # --------------------------------------------------------------------------- #
@@ -685,6 +685,15 @@ class ControlPlane:
             else:
                 self.heartbeats.beat(name, time.perf_counter() - t0)
         return out
+
+    def collect_fleet(self) -> StageStats:
+        """One collect tick folded into the fleet view: every channel name
+        merged across its member stages (Σ throughput/iops, exactly-merged
+        wait histograms, so fleet percentiles are computed over the union of
+        every member's per-op observations). This is the same fold the policy
+        runtime publishes as ``paio_fleet_*`` / ``@fleet.*`` every loop tick;
+        this method exposes it for ad-hoc inspection and benchmarks."""
+        return fleet_view(self._collect_all())
 
     def _timed_collect(self, name: str, handle: StageHandle) -> Callable[[], StageStats]:
         """A collect thunk (for the blocking fan-out path) that beats the

@@ -8,6 +8,13 @@ loops (Algorithms 1–2) rely on.
 Counters are updated on the stage hot path, so the fast path is two integer
 adds under a lock that is never held across I/O.
 
+Wait telemetry is a **fixed-bucket mergeable histogram**
+(:mod:`repro.telemetry.histogram`): every enforced request contributes one
+bucket increment (batches contribute per-op, not a collapsed mean), snapshots
+carry the window's bucket counts, and those counts merge *exactly* — across
+consecutive windows (algorithm cadence gating) and across stages (the fleet
+metric plane's ``@fleet.*`` views).
+
 All window arithmetic runs on the injected :class:`Clock` (monotonic by
 default — ``time.monotonic_ns``): a wall-clock step (NTP, suspend/resume)
 cannot stretch or invert a collect window. ``time.time()`` is reserved for
@@ -16,17 +23,18 @@ user-facing timestamps and appears nowhere in interval math.
 from __future__ import annotations
 
 import threading
-from collections import deque
+from bisect import bisect_left
 from dataclasses import dataclass, field
-from typing import Deque, Dict
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
 
-from repro.telemetry.metrics import quantile as _quantile
+from repro.telemetry.histogram import (
+    NBUCKETS,
+    WAIT_BOUNDS_MS,
+    merge_counts,
+    quantile_from_counts,
+)
 
 from .clock import Clock, DEFAULT_CLOCK
-
-#: per-op wait observations retained for percentile telemetry (sliding over
-#: the most recent ops, independent of collect windows)
-WAIT_SAMPLE_WINDOW = 512
 
 
 @dataclass
@@ -49,12 +57,22 @@ class StatsSnapshot:
     #: total scheduling delay imposed by enforcement objects over the window;
     #: the policy trigger engine derives per-op wait (a latency proxy) from it
     wait_seconds: float = 0.0
-    #: per-op imposed-wait percentiles (ms) over the channel's most recent
-    #: ops (a sliding sample window, not the collect window); batch-enforced
-    #: requests contribute their per-op mean as one observation
+    #: per-op imposed-wait percentiles (ms) over the window's histogram; an
+    #: idle window holds the previous window's values (hold-last) so a
+    #: one-tick traffic gap does not read as a latency collapse
     wait_p50_ms: float = 0.0
     wait_p95_ms: float = 0.0
     wait_p99_ms: float = 0.0
+    #: the window's wait histogram: per-bucket op counts over the shared
+    #: WAIT_BOUNDS_MS layout (+ one +Inf bucket). Empty tuple = no histogram
+    #: (old-wire snapshots); merges exactly across windows and stages
+    wait_hist: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        # v1 JSON transports round-trip tuples as lists; normalize so wire
+        # equality and merge arithmetic hold regardless of the path taken
+        if not isinstance(self.wait_hist, tuple):
+            self.wait_hist = tuple(self.wait_hist)
 
     @property
     def mean_wait_ms(self) -> float:
@@ -62,10 +80,18 @@ class StatsSnapshot:
         return (self.wait_seconds / self.ops) * 1e3 if self.ops else 0.0
 
 
+def _hist_percentiles(counts: Sequence[int]) -> Tuple[float, float, float]:
+    return (
+        quantile_from_counts(counts, 0.5),
+        quantile_from_counts(counts, 0.95),
+        quantile_from_counts(counts, 0.99),
+    )
+
+
 class ChannelStats:
     __slots__ = (
-        "_lock", "_clock", "_ops", "_bytes", "_cum_ops", "_cum_bytes", "_window_start", "_inflight",
-        "_wait", "_wait_ms_samples", "_wait_ms_sorted", "_wait_gen", "name"
+        "_lock", "_clock", "_ops", "_bytes", "_cum_ops", "_cum_bytes", "_window_start",
+        "_inflight", "_wait", "_hist", "_last_percentiles", "name"
     )
 
     def __init__(self, name: str, clock: Clock = DEFAULT_CLOCK) -> None:
@@ -78,12 +104,12 @@ class ChannelStats:
         self._cum_bytes = 0
         self._inflight = 0
         self._wait = 0.0
-        self._wait_ms_samples: Deque[float] = deque(maxlen=WAIT_SAMPLE_WINDOW)
-        #: sorted view of the sample window, rebuilt lazily on collect (None
-        #: = dirty); the rebuild sorts OUTSIDE the hot-path lock and only
-        #: caches back if no record landed meanwhile (generation check)
-        self._wait_ms_sorted: "list[float] | None" = []
-        self._wait_gen = 0
+        #: windowed wait histogram (bucket counts over WAIT_BOUNDS_MS), reset
+        #: by collect like the other window counters; plain list + precomputed
+        #: bucket index keeps the hot path to one increment under the lock
+        self._hist: List[int] = [0] * NBUCKETS
+        #: hold-last percentiles for idle windows
+        self._last_percentiles: Tuple[float, float, float] = (0.0, 0.0, 0.0)
         self._window_start = clock.now()
 
     def begin_op(self) -> None:
@@ -96,31 +122,56 @@ class ChannelStats:
             self._inflight += n
 
     def record(self, size: int, wait: float = 0.0) -> None:
+        # bucket resolution is pure (bisect over a shared tuple) — keep it
+        # outside the lock so the locked section stays a handful of adds
+        idx = bisect_left(WAIT_BOUNDS_MS, wait * 1e3)
         with self._lock:
             self._ops += 1
             self._bytes += size
-            self._wait_ms_samples.append(wait * 1e3)
-            self._wait_ms_sorted = None
-            self._wait_gen += 1
+            self._hist[idx] += 1
             if wait:
                 self._wait += wait
             if self._inflight > 0:
                 self._inflight -= 1
 
-    def record_batch(self, ops: int, nbytes: int, wait: float = 0.0) -> None:
+    def record_batch(
+        self,
+        ops: int,
+        nbytes: int,
+        wait: float = 0.0,
+        waits: Optional[Sequence[float]] = None,
+    ) -> None:
         """Register ``ops`` enforced requests totalling ``nbytes`` under one
         lock acquisition — the batch hot path pays lock traffic per *batch*,
         not per request, while ``collect`` windows stay exactly equivalent to
-        ``ops`` individual ``record`` calls."""
+        ``ops`` individual ``record`` calls.
+
+        ``waits`` (per-op wait seconds, len == ops) feeds the histogram one
+        bucket increment per request — batched and sequential enforcement of
+        the same latency distribution produce identical percentiles. The
+        increments are folded into a local vector outside the lock, so the
+        locked section is O(buckets), not O(ops). Without ``waits``, the
+        total ``wait`` contributes ``ops`` weighted observations at the
+        batch mean (the best a total can say)."""
+        inc: Optional[List[int]] = None
+        if waits is not None:
+            inc = [0] * NBUCKETS
+            bounds = WAIT_BOUNDS_MS
+            total = 0.0
+            for w in waits:
+                inc[bisect_left(bounds, w * 1e3)] += 1
+                total += w
+            wait = total
         with self._lock:
             self._ops += ops
             self._bytes += nbytes
-            # one percentile observation per batch (the per-op mean): keeps
-            # the hot path O(1) in batch size; document as approximate
-            if ops:
-                self._wait_ms_samples.append((wait / ops) * 1e3)
-                self._wait_ms_sorted = None
-                self._wait_gen += 1
+            if inc is not None:
+                hist = self._hist
+                for i, c in enumerate(inc):
+                    if c:
+                        hist[i] += c
+            elif ops:
+                self._hist[bisect_left(WAIT_BOUNDS_MS, (wait / ops) * 1e3)] += ops
             if wait:
                 self._wait += wait
             if self._inflight > 0:
@@ -130,25 +181,22 @@ class ChannelStats:
         now = self._clock.now()
         with self._lock:
             window = max(now - self._window_start, 1e-9)
-            waits = self._wait_ms_sorted
-            gen = self._wait_gen
-            raw = list(self._wait_ms_samples) if waits is None else None
             ops, nbytes, wait = self._ops, self._bytes, self._wait
             cum_ops, cum_bytes = self._cum_ops + ops, self._cum_bytes + nbytes
             inflight = self._inflight
+            hist = tuple(self._hist)
             self._cum_ops, self._cum_bytes = cum_ops, cum_bytes
             self._ops = 0
             self._bytes = 0
             self._wait = 0.0
+            self._hist = [0] * NBUCKETS
             self._window_start = now
-        if raw is not None:
-            # the O(n log n) sort runs OUTSIDE the hot-path lock; cache the
-            # sorted view only if no record landed while we sorted
-            raw.sort()
-            waits = raw
+        if ops:
+            percentiles = _hist_percentiles(hist)
             with self._lock:
-                if self._wait_gen == gen:
-                    self._wait_ms_sorted = raw
+                self._last_percentiles = percentiles
+        else:
+            percentiles = self._last_percentiles
         return StatsSnapshot(
             channel=self.name,
             ops=ops,
@@ -160,9 +208,10 @@ class ChannelStats:
             cumulative_bytes=cum_bytes,
             inflight=inflight,
             wait_seconds=wait,
-            wait_p50_ms=_quantile(waits, 0.5),
-            wait_p95_ms=_quantile(waits, 0.95),
-            wait_p99_ms=_quantile(waits, 0.99),
+            wait_p50_ms=percentiles[0],
+            wait_p95_ms=percentiles[1],
+            wait_p99_ms=percentiles[2],
+            wait_hist=hist,
         )
 
 
@@ -171,12 +220,20 @@ def merge_snapshots(a: StatsSnapshot, b: StatsSnapshot) -> StatsSnapshot:
 
     Counters add, the window spans both, rates are recomputed over the
     combined window; point-in-time fields (cumulative totals, inflight) take
-    the later snapshot's values. Used by the control plane to accumulate
-    collect ticks for algorithms stepping slower than the loop.
+    the later snapshot's values. Wait histograms merge exactly (bucket counts
+    add), so the combined percentiles are computed, not approximated; only
+    when neither window carries a histogram (old-wire peers) do the later
+    snapshot's percentiles pass through. Used by the control plane to
+    accumulate collect ticks for algorithms stepping slower than the loop.
     """
     window = a.window_seconds + b.window_seconds
     ops = a.ops + b.ops
     nbytes = a.bytes + b.bytes
+    hist = merge_counts(a.wait_hist, b.wait_hist)
+    if any(hist):
+        p50, p95, p99 = _hist_percentiles(hist)
+    else:
+        p50, p95, p99 = b.wait_p50_ms, b.wait_p95_ms, b.wait_p99_ms
     return StatsSnapshot(
         channel=b.channel,
         ops=ops,
@@ -188,11 +245,70 @@ def merge_snapshots(a: StatsSnapshot, b: StatsSnapshot) -> StatsSnapshot:
         cumulative_bytes=b.cumulative_bytes,
         inflight=b.inflight,
         wait_seconds=a.wait_seconds + b.wait_seconds,
-        # percentiles slide over recent ops and cannot be merged exactly;
-        # the later snapshot already covers the combined window's tail
-        wait_p50_ms=b.wait_p50_ms,
-        wait_p95_ms=b.wait_p95_ms,
-        wait_p99_ms=b.wait_p99_ms,
+        wait_p50_ms=p50,
+        wait_p95_ms=p95,
+        wait_p99_ms=p99,
+        wait_hist=hist,
+    )
+
+
+def merge_parallel(snaps: Iterable[StatsSnapshot], channel: str) -> StatsSnapshot:
+    """Fold *parallel* windows (same channel name on different stages, one
+    collect tick) into a fleet view of the channel.
+
+    Extensive counters (ops, bytes, waits, cumulative totals, inflight) and
+    rates sum across members; the window spans the longest member window (the
+    windows overlap in time — adding them would halve every rate). Wait
+    histograms merge exactly, so ``<flow>@fleet.p99`` is computed from the
+    union of every member's per-op observations; members without histograms
+    (old-wire) fall back to a max-over-members tail bound.
+    """
+    snaps = list(snaps)
+    ops = sum(s.ops for s in snaps)
+    nbytes = sum(s.bytes for s in snaps)
+    hist: Tuple[int, ...] = ()
+    for s in snaps:
+        hist = merge_counts(hist, s.wait_hist)
+    if any(hist):
+        p50, p95, p99 = _hist_percentiles(hist)
+    else:
+        p50 = max((s.wait_p50_ms for s in snaps), default=0.0)
+        p95 = max((s.wait_p95_ms for s in snaps), default=0.0)
+        p99 = max((s.wait_p99_ms for s in snaps), default=0.0)
+    return StatsSnapshot(
+        channel=channel,
+        ops=ops,
+        bytes=nbytes,
+        window_seconds=max((s.window_seconds for s in snaps), default=0.0),
+        throughput=sum(s.throughput for s in snaps),
+        iops=sum(s.iops for s in snaps),
+        cumulative_ops=sum(s.cumulative_ops for s in snaps),
+        cumulative_bytes=sum(s.cumulative_bytes for s in snaps),
+        inflight=sum(s.inflight for s in snaps),
+        wait_seconds=sum(s.wait_seconds for s in snaps),
+        wait_p50_ms=p50,
+        wait_p95_ms=p95,
+        wait_p99_ms=p99,
+        wait_hist=hist,
+    )
+
+
+def fleet_view(stats: Mapping[str, "StageStats"]) -> "StageStats":
+    """Fold one collect tick's member snapshots into the fleet view: every
+    channel name seen on any stage gets one merged snapshot spanning all its
+    member instances (``scope: global`` flows instantiate the same channel
+    name on every stage, so the fleet channel IS the flow). The control
+    plane's policy runtime publishes this under the ``@fleet`` pseudo-stage
+    (``paio_fleet_*`` metric families)."""
+    by_channel: Dict[str, List[StatsSnapshot]] = {}
+    for st in stats.values():
+        for name, snap in st.per_channel.items():
+            by_channel.setdefault(name, []).append(snap)
+    return StageStats(
+        per_channel={
+            name: (snaps[0] if len(snaps) == 1 else merge_parallel(snaps, name))
+            for name, snaps in by_channel.items()
+        }
     )
 
 

@@ -39,13 +39,25 @@ from .dsl import (
 from .triggers import CompiledTrigger
 
 #: builtin per-channel metric fields derivable from StatsSnapshot collects
-BUILTIN_METRICS = ("throughput", "iops", "wait_ms", "inflight", "ops", "bytes")
+BUILTIN_METRICS = (
+    "throughput", "iops", "wait_ms", "inflight", "ops", "bytes",
+    "wait_p50_ms", "wait_p95_ms", "wait_p99_ms",
+)
 #: accepted aliases for builtin metric names
 METRIC_ALIASES = {
     "bandwidth": "throughput",
     "latency_ms": "wait_ms",
     **{m: m for m in BUILTIN_METRICS},
 }
+
+#: pseudo-stage the policy runtime publishes fleet-folded views under; the
+#: leading "@" keeps it out of the real stage namespace (stage names come
+#: from Stage(name=...), which has no reason to start with "@")
+FLEET_STAGE = "@fleet"
+
+#: percentile agg → the windowed merged-histogram percentile gauge it
+#: resolves to on fleet scope
+_FLEET_PCTL_FIELDS = {"p50": "wait_p50_ms", "p95": "wait_p95_ms", "p99": "wait_p99_ms"}
 
 #: a demoted flow's DRL runs at provisioned_rate / DEMOTE_FACTOR (floor 1.0)
 DEMOTE_FACTOR = 10.0
@@ -361,6 +373,23 @@ def _check_object(
 # --------------------------------------------------------------------------- #
 # triggers                                                                     #
 # --------------------------------------------------------------------------- #
+def _fleet_key(canon: str, channel: Optional[str], cond: Condition) -> Tuple[str, Optional[str]]:
+    """Registry key (+ optional agg override) for a fleet-scoped condition.
+
+    Percentile aggs over ``wait_ms`` resolve to the merged-histogram windowed
+    percentile gauges (``@fleet.<ch>.wait_p99_ms`` — exact over the union of
+    every member's per-op observations), with the agg overridden to ``max``:
+    the trigger then watches the worst windowed tail inside its own sliding
+    window, which is the conservative reading of "p99 over the window" when
+    the per-tick value is already a percentile."""
+    if canon == "wait_ms" and cond.agg in _FLEET_PCTL_FIELDS:
+        fld = _FLEET_PCTL_FIELDS[cond.agg]
+        key = f"{FLEET_STAGE}.{channel}.{fld}" if channel else f"{FLEET_STAGE}.{fld}"
+        return key, "max"
+    key = f"{FLEET_STAGE}.{channel}.{canon}" if channel else f"{FLEET_STAGE}.{canon}"
+    return key, None
+
+
 def _resolve_metric_key(
     policy: Policy,
     cond: Condition,
@@ -368,26 +397,42 @@ def _resolve_metric_key(
     infos: Optional[Mapping[str, Any]],
     default_stage: Optional[str],
     what: str,
-) -> str:
+) -> Tuple[str, Optional[str]]:
+    """Resolve a condition to ``(registry key, agg override)``.
+
+    Builtin metrics on ``scope: global`` flows resolve to the fleet metric
+    plane (``@fleet.<channel>.<metric>``): the policy runtime folds member
+    snapshots into one honest aggregate per collect tick — Σ throughput,
+    merged-histogram percentiles — so the PR-4 "ambiguous across member
+    stages" rejection no longer applies. ``@fleet.<flow>`` / ``@fleet``
+    qualifiers force fleet scope explicitly (the latter aggregates over
+    every channel of the control plane's fleet view).
+    """
     if "." in cond.metric:  # fully-qualified registry key — pluggable, pass through
-        return cond.metric
+        return cond.metric, None
     canon = METRIC_ALIASES.get(cond.metric)
     if canon is None:
         raise PolicyError(
             f"{what}: unknown metric {cond.metric!r} "
             f"(builtins: {sorted(set(METRIC_ALIASES))}; registry metrics use dotted names)"
         )
-    if cond.flow is not None:
-        b = _resolve_action_flow(policy, bindings, cond.flow, what)
-        if len(b.member_stages) > 1:
-            raise PolicyError(
-                f"{what}: builtin metric {cond.metric!r} on global flow "
-                f"{b.flow.name!r} is ambiguous across its member stages; "
-                "use a stage-scoped flow or a dotted registry metric"
-            )
-        return f"{b.stage}.{b.channel}.{canon}"
+    flow_ref = cond.flow
+    fleet = False
+    if flow_ref == "fleet":
+        fleet = True
+        flow_ref = None
+    elif flow_ref is not None and flow_ref.startswith("fleet."):
+        fleet = True
+        flow_ref = flow_ref[len("fleet."):]
+    if flow_ref is not None:
+        b = _resolve_action_flow(policy, bindings, flow_ref, what)
+        if fleet or b.flow.is_global():
+            return _fleet_key(canon, b.channel, cond)
+        return f"{b.stage}.{b.channel}.{canon}", None
+    if fleet:
+        return _fleet_key(canon, None, cond)
     stage = _resolve_stage(policy, None, infos, default_stage, what)
-    return f"{stage}.{canon}"
+    return f"{stage}.{canon}", None
 
 
 def _lower_trigger(
@@ -398,7 +443,9 @@ def _lower_trigger(
     default_stage: Optional[str],
 ) -> CompiledTrigger:
     what = f"trigger {spec.name!r}"
-    metric_key = _resolve_metric_key(policy, spec.when, bindings, infos, default_stage, what)
+    metric_key, agg_override = _resolve_metric_key(
+        policy, spec.when, bindings, infos, default_stage, what
+    )
     fire: Dict[str, List[Any]] = {}
     release: Dict[str, List[Any]] = {}
     for action in spec.do:
@@ -411,7 +458,7 @@ def _lower_trigger(
         policy=policy.name,
         name=spec.name,
         metric_key=metric_key,
-        agg=spec.when.agg,
+        agg=agg_override or spec.when.agg,
         op=spec.when.op,
         value=spec.when.value,
         window=spec.when.window,

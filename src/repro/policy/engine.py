@@ -22,10 +22,10 @@ from __future__ import annotations
 import threading
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
-from repro.core.stats import StageStats
+from repro.core.stats import StageStats, fleet_view
 from repro.telemetry.metrics import MetricRegistry, get_registry
 
-from .compile import CompiledPolicy
+from .compile import FLEET_STAGE, CompiledPolicy
 from .triggers import TriggerEngine, TriggerEvent
 
 #: per-channel StatsSnapshot fields published as gauges
@@ -115,6 +115,11 @@ def stats_to_samples(
 
 def _export_descriptor(entry: Tuple[str, Optional[str]], fld: str):
     stage, channel = entry
+    if stage == FLEET_STAGE:
+        # fleet views export under their own family, labeled by flow (a
+        # global flow's channel name IS the flow across the fleet); the
+        # whole-fleet aggregate row gets the reserved "_total" label
+        return f"paio_fleet_{fld}", {"flow": channel if channel is not None else "_total"}
     if channel is None:
         return f"paio_stage_{fld}", {"stage": stage}
     return f"paio_channel_{fld}", {"stage": stage, "channel": channel}
@@ -140,6 +145,7 @@ class PolicyRuntime:
         self._version_counter = 0  #: bumps on every install/replace
         self._stats_keys: set = set()  # gauges owned by the last stats tick
         self._trigger_keys: set = set()  # trigger-state gauges we own
+        self._hist_keys: set = set()  # cumulative wait histograms we own
         #: reused per-tick sample buffer + key-string cache (alloc churn fix)
         self._samples_buf: Dict[str, float] = {}
         self._key_cache: Dict[Tuple[str, Optional[str]], _StatKeys] = {}
@@ -175,7 +181,54 @@ class PolicyRuntime:
             self._publish_version(compiled.name, version)
         for trigger in compiled.triggers:
             self.trigger_engine.add(trigger)
+        self._preregister(compiled)
         return version
+
+    def _preregister(self, compiled: CompiledPolicy) -> None:
+        """Publish the policy's trigger-state gauges and (for global flows)
+        its ``paio_fleet_*`` families at **zero** on install, so dashboards
+        and the CI scrape see every family the policy can move before the
+        first collect tick or firing (the ``paio_rpc_retries_total``
+        convention from the transport layer). Keys that already carry a live
+        value (atomic replace, overlapping policies) are described but not
+        zeroed."""
+        from repro.telemetry.histogram import NBUCKETS
+
+        existing = set(self.registry.names())
+        trigger_keys: List[str] = []
+        for t in compiled.triggers:
+            key = f"trigger.{t.qualified_name}.fired"
+            pol, _, trig = t.qualified_name.partition("/")
+            self.registry.describe(key, "paio_trigger_fired", {"policy": pol, "trigger": trig})
+            if key not in existing:
+                self.registry.set_gauge(key, 0.0)
+            trigger_keys.append(key)
+        fleet_entries: List[Tuple[str, Optional[str]]] = [
+            (FLEET_STAGE, ch)
+            for ch in sorted({f.channel_name() for f in compiled.policy.flows if f.is_global()})
+        ]
+        if fleet_entries:
+            fleet_entries.append((FLEET_STAGE, None))
+        stats_keys: List[str] = []
+        hist_keys: List[str] = []
+        for entry in fleet_entries:
+            _, ch = entry
+            prefix = f"{FLEET_STAGE}.{ch}." if ch is not None else f"{FLEET_STAGE}."
+            for fld in CHANNEL_FIELDS:
+                key = prefix + fld
+                self.registry.describe(key, *_export_descriptor(entry, fld))
+                if key not in existing:
+                    self.registry.set_gauge(key, 0.0)
+                stats_keys.append(key)
+            if ch is not None:
+                hkey = prefix + "wait_hist_ms"
+                self.registry.describe(hkey, *_export_descriptor(entry, "wait_hist_ms"))
+                self.registry.hist_add(hkey, (0,) * NBUCKETS)  # create at zero
+                hist_keys.append(hkey)
+        with self._lock:
+            self._trigger_keys.update(trigger_keys)
+            self._hist_keys.update(hist_keys)
+        self._stats_keys |= set(stats_keys)
 
     def replace(self, compiled: CompiledPolicy) -> Tuple[CompiledPolicy, List[Any], int]:
         """Swap the stored policy named ``compiled.name`` in one step — the
@@ -201,6 +254,7 @@ class PolicyRuntime:
         self._prune_trigger_gauges(compiled.name)
         for trigger in compiled.triggers:
             self.trigger_engine.add(trigger)
+        self._preregister(compiled)
         return old, fired, version
 
     def _prune_trigger_gauges(self, policy_name: str) -> None:
@@ -274,8 +328,9 @@ class PolicyRuntime:
         trigger states, policy versions) — for planes publishing into the
         shared registry that are being torn down for good."""
         with self._lock:
-            owned = self._stats_keys | self._trigger_keys
+            owned = self._stats_keys | self._trigger_keys | self._hist_keys
             self._trigger_keys = set()
+            self._hist_keys = set()
         self._stats_keys = set()
         for key in owned:
             self.registry.unregister(key)
@@ -322,8 +377,18 @@ class PolicyRuntime:
         so triggers see the metric as *absent* (state frozen) rather than as
         a stale constant. Returns the trigger transitions; the caller applies
         each event's ``rules`` (stage → wire rules) through its stage handles.
+
+        Member snapshots are folded into the **fleet view** (pseudo-stage
+        ``@fleet``) before publication: ``@fleet.<channel>.throughput`` is the
+        sum over every member instance, ``@fleet.<channel>.wait_p99_ms`` comes
+        from the exactly-merged wait histograms — the sample set cluster-scoped
+        triggers evaluate against. Control algorithms never see the fold (it
+        exists only in the metric plane).
         """
-        gauges = stats_to_samples(stats, out=self._samples_buf, key_cache=self._key_cache)
+        all_stats: Mapping[str, StageStats] = (
+            {**stats, FLEET_STAGE: fleet_view(stats)} if stats else stats
+        )
+        gauges = stats_to_samples(all_stats, out=self._samples_buf, key_cache=self._key_cache)
         keys = set(gauges)
         stale_keys = self._stats_keys - keys
         if stale_keys:
@@ -332,8 +397,8 @@ class PolicyRuntime:
             # evict key-string cache entries for vanished channels too, or a
             # long-lived plane churning per-tenant channels leaks one
             # _StatKeys per channel name ever seen
-            live = {(stage, ch) for stage, st in stats.items() for ch in st.per_channel}
-            live.update((stage, None) for stage in stats)
+            live = {(stage, ch) for stage, st in all_stats.items() for ch in st.per_channel}
+            live.update((stage, None) for stage in all_stats)
             for gone in [k for k in self._key_cache if k not in live]:
                 del self._key_cache[gone]
                 self._described_entries.discard(gone)
@@ -347,6 +412,24 @@ class PolicyRuntime:
             self._described_entries.add(entry)
         self._stats_keys = keys
         self.registry.update_gauges(gauges)
+        # cumulative wait histograms: each tick merges the window's bucket
+        # deltas in (exact, associative), per channel and per fleet view —
+        # the exporter renders them as native _bucket/_sum/_count families
+        hist_keys: set = set()
+        for stage, st in all_stats.items():
+            for ch, snap in st.per_channel.items():
+                if not snap.wait_hist:
+                    continue  # old-wire peer without histograms
+                key = f"{stage}.{ch}.wait_hist_ms"
+                hist_keys.add(key)
+                if key not in self._hist_keys:
+                    self.registry.describe(key, *_export_descriptor((stage, ch), "wait_hist_ms"))
+                self.registry.hist_add(key, snap.wait_hist, snap.wait_seconds * 1e3)
+        with self._lock:
+            stale_hists = self._hist_keys - hist_keys
+            self._hist_keys = hist_keys
+        for stale in stale_hists:
+            self.registry.unregister(stale)
         samples = self.registry.sample()
         # trigger-state gauges are NOT published here — the control plane
         # calls publish_trigger_states() after it has applied the returned

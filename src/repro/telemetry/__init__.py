@@ -1,3 +1,11 @@
+from .histogram import (
+    NBUCKETS,
+    WAIT_BOUNDS_MS,
+    Histogram,
+    bucket_index,
+    merge_counts,
+    quantile_from_counts,
+)
 from .metrics import (
     MetricRegistry,
     MetricSample,
@@ -12,18 +20,25 @@ from .metrics import (
 #: repro.telemetry for the registry; it must not pay for http.server unless
 #: something actually starts/renders an exporter
 _EXPORTER_NAMES = frozenset(
-    {"MetricsExporter", "parse_prometheus", "render_prometheus", "start_exporter"}
+    {"MetricsExporter", "parse_labels", "parse_prometheus", "render_prometheus", "start_exporter"}
 )
 
 __all__ = [
+    "Histogram",
     "MetricRegistry",
     "MetricSample",
     "MetricsExporter",
+    "NBUCKETS",
     "ProcIOReader",
     "StepTimer",
+    "WAIT_BOUNDS_MS",
+    "bucket_index",
     "get_registry",
+    "merge_counts",
+    "parse_labels",
     "parse_prometheus",
     "quantile",
+    "quantile_from_counts",
     "render_prometheus",
     "set_registry",
     "start_exporter",

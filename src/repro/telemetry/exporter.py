@@ -15,7 +15,13 @@ Naming scheme (full table in docs/operations.md § Metric naming):
 * undescribed dotted registry names are sanitized verbatim:
   ``train.step.p99_ms`` → ``paio_train_step_p99_ms``;
 * counters get the conventional ``_total`` suffix, summaries render
-  ``{quantile="0.5|0.95|0.99"}`` rows plus ``_count`` / ``_sum``.
+  ``{quantile="0.5|0.95|0.99"}`` rows plus ``_count`` / ``_sum``, histograms
+  render native cumulative ``_bucket{le=...}`` rows (ending in ``+Inf``)
+  plus ``_sum`` / ``_count``.
+
+Label values are escaped per the text format (backslash, double-quote,
+newline) and :func:`parse_labels` reverses the escaping, so a pathological
+flow name (``evil"} 9``) round-trips instead of corrupting the scrape.
 """
 from __future__ import annotations
 
@@ -102,6 +108,16 @@ def render_prometheus(
                     lines.append(f"{fam}{_labels_text(s.labels, qlabel)} {_fmt(qv)}")
                 lines.append(f"{fam}_count{_labels_text(s.labels)} {s.count}")
                 lines.append(f"{fam}_sum{_labels_text(s.labels)} {_fmt(s.sum)}")
+        elif kind == "histogram":
+            lines.append(f"# TYPE {fam} histogram")
+            for s in group:
+                for bound, cum in s.buckets:
+                    lelabel = 'le="%s"' % _fmt(bound)
+                    lines.append(f"{fam}_bucket{_labels_text(s.labels, lelabel)} {cum}")
+                inf_label = 'le="+Inf"'
+                lines.append(f"{fam}_bucket{_labels_text(s.labels, inf_label)} {s.count}")
+                lines.append(f"{fam}_sum{_labels_text(s.labels)} {_fmt(s.sum)}")
+                lines.append(f"{fam}_count{_labels_text(s.labels)} {s.count}")
         else:
             lines.append(f"# TYPE {fam} gauge")
             for s in group:
@@ -109,16 +125,112 @@ def render_prometheus(
     return "\n".join(lines) + "\n"
 
 
+def _unescape_label(value: str) -> str:
+    """Inverse of :func:`_escape_label` (``\\\\`` → backslash, ``\\"`` →
+    quote, ``\\n`` → newline; unknown escapes pass through verbatim)."""
+    if "\\" not in value:
+        return value
+    out: List[str] = []
+    i, n = 0, len(value)
+    while i < n:
+        c = value[i]
+        if c == "\\" and i + 1 < n:
+            nxt = value[i + 1]
+            if nxt == "\\" or nxt == '"':
+                out.append(nxt)
+                i += 2
+                continue
+            if nxt == "n":
+                out.append("\n")
+                i += 2
+                continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def _split_series(line: str) -> Optional[tuple]:
+    """Split one exposition line into ``(series, value_text)`` where
+    ``series`` is the metric name with its label block verbatim.
+
+    Quote- and escape-aware: a label value legitimately containing ``"} "``
+    (escaped quotes) must not fool the scan — the naive ``rpartition(" ")``
+    this replaces silently dropped such lines."""
+    brace = line.find("{")
+    space = line.find(" ")
+    if brace == -1 or (space != -1 and space < brace):
+        name, _, value = line.partition(" ")
+        value = value.strip()
+        return (name, value) if name and value else None
+    i = brace + 1
+    n = len(line)
+    in_quotes = False
+    while i < n:
+        c = line[i]
+        if in_quotes:
+            if c == "\\":
+                i += 2
+                continue
+            if c == '"':
+                in_quotes = False
+        elif c == '"':
+            in_quotes = True
+        elif c == "}":
+            value = line[i + 1 :].strip()
+            return (line[: i + 1], value) if value else None
+        i += 1
+    return None  # unterminated label block
+
+
+def parse_labels(series: str) -> tuple:
+    """Parse a series name (as returned in :func:`parse_prometheus` keys)
+    into ``(family, labels)`` with label values **unescaped** — the exact
+    inverse of rendering, so ``render → parse`` round-trips any label value."""
+    brace = series.find("{")
+    if brace == -1:
+        return series, {}
+    fam = series[:brace]
+    body = series[brace + 1 : series.rindex("}")]
+    labels: Dict[str, str] = {}
+    i, n = 0, len(body)
+    while i < n:
+        eq = body.find('="', i)
+        if eq == -1:
+            break
+        key = body[i:eq]
+        j = eq + 2
+        start = j
+        while j < n:
+            c = body[j]
+            if c == "\\":
+                j += 2
+                continue
+            if c == '"':
+                break
+            j += 1
+        labels[key] = _unescape_label(body[start:j])
+        i = j + 1
+        if i < n and body[i] == ",":
+            i += 1
+    return fam, labels
+
+
 def parse_prometheus(text: str) -> Dict[str, float]:
     """Minimal exposition parser for tests/benchmarks scraping the endpoint:
-    returns ``{metric_with_labels: value}`` (comments skipped). Not a full
-    grammar — good for exact-line lookups and float parsing."""
+    returns ``{metric_with_labels: value}`` (comments skipped). Label blocks
+    are scanned quote/escape-aware, so label values containing spaces,
+    braces or quotes parse correctly; feed a key to :func:`parse_labels` to
+    recover the unescaped label values. Not a full grammar — good for
+    exact-line lookups and float parsing."""
     out: Dict[str, float] = {}
     for line in text.splitlines():
         line = line.strip()
         if not line or line.startswith("#"):
             continue
-        name, _, value = line.rpartition(" ")
+        split = _split_series(line)
+        if split is None:
+            continue
+        name, value = split
         try:
             out[name] = float(value)
         except ValueError:

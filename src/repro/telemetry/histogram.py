@@ -1,0 +1,186 @@
+"""Fixed-bucket mergeable latency histograms (the fleet metric plane's core).
+
+PR 3's wait-percentile telemetry kept a sliding sample window per channel —
+cheap locally, but windows from two stages (or two collect ticks) cannot be
+combined without the raw samples, so a ``scope: global`` flow had no honest
+fleet p99, and batch enforcement degraded to one mean observation per batch.
+Fixed-bucket histograms fix both structurally:
+
+* **exact, associative merge** — bucket counts add elementwise, so
+  merge(shard histograms) == one histogram over the union of observations,
+  bucket for bucket (the property the fleet views and the cross-tick window
+  accumulation rely on);
+* **per-op weights** — a batch contributes one bucket increment per request
+  (or a weighted increment), never a collapsed mean;
+* **native Prometheus exposition** — the bucket layout IS the
+  ``_bucket{le=...}`` family; no summary emulation.
+
+Bucket bounds are a fixed 1-2-5 ladder per decade from 1 µs to 100 s (in
+milliseconds), shared process-wide so every histogram in the system is
+mergeable with every other. Quantiles interpolate linearly inside the
+containing bucket — resolution is the bucket width (≤ 2.5x), counts are
+exact.
+"""
+from __future__ import annotations
+
+from bisect import bisect_left
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+
+def _build_wait_bounds() -> Tuple[float, ...]:
+    bounds: List[float] = []
+    for exp in range(-3, 5):  # 0.001 ms .. 50 000 ms
+        scale = 10.0 ** exp
+        bounds.extend((1.0 * scale, 2.0 * scale, 5.0 * scale))
+    bounds.append(1e5)  # 100 s — anything above lands in +Inf
+    return tuple(bounds)
+
+
+#: upper bucket bounds (inclusive, ms) for wait/latency histograms — one
+#: shared layout so every snapshot/stage/fleet histogram merges exactly
+WAIT_BOUNDS_MS: Tuple[float, ...] = _build_wait_bounds()
+#: bucket count including the implicit +Inf bucket
+NBUCKETS: int = len(WAIT_BOUNDS_MS) + 1
+
+
+def bucket_index(value_ms: float, bounds: Sequence[float] = WAIT_BOUNDS_MS) -> int:
+    """Index of the bucket ``value_ms`` falls in (``le`` semantics: a value
+    exactly on a bound counts in that bound's bucket)."""
+    return bisect_left(bounds, value_ms)
+
+
+def merge_counts(a: Sequence[int], b: Sequence[int]) -> Tuple[int, ...]:
+    """Elementwise sum of two bucket-count vectors. Either may be empty
+    (an old-wire snapshot with no histogram) — empty merges as all-zero."""
+    if not a:
+        return tuple(b)
+    if not b:
+        return tuple(a)
+    if len(a) != len(b):
+        raise ValueError(f"bucket layout mismatch: {len(a)} vs {len(b)} buckets")
+    return tuple(x + y for x, y in zip(a, b))
+
+
+def quantile_from_counts(
+    counts: Sequence[int], q: float, bounds: Sequence[float] = WAIT_BOUNDS_MS
+) -> float:
+    """Nearest-rank quantile over bucket counts, linearly interpolated inside
+    the containing bucket (0 when empty; the +Inf bucket reports the last
+    finite bound — the histogram cannot say more)."""
+    total = sum(counts)
+    if total <= 0:
+        return 0.0
+    k = min(int(q * total), total - 1)  # nearest-rank, matches telemetry.quantile
+    cum = 0
+    for i, c in enumerate(counts):
+        if c <= 0:
+            continue
+        if cum + c > k:
+            if i >= len(bounds):  # +Inf bucket: no finite upper edge
+                return float(bounds[-1])
+            lo = float(bounds[i - 1]) if i > 0 else 0.0
+            hi = float(bounds[i])
+            return lo + (hi - lo) * ((k - cum + 1) / c)
+        cum += c
+    return float(bounds[-1])  # pragma: no cover — unreachable (total > 0)
+
+
+class Histogram:
+    """A mergeable fixed-bucket histogram: exact integer counts per bucket
+    plus the running sum of observations. Not thread-safe — owners
+    (ChannelStats, MetricRegistry) lock around it."""
+
+    __slots__ = ("bounds", "counts", "sum")
+
+    def __init__(
+        self,
+        bounds: Sequence[float] = WAIT_BOUNDS_MS,
+        counts: Optional[Sequence[int]] = None,
+        sum_: float = 0.0,
+    ) -> None:
+        self.bounds = tuple(bounds)
+        n = len(self.bounds) + 1
+        if counts is None:
+            self.counts: List[int] = [0] * n
+        else:
+            if len(counts) != n:
+                raise ValueError(f"expected {n} bucket counts, got {len(counts)}")
+            self.counts = list(counts)
+        self.sum = float(sum_)
+
+    @property
+    def count(self) -> int:
+        return sum(self.counts)
+
+    def observe(self, value_ms: float) -> None:
+        self.counts[bisect_left(self.bounds, value_ms)] += 1
+        self.sum += value_ms
+
+    def add(self, value_ms: float, n: int) -> None:
+        """Weighted observation: ``n`` ops at ``value_ms`` each (one bucket
+        increment for a whole batch whose per-op values are not known)."""
+        if n <= 0:
+            return
+        self.counts[bisect_left(self.bounds, value_ms)] += n
+        self.sum += value_ms * n
+
+    def observe_many(self, values_ms: Iterable[float]) -> None:
+        counts, bounds = self.counts, self.bounds
+        total = 0.0
+        for v in values_ms:
+            counts[bisect_left(bounds, v)] += 1
+            total += v
+        self.sum += total
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        if self.bounds != other.bounds:
+            raise ValueError("cannot merge histograms with different bucket layouts")
+        self.counts = [x + y for x, y in zip(self.counts, other.counts)]
+        self.sum += other.sum
+        return self
+
+    def add_counts(self, counts: Sequence[int], sum_: float = 0.0) -> None:
+        """Merge a raw count vector (e.g. a snapshot's windowed delta) in."""
+        if not counts:
+            return
+        if len(counts) != len(self.counts):
+            raise ValueError(
+                f"bucket layout mismatch: {len(counts)} vs {len(self.counts)} buckets"
+            )
+        mine = self.counts
+        for i, c in enumerate(counts):
+            if c:
+                mine[i] += c
+        self.sum += float(sum_)
+
+    def quantile(self, q: float) -> float:
+        return quantile_from_counts(self.counts, q, self.bounds)
+
+    def cumulative(self) -> List[Tuple[float, int]]:
+        """``(le_bound, cumulative_count)`` rows for the finite bounds, the
+        exact shape Prometheus ``_bucket`` rendering wants (the ``+Inf`` row
+        is the total count)."""
+        out: List[Tuple[float, int]] = []
+        cum = 0
+        for bound, c in zip(self.bounds, self.counts):
+            cum += c
+            out.append((bound, cum))
+        return out
+
+    def snapshot_counts(self) -> Tuple[int, ...]:
+        return tuple(self.counts)
+
+    def reset(self) -> None:
+        for i in range(len(self.counts)):
+            self.counts[i] = 0
+        self.sum = 0.0
+
+    def __eq__(self, other: object) -> bool:
+        return (
+            isinstance(other, Histogram)
+            and self.bounds == other.bounds
+            and self.counts == other.counts
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover — debugging aid
+        return f"Histogram(count={self.count}, sum={self.sum:.3f})"

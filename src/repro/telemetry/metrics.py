@@ -3,8 +3,10 @@ step-time tracking for the straggler monitor, and the shared metric registry.
 
 The registry started as a policy-engine internal (the trigger engine samples
 it by dotted name); it is now the process-wide observability surface: stage /
-channel / serve statistics publish into it as **gauges**, **counters** and
-**windowed summaries** (p50/p95/p99 over a bounded sample window), and the
+channel / serve statistics publish into it as **gauges**, **counters**,
+**windowed summaries** (p50/p95/p99 over a bounded sample window) and
+**mergeable histograms** (:mod:`repro.telemetry.histogram` — cumulative
+fixed-bucket counts, the fleet metric plane's exchange format), and the
 :mod:`repro.telemetry.exporter` renders one coherent ``collect()`` of it in
 Prometheus text exposition for scraping from outside the process.
 
@@ -23,7 +25,9 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Mapping, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .histogram import Histogram, quantile_from_counts
 
 #: quantiles summaries report, as (label, fraction)
 SUMMARY_QUANTILES: Tuple[Tuple[str, float], ...] = (("0.5", 0.5), ("0.95", 0.95), ("0.99", 0.99))
@@ -73,13 +77,16 @@ class MetricSample:
     exposition format without reaching back into the registry."""
 
     name: str  #: dotted registry name
-    kind: str  #: "gauge" | "counter" | "summary"
+    kind: str  #: "gauge" | "counter" | "summary" | "histogram"
     value: float = 0.0  #: gauge/counter value; summaries use the fields below
     family: Optional[str] = None  #: export family name (None → derived)
     labels: Dict[str, str] = field(default_factory=dict)
     quantiles: Dict[str, float] = field(default_factory=dict)  #: summaries only
-    count: int = 0  #: summaries: total observations ever
-    sum: float = 0.0  #: summaries: total of all observations ever
+    count: int = 0  #: summaries/histograms: total observations ever
+    sum: float = 0.0  #: summaries/histograms: total of all observations ever
+    #: histograms only: ``(le_bound, cumulative_count)`` rows for the finite
+    #: bounds (the ``+Inf`` row is ``count``)
+    buckets: List[Tuple[float, int]] = field(default_factory=list)
 
 
 class _Summary:
@@ -106,18 +113,22 @@ class _Summary:
 class MetricRegistry:
     """Named metrics the control plane samples and the exporter renders.
 
-    Four metric shapes:
+    Five metric shapes:
 
     * **source** — a zero-arg callable returning the current value (pull);
     * **gauge** — a pushed point-in-time value (``set_gauge``);
     * **counter** — a pushed monotonically-increasing total (``inc``);
     * **summary** — pushed observations with windowed p50/p95/p99
-      (``observe``).
+      (``observe``);
+    * **histogram** — cumulative fixed-bucket counts merged in per collect
+      tick (``hist_add``), rendered as native Prometheus
+      ``_bucket``/``_sum``/``_count`` families and mergeable across
+      processes (the fleet metric plane).
 
     ``sample()`` flattens everything into ``{dotted name: float}`` for the
-    trigger engine (summaries contribute ``<name>.p50/.p95/.p99/.mean/
-    .count``); ``collect()`` returns structured :class:`MetricSample` rows
-    for the exporter.
+    trigger engine (summaries and histograms contribute ``<name>.p50/.p95/
+    .p99/.mean/.count``); ``collect()`` returns structured
+    :class:`MetricSample` rows for the exporter.
     """
 
     def __init__(self, summary_window: int = 1024) -> None:
@@ -125,6 +136,7 @@ class MetricRegistry:
         self._gauges: Dict[str, float] = {}
         self._counters: Dict[str, float] = {}
         self._summaries: Dict[str, _Summary] = {}
+        self._hists: Dict[str, Histogram] = {}
         #: export metadata: name → (family, labels)
         self._descriptors: Dict[str, Tuple[str, Dict[str, str]]] = {}
         self._summary_window = int(summary_window)
@@ -141,6 +153,7 @@ class MetricRegistry:
             self._gauges.pop(name, None)
             self._counters.pop(name, None)
             self._summaries.pop(name, None)
+            self._hists.pop(name, None)
             self._descriptors.pop(name, None)
 
     def describe(self, name: str, family: str, labels: Optional[Mapping[str, str]] = None) -> None:
@@ -174,11 +187,26 @@ class MetricRegistry:
                 s = self._summaries[name] = _Summary(self._summary_window)
             s.observe(float(value))
 
+    def hist_add(self, name: str, counts: Sequence[int], sum_delta: float = 0.0) -> None:
+        """Merge a windowed bucket-count delta into cumulative histogram
+        ``name`` (created on first use — an all-zero delta pre-registers the
+        family at zero). Counts follow the shared WAIT_BOUNDS_MS layout;
+        ``sum_delta`` is the window's total in the same unit (ms)."""
+        with self._lock:
+            h = self._hists.get(name)
+            if h is None:
+                h = self._hists[name] = Histogram()
+            h.add_counts(counts, sum_delta)
+
     # -- reads -------------------------------------------------------------
     def names(self) -> List[str]:
         with self._lock:
             return sorted(
-                set(self._sources) | set(self._gauges) | set(self._counters) | set(self._summaries)
+                set(self._sources)
+                | set(self._gauges)
+                | set(self._counters)
+                | set(self._summaries)
+                | set(self._hists)
             )
 
     def gauge_count(self, prefix: str = "", suffix: str = "") -> int:
@@ -203,12 +231,19 @@ class MetricRegistry:
             # hot path observes into these summaries and must not block
             # behind O(n log n) sorts per tick/scrape
             summaries = [(n, list(s.buf), s.count, s.sum) for n, s in self._summaries.items()]
+            hists = [(n, tuple(h.counts), h.sum) for n, h in self._hists.items()]
         for name, values, count, total in summaries:
             values.sort()
             for suffix, q in _SUMMARY_KEYS:
                 out[f"{name}.{suffix}"] = quantile(values, q)
             out[f"{name}.mean"] = (total / count) if count else 0.0
             out[f"{name}.count"] = float(count)
+        for name, counts, total in hists:
+            n_obs = sum(counts)
+            for suffix, q in _SUMMARY_KEYS:
+                out[f"{name}.{suffix}"] = quantile_from_counts(counts, q)
+            out[f"{name}.mean"] = (total / n_obs) if n_obs else 0.0
+            out[f"{name}.count"] = float(n_obs)
         for name, fn in sources:
             try:
                 out[name] = float(fn())
@@ -223,6 +258,8 @@ class MetricRegistry:
             gauges = list(self._gauges.items())
             counters = list(self._counters.items())
             summaries = [(n, list(s.buf), s.count, s.sum) for n, s in self._summaries.items()]
+            # O(buckets) per histogram — cheap enough to flatten under the lock
+            hists = [(n, h.cumulative(), h.count, h.sum) for n, h in self._hists.items()]
             sources = list(self._sources.items())
         for _, values, _, _ in summaries:
             values.sort()  # outside the lock — see sample()
@@ -249,6 +286,19 @@ class MetricRegistry:
                     quantiles={ql: quantile(values, q) for ql, q in SUMMARY_QUANTILES},
                     count=count,
                     sum=total,
+                )
+            )
+        for name, bucket_rows, count, total in hists:
+            fam, labels = meta(name)
+            out.append(
+                MetricSample(
+                    name,
+                    "histogram",
+                    family=fam,
+                    labels=labels,
+                    count=count,
+                    sum=total,
+                    buckets=bucket_rows,
                 )
             )
         for name, fn in sources:

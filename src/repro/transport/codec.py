@@ -12,7 +12,8 @@ self-describing binary encoding. Three layers, all little-endian:
   ``struct``-packed fields;
 * a **stats codec** (:func:`encode_stats` / :func:`decode_stats`): each
   :class:`~repro.core.stats.StatsSnapshot` is one fixed 96-byte ``struct``
-  pack plus its channel name — the collect hot path never touches a dict.
+  pack plus its channel name plus a sparse run of nonzero wait-histogram
+  buckets — the collect hot path never touches a dict.
 
 Decode failures raise :class:`TransportError` (a :class:`ConnectionError`
 subclass) so the control plane's liveness machinery treats a corrupted
@@ -25,6 +26,7 @@ from typing import Any, Dict, Tuple
 
 from repro.core.rules import DifferentiationRule, EnforcementRule, HousekeepingRule
 from repro.core.stats import StageStats, StatsSnapshot
+from repro.telemetry.histogram import NBUCKETS
 
 
 class TransportError(ConnectionError):
@@ -273,6 +275,14 @@ def decode_rule(payload: bytes):
 #: cumulative_bytes, inflight, wait_seconds, wait_p50_ms, wait_p95_ms,
 #: wait_p99_ms
 _SNAP = struct.Struct("<qqdddqqqdddd")
+#: one sparse wait-histogram entry: bucket index (u8), op count (i64). The
+#: fixed struct is followed by a u8 count of these pairs — a typical window
+#: touches a handful of buckets, so sparse beats shipping all 26 counts
+_HIST_PAIR = struct.Struct("<Bq")
+#: u8 sentinel for "no histogram at all" (old-wire / merged snapshots) —
+#: distinct from zero pairs, which means "histogram present, all buckets 0"
+#: (an idle window still owns its histogram)
+_HIST_ABSENT = 0xFF
 
 
 def encode_stats(stats: StageStats) -> bytes:
@@ -295,6 +305,13 @@ def encode_stats(stats: StageStats) -> bytes:
             s.wait_p95_ms,
             s.wait_p99_ms,
         )
+        if s.wait_hist:
+            nonzero = [(i, c) for i, c in enumerate(s.wait_hist) if c]
+            buf.append(len(nonzero))
+            for i, c in nonzero:
+                buf += _HIST_PAIR.pack(i, c)
+        else:
+            buf.append(_HIST_ABSENT)
     return bytes(buf)
 
 
@@ -319,6 +336,18 @@ def decode_stats(payload: bytes) -> StageStats:
             wait_p95_ms,
             wait_p99_ms,
         ) = _SNAP.unpack(r.take(_SNAP.size))
+        npairs = r.u8()
+        wait_hist: Tuple[int, ...] = ()
+        if npairs != _HIST_ABSENT:
+            if npairs > NBUCKETS:
+                raise TransportError(f"histogram pair count {npairs} exceeds {NBUCKETS} buckets")
+            counts = [0] * NBUCKETS
+            for _ in range(npairs):
+                idx, c = _HIST_PAIR.unpack(r.take(_HIST_PAIR.size))
+                if idx >= NBUCKETS:
+                    raise TransportError(f"histogram bucket index {idx} out of range")
+                counts[idx] = c
+            wait_hist = tuple(counts)
         per_channel[key] = StatsSnapshot(
             channel=channel,
             ops=ops,
@@ -333,6 +362,7 @@ def decode_stats(payload: bytes) -> StageStats:
             wait_p50_ms=wait_p50_ms,
             wait_p95_ms=wait_p95_ms,
             wait_p99_ms=wait_p99_ms,
+            wait_hist=wait_hist,
         )
     if r.off != len(payload):
         raise TransportError(f"{len(payload) - r.off} trailing bytes after stats")

@@ -120,10 +120,33 @@ class TestGlobalScope:
         with pytest.raises(PolicyError, match="at least one registered stage"):
             compile_policy(load_policy(GLOBAL_TEXT), {})
 
-    def test_trigger_metric_on_global_flow_rejected(self):
+    def test_trigger_metric_on_global_flow_resolves_to_fleet_view(self):
+        # PR-4 rejected builtin metrics on global flows as "ambiguous across
+        # member stages"; the fleet metric plane lifts that — they resolve to
+        # the control plane's folded @fleet.* views (Σ members per tick)
         text = GLOBAL_TEXT + "when throughput@A > 100: demote A\n"
-        with pytest.raises(PolicyError, match="ambiguous across its member stages"):
-            compile_policy(load_policy(text), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+        cp = compile_policy(load_policy(text), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+        (trig,) = cp.triggers
+        assert trig.metric_key == "@fleet.A.throughput"
+        assert sorted(trig.fire_rules) == ["s1", "s2"]
+
+    def test_p99_on_global_flow_resolves_to_merged_histogram_gauge(self):
+        # percentile aggs over wait resolve to the merged-histogram windowed
+        # percentile gauge (exact over the union of member observations),
+        # watched with agg=max over the trigger window
+        text = GLOBAL_TEXT + "when p99_latency_ms@A > 20: demote A\n"
+        cp = compile_policy(load_policy(text), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+        (trig,) = cp.triggers
+        assert trig.metric_key == "@fleet.A.wait_p99_ms"
+        assert trig.agg == "max"
+
+    def test_fleet_qualifier_and_whole_fleet_total(self):
+        # @fleet.<flow> names the flow's fleet view explicitly; bare @fleet
+        # aggregates over every channel of the fleet view
+        text = GLOBAL_TEXT + "when bandwidth@fleet.A > 100: demote A\nwhen iops@fleet > 500: demote B\n"
+        cp = compile_policy(load_policy(text), {"s1": {"channels": {}}, "s2": {"channels": {}}})
+        keys = {t.metric_key for t in cp.triggers}
+        assert keys == {"@fleet.A.throughput", "@fleet.iops"}
 
     def test_trigger_action_on_global_flow_lands_on_all_members(self):
         # dotted (registry) metric avoids the builtin-metric ambiguity; the
@@ -238,6 +261,186 @@ class TestGlobalFairShare:
 
 
 # --------------------------------------------------------------------------- #
+# fleet metric plane: @fleet.* views, paio_fleet_* families, cluster triggers  #
+# --------------------------------------------------------------------------- #
+FLEET_TRIGGER_TEXT = GLOBAL_TEXT + (
+    "when p99_latency_ms@A > 20 window 1s cooldown 0s release 10: demote A\n"
+)
+
+
+class TestFleetMetricPlane:
+    def _fleet(self, source, n=2):
+        clk = VirtualClock()
+        stages = [Stage(f"s{i+1}", clock=clk) for i in range(n)]
+        cp = ControlPlane(clock=clk)
+        for st in stages:
+            cp.register_stage(st)
+        cp.install_policy(source)
+        return clk, stages, cp
+
+    def test_collect_publishes_fleet_views_and_families(self):
+        from repro.telemetry import render_prometheus
+
+        clk, (s1, s2), cp = self._fleet(GLOBAL_POLICY)
+        for _ in range(50):
+            s1.channel("tenant_a").stats.record(int(MiB), wait=0.001)
+            s2.channel("tenant_a").stats.record(int(MiB), wait=0.1)  # hot member
+        clk.sleep(1.0)
+        cp.run_once()
+        sample = get_registry().sample()
+        # Σ members per tick
+        assert sample["@fleet.tenant_a.throughput"] == pytest.approx(
+            sample["s1.tenant_a.throughput"] + sample["s2.tenant_a.throughput"]
+        )
+        assert sample["@fleet.tenant_a.ops"] == 100.0
+        # fleet p99 comes from the merged histograms: the hot member's tail
+        # dominates even though s1 alone looks healthy
+        assert sample["s1.tenant_a.wait_p99_ms"] <= 1.0
+        assert sample["@fleet.tenant_a.wait_p99_ms"] > 50.0
+        # whole-fleet aggregate row sums the per-flow views
+        assert sample["@fleet.throughput"] == pytest.approx(
+            sample["@fleet.tenant_a.throughput"] + sample["@fleet.tenant_b.throughput"]
+        )
+        text = render_prometheus(get_registry())
+        assert 'paio_fleet_throughput{flow="tenant_a"}' in text
+        assert 'paio_fleet_throughput{flow="_total"}' in text
+        assert 'paio_fleet_wait_p99_ms{flow="tenant_a"}' in text
+        # the merged fleet histogram renders as a native histogram family
+        assert 'paio_fleet_wait_hist_ms_bucket{flow="tenant_a",le="+Inf"} 100' in text
+        assert 'paio_fleet_wait_hist_ms_count{flow="tenant_a"} 100' in text
+        # member channels keep their ordinary per-channel family
+        assert 'paio_channel_wait_hist_ms_bucket{channel="tenant_a",stage="s1",le="+Inf"} 50' in text
+        cp.close()
+
+    def test_fleet_histogram_accumulates_across_ticks(self):
+        clk, (s1, _), cp = self._fleet(GLOBAL_POLICY)
+        for tick in (1, 2):
+            for _ in range(10):
+                s1.channel("tenant_b").stats.record(int(MiB), wait=0.005)
+            clk.sleep(1.0)
+            cp.run_once()
+            from repro.telemetry import render_prometheus
+
+            text = render_prometheus(get_registry())
+            assert f'paio_fleet_wait_hist_ms_count{{flow="tenant_b"}} {tick * 10}' in text
+        cp.close()
+
+    def test_preregistration_exports_families_at_zero_before_first_tick(self):
+        from repro.telemetry import parse_labels, parse_prometheus, render_prometheus
+
+        _, _, cp = self._fleet(FLEET_TRIGGER_TEXT)
+        # NO collect tick has run — every family the policy can move must
+        # already be on the endpoint at zero (dashboards/CI see the full
+        # shape before the first firing, the paio_rpc_retries_total rule)
+        vals = parse_prometheus(render_prometheus(get_registry()))
+        by_family = {}
+        for series, v in vals.items():
+            fam, labels = parse_labels(series)
+            by_family.setdefault(fam, []).append((labels, v))
+        ((labels, fired),) = by_family["paio_trigger_fired"]
+        assert labels["policy"] == "fleet" and fired == 0.0
+        flows = {l["flow"]: v for l, v in by_family["paio_fleet_throughput"]}
+        assert flows == {"A": 0.0, "B": 0.0, "_total": 0.0}
+        p99s = {l["flow"]: v for l, v in by_family["paio_fleet_wait_p99_ms"]}
+        assert p99s["A"] == 0.0 and p99s["B"] == 0.0
+        assert vals['paio_fleet_wait_hist_ms_count{flow="A"}'] == 0.0
+        assert vals['paio_fleet_wait_hist_ms_bucket{flow="A",le="+Inf"}'] == 0.0
+        cp.close()
+
+    def test_fleet_p99_trigger_fires_and_releases_on_merged_tail(self):
+        clk, (s1, s2), cp = self._fleet(FLEET_TRIGGER_TEXT)
+        compiled = cp.policy_runtime.get("fleet")
+        (trig,) = compiled.triggers
+        assert trig.metric_key == "@fleet.A.wait_p99_ms"
+
+        # healthy tick: every member fast → armed
+        for st in (s1, s2):
+            for _ in range(50):
+                st.channel("A").stats.record(int(MiB), wait=0.001)
+        clk.sleep(1.0)
+        cp.run_once()
+        assert cp.policy_runtime.trigger_engine.states()[trig.qualified_name] == "armed"
+
+        # one member develops a tail; the OTHER member stays fast — only the
+        # fleet-merged histogram sees an SLO breach
+        for _ in range(50):
+            s1.channel("A").stats.record(int(MiB), wait=0.001)
+            s2.channel("A").stats.record(int(MiB), wait=0.1)
+        clk.sleep(1.0)
+        cp.run_once()
+        assert cp.policy_runtime.trigger_engine.states()[trig.qualified_name] == "fired"
+        sample = get_registry().sample()
+        assert sample[f"trigger.{trig.qualified_name}.fired"] == 1.0
+        # the demote landed on EVERY member stage
+        oid = trig.fire_rules["s1"][0].object_id
+        for st in (s1, s2):
+            assert st.channel("A").get_object(oid).rate == pytest.approx(6 * MiB)
+
+        # tail clears; the 100 ms sample ages out of the 1 s window → release
+        clk.sleep(1.0)
+        for st in (s1, s2):
+            for _ in range(50):
+                st.channel("A").stats.record(int(MiB), wait=0.001)
+        clk.sleep(1.0)
+        cp.run_once()
+        assert cp.policy_runtime.trigger_engine.states()[trig.qualified_name] == "armed"
+        assert get_registry().sample()[f"trigger.{trig.qualified_name}.fired"] == 0.0
+        cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# heartbeat verdict transitions (satellite: HeartbeatMonitor coverage)         #
+# --------------------------------------------------------------------------- #
+class TestHeartbeatVerdicts:
+    def test_ok_straggler_dead_recovery_cycle(self):
+        clk = VirtualClock()
+        cp = ControlPlane(clock=clk, probe_interval=1e9)
+        for name in ("s1", "s2", "s3"):
+            cp.register_stage(Stage(name, clock=clk))
+        hb = cp.heartbeats
+        try:
+            # before any beat there is no verdict at all
+            assert all(s["heartbeat"] is None for s in cp.fleet_status().values())
+            for name in ("s1", "s2", "s3"):
+                hb.beat(name, 1.0)
+            assert {n: s["heartbeat"] for n, s in cp.fleet_status().items()} == {
+                "s1": "ok", "s2": "ok", "s3": "ok",
+            }
+
+            # s3's EWMA step time climbs past straggler_factor × fleet median
+            for _ in range(10):
+                clk.sleep(0.5)
+                hb.beat("s1", 1.0)
+                hb.beat("s2", 1.0)
+                hb.beat("s3", 3.0)
+            status = cp.fleet_status()
+            assert status["s3"]["heartbeat"] == "straggler"
+            assert status["s1"]["heartbeat"] == "ok"
+            assert status["s2"]["heartbeat"] == "ok"
+
+            # s3 stops beating: past dead_after it is DEAD, not a straggler,
+            # and its stale step time no longer pollutes the fleet median
+            clk.sleep(hb.dead_after + 1.0)
+            hb.beat("s1", 1.0)
+            hb.beat("s2", 1.0)
+            status = cp.fleet_status()
+            assert status["s3"]["heartbeat"] == "dead"
+            assert status["s1"]["heartbeat"] == "ok"
+
+            # recovery: s3 beats again (alive immediately) and fast steps
+            # decay the EWMA back under the straggler bar
+            hb.beat("s3", 1.0)
+            assert cp.fleet_status()["s3"]["heartbeat"] in ("ok", "straggler")
+            for _ in range(20):
+                clk.sleep(0.5)
+                for name in ("s1", "s2", "s3"):
+                    hb.beat(name, 1.0)
+            assert {s["heartbeat"] for s in cp.fleet_status().values()} == {"ok"}
+        finally:
+            cp.close()
+
+
+# --------------------------------------------------------------------------- #
 # concurrent fan-out semantics                                                 #
 # --------------------------------------------------------------------------- #
 class _SlowHandle:
@@ -343,6 +546,25 @@ def _serve_stage_forever(name: str, socket_path: str) -> None:  # child process
     stage = Stage(name)
     StageServer(stage, socket_path).start()
     time.sleep(120)
+
+
+def _serve_fleet_member(name: str, socket_path: str, hot: bool) -> None:
+    """Child process for the fleet-SLO acceptance test: serves a stage over
+    UDS and generates per-op traffic on channel "A" once the control plane's
+    policy install creates it. All members start fast (1 ms waits); a ``hot``
+    member develops a 100 ms tail 1 s after its channel appears — the
+    injected hotspot only the fleet-merged histogram can attribute."""
+    stage = Stage(name)
+    StageServer(stage, socket_path).start()
+    born = None
+    while True:
+        ch = stage.channel("A")
+        if ch is not None:
+            if born is None:
+                born = time.monotonic()
+            wait = 0.1 if (hot and time.monotonic() - born > 1.0) else 0.001
+            ch.stats.record(1 << 20, wait=wait)
+        time.sleep(0.005)
 
 
 class TestStageDeathAndRecovery:
@@ -457,6 +679,95 @@ class TestStageDeathAndRecovery:
                     srv2b.stop()
             finally:
                 cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: @fleet.p99 trigger fires in a 3-process fleet, observed via the  #
+# Prometheus scrape endpoint                                                   #
+# --------------------------------------------------------------------------- #
+class TestFleetSLOEndToEnd:
+    def _scrape(self, url):
+        import urllib.request
+
+        return urllib.request.urlopen(url, timeout=5.0).read().decode()
+
+    def test_fleet_p99_trigger_fires_across_three_processes(self):
+        from repro.telemetry import parse_labels, parse_prometheus
+
+        mp = multiprocessing.get_context("fork")
+        with tempfile.TemporaryDirectory() as d:
+            children = []
+            try:
+                for i, hot in enumerate((False, False, True)):
+                    name, path = f"s{i+1}", f"{d}/s{i+1}.sock"
+                    child = mp.Process(
+                        target=_serve_fleet_member, args=(name, path, hot), daemon=True
+                    )
+                    child.start()
+                    children.append(child)
+                t0 = time.monotonic()
+                for i in range(3):
+                    while not os.path.exists(f"{d}/s{i+1}.sock"):
+                        assert time.monotonic() - t0 < 10.0
+                        time.sleep(0.01)
+                cp = ControlPlane(probe_interval=1e9)
+                try:
+                    for i in range(3):
+                        cp.connect(f"s{i+1}", f"{d}/s{i+1}.sock")
+                    cp.install_policy(FLEET_TRIGGER_TEXT)
+                    exp = cp.serve_metrics()
+                    compiled = cp.policy_runtime.get("fleet")
+                    (trig,) = compiled.triggers
+
+                    # phase 1: every member fast — the trigger stays armed and
+                    # the scrape already exposes the (pre-registered) families
+                    time.sleep(0.2)
+                    cp.run_once()
+                    states = cp.policy_runtime.trigger_engine.states()
+                    assert states[trig.qualified_name] == "armed"
+                    body = self._scrape(exp.url)
+                    vals = parse_prometheus(body)
+                    fired = [v for k, v in vals.items() if k.startswith("paio_trigger_fired")]
+                    assert fired == [0.0]
+
+                    # phase 2: s3 develops its 100 ms tail ~1 s in; poll the
+                    # loop until the fleet-merged p99 breaches the 20 ms SLO
+                    deadline = time.monotonic() + 15.0
+                    while time.monotonic() < deadline:
+                        time.sleep(0.2)
+                        cp.run_once()
+                        if cp.policy_runtime.trigger_engine.states()[trig.qualified_name] == "fired":
+                            break
+                    else:
+                        pytest.fail("@fleet.p99 trigger never fired under the injected hotspot")
+
+                    body = self._scrape(exp.url)
+                    vals = parse_prometheus(body)
+                    fired = [v for k, v in vals.items() if k.startswith("paio_trigger_fired")]
+                    assert fired == [1.0]  # scraped fired ⇒ demote rules landed
+                    # the fleet view that drove the decision is on the endpoint
+                    assert vals['paio_fleet_wait_p99_ms{flow="A"}'] > 20.0
+                    # ... and the merged histogram renders as a valid native
+                    # family: cumulative _bucket rows non-decreasing in le,
+                    # +Inf row == _count
+                    rows = []
+                    for series, v in vals.items():
+                        fam, labels = parse_labels(series)
+                        if fam == "paio_fleet_wait_hist_ms_bucket" and labels["flow"] == "A":
+                            le = labels["le"]
+                            rows.append((float("inf") if le == "+Inf" else float(le), v))
+                    rows.sort()
+                    assert len(rows) >= 2
+                    counts = [v for _, v in rows]
+                    assert counts == sorted(counts)
+                    assert rows[-1][0] == float("inf")
+                    assert rows[-1][1] == vals['paio_fleet_wait_hist_ms_count{flow="A"}'] > 0
+                finally:
+                    cp.close()
+            finally:
+                for child in children:
+                    if child.is_alive():
+                        child.kill()
 
 
 # --------------------------------------------------------------------------- #

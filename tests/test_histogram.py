@@ -1,0 +1,233 @@
+"""repro.telemetry.histogram: fixed-bucket mergeable histograms — bucket
+semantics, quantiles, and the load-bearing property of the fleet metric
+plane: merge is exact and associative (merge-of-shards == one histogram over
+the union of observations), plus the snapshot-level merges built on it.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - exercised on minimal containers
+    from _hypothesis_stub import given, settings, st
+
+from repro.core.stats import (
+    ChannelStats,
+    StageStats,
+    StatsSnapshot,
+    fleet_view,
+    merge_parallel,
+    merge_snapshots,
+)
+from repro.core.clock import VirtualClock
+from repro.telemetry.histogram import (
+    NBUCKETS,
+    WAIT_BOUNDS_MS,
+    Histogram,
+    bucket_index,
+    merge_counts,
+    quantile_from_counts,
+)
+
+
+# --------------------------------------------------------------------------- #
+# bucket layout                                                                #
+# --------------------------------------------------------------------------- #
+class TestBuckets:
+    def test_layout(self):
+        assert len(WAIT_BOUNDS_MS) + 1 == NBUCKETS
+        assert WAIT_BOUNDS_MS == tuple(sorted(WAIT_BOUNDS_MS))
+        assert WAIT_BOUNDS_MS[0] == 0.001  # 1 µs
+        assert WAIT_BOUNDS_MS[-1] == 1e5  # 100 s
+
+    def test_le_semantics(self):
+        # a value exactly on a bound counts in that bound's bucket
+        assert bucket_index(0.001) == 0
+        assert bucket_index(1.0) == WAIT_BOUNDS_MS.index(1.0)
+        assert bucket_index(1.0000001) == WAIT_BOUNDS_MS.index(1.0) + 1
+
+    def test_overflow_lands_in_inf_bucket(self):
+        assert bucket_index(1e9) == NBUCKETS - 1
+        assert bucket_index(0.0) == 0
+
+
+# --------------------------------------------------------------------------- #
+# quantiles                                                                    #
+# --------------------------------------------------------------------------- #
+class TestQuantiles:
+    def test_empty_is_zero(self):
+        assert quantile_from_counts((0,) * NBUCKETS, 0.99) == 0.0
+        assert quantile_from_counts((), 0.5) == 0.0
+
+    def test_single_bucket_interpolates_within_bounds(self):
+        counts = [0] * NBUCKETS
+        idx = bucket_index(3.0)  # (2, 5] bucket
+        counts[idx] = 100
+        for q in (0.0, 0.5, 0.99):
+            v = quantile_from_counts(counts, q)
+            assert 2.0 < v <= 5.0
+
+    def test_monotone_in_q(self):
+        h = Histogram()
+        h.observe_many([0.1 * i for i in range(1, 500)])
+        qs = [h.quantile(q) for q in (0.1, 0.5, 0.9, 0.95, 0.99)]
+        assert qs == sorted(qs)
+
+    def test_inf_bucket_reports_last_finite_bound(self):
+        counts = [0] * NBUCKETS
+        counts[-1] = 10  # everything above 100 s
+        assert quantile_from_counts(counts, 0.99) == WAIT_BOUNDS_MS[-1]
+
+
+# --------------------------------------------------------------------------- #
+# the merge property (acceptance criterion)                                    #
+# --------------------------------------------------------------------------- #
+_values = st.lists(
+    st.floats(min_value=0.0, max_value=1e7, allow_nan=False), max_size=200
+)
+
+
+class TestMergeExact:
+    @given(_values, _values)
+    @settings(max_examples=200, deadline=None)
+    def test_merge_of_shards_equals_union(self, shard_a, shard_b):
+        # two shards observed separately, merged == one histogram over the
+        # union of observations — bucket for bucket, exact integer counts
+        ha, hb, union = Histogram(), Histogram(), Histogram()
+        ha.observe_many(shard_a)
+        hb.observe_many(shard_b)
+        union.observe_many(shard_a + shard_b)
+        assert ha.merge(hb).counts == union.counts
+        assert ha.count == union.count
+        assert ha.sum == pytest.approx(union.sum)
+
+    @given(_values, _values, _values)
+    @settings(max_examples=100, deadline=None)
+    def test_merge_is_associative_and_commutative(self, a, b, c):
+        def hist(vals):
+            h = Histogram()
+            h.observe_many(vals)
+            return tuple(h.counts)
+
+        left = merge_counts(merge_counts(hist(a), hist(b)), hist(c))
+        right = merge_counts(hist(a), merge_counts(hist(b), hist(c)))
+        swapped = merge_counts(hist(b), merge_counts(hist(c), hist(a)))
+        assert left == right == swapped
+
+    def test_merge_property_seeded(self):
+        # deterministic twin of the hypothesis properties above, so the
+        # acceptance property is exercised even where hypothesis is absent
+        import random
+
+        rng = random.Random(0xF1EE7)
+        for _ in range(50):
+            shards = [
+                [rng.lognormvariate(rng.uniform(-2, 4), 1.5) for _ in range(rng.randrange(0, 120))]
+                for _ in range(rng.randrange(1, 5))
+            ]
+            union = Histogram()
+            union.observe_many([w for s in shards for w in s])
+            # left fold and right fold agree with the union histogram
+            left = ()
+            for s in shards:
+                h = Histogram()
+                h.observe_many(s)
+                left = merge_counts(left, h.counts)
+            right = ()
+            for s in reversed(shards):
+                h = Histogram()
+                h.observe_many(s)
+                right = merge_counts(h.counts, right)
+            assert tuple(left) == tuple(right) == tuple(union.counts)
+
+    def test_empty_merges_as_identity(self):
+        counts = tuple(range(NBUCKETS))
+        assert merge_counts((), counts) == counts
+        assert merge_counts(counts, ()) == counts
+        assert merge_counts((), ()) == ()
+
+    def test_layout_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="bucket layout"):
+            merge_counts((1, 2), (1, 2, 3))
+        with pytest.raises(ValueError, match="bucket layouts"):
+            Histogram().merge(Histogram(bounds=(1.0, 2.0)))
+
+    def test_weighted_add_equals_repeated_observe(self):
+        a, b = Histogram(), Histogram()
+        a.add(3.7, 50)
+        for _ in range(50):
+            b.observe(3.7)
+        assert a.counts == b.counts
+        assert a.sum == pytest.approx(b.sum)
+
+
+# --------------------------------------------------------------------------- #
+# snapshot merges built on the histogram                                       #
+# --------------------------------------------------------------------------- #
+def _snap_with(waits_ms, channel="c", window=1.0):
+    clk = VirtualClock()
+    cs = ChannelStats(channel, clk)
+    for w in waits_ms:
+        cs.record(100, wait=w / 1e3)
+    clk.sleep(window)
+    return cs.collect()
+
+
+class TestSnapshotMerge:
+    def test_sequential_merge_is_exact(self):
+        # consecutive windows merge to the same percentiles one combined
+        # window would have reported — no "later snapshot wins" approximation
+        a = _snap_with([1.0] * 90)
+        b = _snap_with([400.0] * 10)
+        combined = _snap_with([1.0] * 90 + [400.0] * 10)
+        m = merge_snapshots(a, b)
+        assert m.wait_hist == combined.wait_hist
+        assert m.wait_p99_ms == combined.wait_p99_ms
+        assert m.wait_p99_ms > 100.0  # the tail is visible post-merge
+
+    def test_histless_merge_falls_back_to_later(self):
+        # old-wire peers ship no histogram; keep PR-3's semantics for them
+        a = StatsSnapshot("c", 1, 1, 1.0, 1.0, 1.0, wait_p99_ms=9.0)
+        b = StatsSnapshot("c", 1, 1, 1.0, 1.0, 1.0, wait_p99_ms=4.0)
+        assert merge_snapshots(a, b).wait_p99_ms == 4.0
+
+    def test_parallel_merge_sums_rates_and_merges_tails(self):
+        fast = _snap_with([1.0] * 99)
+        slow = _snap_with([500.0] * 99)
+        m = merge_parallel([fast, slow], "c")
+        assert m.ops == 198
+        assert m.throughput == pytest.approx(fast.throughput + slow.throughput)
+        # merged p50 sits between the two shards' medians; merged p99 sees
+        # the slow shard's tail
+        assert fast.wait_p50_ms < m.wait_p50_ms < slow.wait_p50_ms
+        assert m.wait_p99_ms >= slow.wait_p50_ms
+        # windows overlap in time: spans the longest, never the sum
+        assert m.window_seconds == pytest.approx(1.0)
+
+    def test_fleet_view_folds_same_named_channels(self):
+        s1 = StageStats(per_channel={"hot": _snap_with([1.0] * 10, "hot"),
+                                     "batch": _snap_with([2.0] * 10, "batch")})
+        s2 = StageStats(per_channel={"hot": _snap_with([300.0] * 10, "hot")})
+        fv = fleet_view({"s1": s1, "s2": s2})
+        assert set(fv.per_channel) == {"hot", "batch"}
+        hot = fv.per_channel["hot"]
+        assert hot.ops == 20
+        assert hot.wait_p99_ms > 100.0  # s2's hotspot dominates the fleet tail
+        assert fv.per_channel["batch"].ops == 10
+
+    def test_fleet_view_percentiles_equal_union_histogram(self):
+        # the acceptance property at the fleet level: folding shards == one
+        # histogram over every member's observations
+        shard_waits = [[1.0, 5.0, 9.0] * 30, [50.0] * 20, [0.5] * 40]
+        stats = {
+            f"s{i}": StageStats(per_channel={"ch": _snap_with(w, "ch")})
+            for i, w in enumerate(shard_waits)
+        }
+        union = _snap_with([w for shard in shard_waits for w in shard], "ch")
+        folded = fleet_view(stats).per_channel["ch"]
+        assert folded.wait_hist == union.wait_hist
+        assert folded.wait_p50_ms == union.wait_p50_ms
+        assert folded.wait_p95_ms == union.wait_p95_ms
+        assert folded.wait_p99_ms == union.wait_p99_ms

@@ -148,12 +148,17 @@ class TestWaitPercentiles:
             cs.record(1, wait=i / 1000.0)  # 0..99 ms
         clk.sleep(1.0)
         snap = cs.collect()
+        # histogram-derived: exact counts, bucket-width resolution (≤2.5x)
         assert snap.wait_p50_ms == pytest.approx(50.0)
-        assert snap.wait_p95_ms == pytest.approx(95.0)
-        assert snap.wait_p99_ms == pytest.approx(99.0)
-        # percentile window slides across collect windows (not reset)
+        assert 95.0 <= snap.wait_p95_ms <= 100.0
+        assert 99.0 <= snap.wait_p99_ms <= 100.0
+        assert sum(snap.wait_hist) == 100
+        # an idle window holds the previous window's percentiles (hold-last):
+        # a one-tick traffic gap must not read as a latency collapse
         clk.sleep(1.0)
-        assert cs.collect().wait_p99_ms == pytest.approx(99.0)
+        idle = cs.collect()
+        assert idle.ops == 0 and not any(idle.wait_hist)
+        assert idle.wait_p99_ms == snap.wait_p99_ms
 
     def test_batch_contributes_mean_observation(self):
         clk = VirtualClock()
@@ -161,6 +166,22 @@ class TestWaitPercentiles:
         cs.record_batch(10, 100, wait=0.05)  # 5 ms per op mean
         clk.sleep(1.0)
         assert cs.collect().wait_p99_ms == pytest.approx(5.0)
+
+    def test_batch_per_op_waits_match_sequential(self):
+        # the PR-3 caveat, fixed: batched and sequential enforcement of the
+        # same latency distribution produce the same histogram + percentiles
+        clk = VirtualClock()
+        seq, bat = ChannelStats("a", clk), ChannelStats("b", clk)
+        waits = [i / 1000.0 for i in range(200)]  # 0..199 ms
+        for w in waits:
+            seq.record(8, wait=w)
+        bat.record_batch(len(waits), 8 * len(waits), waits=waits)
+        clk.sleep(1.0)
+        s, b = seq.collect(), bat.collect()
+        assert s.wait_hist == b.wait_hist
+        assert s.wait_p50_ms == b.wait_p50_ms
+        assert s.wait_p99_ms == b.wait_p99_ms
+        assert s.wait_seconds == pytest.approx(b.wait_seconds)
 
     def test_snapshot_wire_round_trip_with_new_fields(self):
         from dataclasses import asdict
@@ -278,3 +299,103 @@ class TestAllowlist:
             exp = cp.serve_metrics(allow_prefixes=("paio_stage_",))
             body = urllib.request.urlopen(exp.url, timeout=5.0).read().decode()
             assert "paio_stage_up" in body and "secret" not in body
+
+
+# --------------------------------------------------------------------------- #
+# histograms: registry shape + native _bucket exposition                       #
+# --------------------------------------------------------------------------- #
+class TestHistogramExposition:
+    def _hist_registry(self):
+        from repro.telemetry import NBUCKETS, Histogram
+
+        r = MetricRegistry()
+        h = Histogram()
+        h.observe_many([0.5, 3.0, 3.0, 40.0, 7000.0])
+        r.hist_add("s.ch.wait_hist_ms", h.counts, h.sum)
+        r.describe("s.ch.wait_hist_ms", "paio_channel_wait_hist_ms",
+                   {"stage": "s", "channel": "ch"})
+        return r
+
+    def test_sample_flattens_histogram_percentiles(self):
+        r = self._hist_registry()
+        sample = r.sample()
+        assert sample["s.ch.wait_hist_ms.count"] == 5.0
+        assert sample["s.ch.wait_hist_ms.p50"] <= sample["s.ch.wait_hist_ms.p99"]
+        assert sample["s.ch.wait_hist_ms.mean"] == pytest.approx(7046.5 / 5)
+
+    def test_renders_native_bucket_family(self):
+        text = render_prometheus(self._hist_registry())
+        assert "# TYPE paio_channel_wait_hist_ms histogram" in text
+        parsed = parse_prometheus(text)
+        lbl = 'channel="ch",stage="s"'
+        assert parsed[f'paio_channel_wait_hist_ms_count{{{lbl}}}'] == 5.0
+        assert parsed[f'paio_channel_wait_hist_ms_sum{{{lbl}}}'] == pytest.approx(7046.5)
+        assert parsed[f'paio_channel_wait_hist_ms_bucket{{{lbl},le="+Inf"}}'] == 5.0
+        # cumulative and non-decreasing across ascending le bounds
+        from repro.telemetry import WAIT_BOUNDS_MS
+
+        cums = [parsed[f'paio_channel_wait_hist_ms_bucket{{{lbl},le="{b:g}"}}'] for b in WAIT_BOUNDS_MS]
+        assert cums == sorted(cums)
+        assert cums[-1] <= 5.0
+
+    def test_cumulative_across_ticks(self):
+        r = self._hist_registry()
+        from repro.telemetry import NBUCKETS
+
+        delta = [0] * NBUCKETS
+        delta[0] = 3
+        r.hist_add("s.ch.wait_hist_ms", delta, 0.003)
+        assert r.sample()["s.ch.wait_hist_ms.count"] == 8.0
+
+    def test_unregister_drops_histogram(self):
+        r = self._hist_registry()
+        r.unregister("s.ch.wait_hist_ms")
+        assert "s.ch.wait_hist_ms" not in r.names()
+        assert "wait_hist" not in render_prometheus(r)
+
+
+# --------------------------------------------------------------------------- #
+# label escaping: render must not corrupt, parse must round-trip               #
+# --------------------------------------------------------------------------- #
+class TestLabelEscaping:
+    EVIL = 'a"} 9\\n\nback\\slash'
+
+    def _registry(self):
+        r = MetricRegistry()
+        r.set_gauge("flow.evil.throughput", 7.0)
+        r.describe("flow.evil.throughput", "paio_channel_throughput",
+                   {"stage": "s", "channel": self.EVIL})
+        r.set_gauge("flow.plain.throughput", 3.0)
+        r.describe("flow.plain.throughput", "paio_channel_throughput",
+                   {"stage": "s", "channel": "plain"})
+        return r
+
+    def test_render_escapes_label_values(self):
+        text = render_prometheus(self._registry())
+        # raw newline must never appear inside a label value
+        for line in text.splitlines():
+            assert not line.endswith("\\")
+        assert '\\"} 9' in text  # the quote is escaped where it appears
+
+    def test_parse_survives_pathological_values(self):
+        # the old rpartition(" ") parser silently dropped any series whose
+        # label value contained '"} ' — both series must parse now
+        parsed = parse_prometheus(render_prometheus(self._registry()))
+        assert 3.0 in parsed.values() and 7.0 in parsed.values()
+        assert len([k for k in parsed if k.startswith("paio_channel_throughput")]) == 2
+
+    def test_parse_labels_round_trips(self):
+        from repro.telemetry import parse_labels
+
+        parsed = parse_prometheus(render_prometheus(self._registry()))
+        by_channel = {}
+        for series, value in parsed.items():
+            fam, labels = parse_labels(series)
+            assert fam == "paio_channel_throughput"
+            by_channel[labels["channel"]] = value
+        assert by_channel == {self.EVIL: 7.0, "plain": 3.0}
+
+    def test_parse_labels_no_labels(self):
+        from repro.telemetry import parse_labels
+
+        assert parse_labels("paio_up") == ("paio_up", {})

@@ -19,6 +19,8 @@ try:
 except ImportError:  # pragma: no cover - exercised on minimal containers
     from _hypothesis_stub import given, settings, st
 
+from repro.telemetry.histogram import NBUCKETS
+
 from repro.core import (
     ControlPlane,
     DifferentiationRule,
@@ -203,6 +205,13 @@ _snap = st.builds(
     wait_p50_ms=st.floats(min_value=0, allow_nan=False, allow_infinity=False),
     wait_p95_ms=st.floats(min_value=0, allow_nan=False, allow_infinity=False),
     wait_p99_ms=st.floats(min_value=0, allow_nan=False, allow_infinity=False),
+    wait_hist=st.one_of(
+        st.just(()),  # old-wire: no histogram
+        st.lists(
+            st.integers(min_value=0, max_value=1 << 40),
+            min_size=NBUCKETS, max_size=NBUCKETS,
+        ).map(tuple),
+    ),
 )
 
 
@@ -226,6 +235,20 @@ class TestStatsCodec:
     def test_property_round_trip(self, per_channel):
         stats = StageStats(per_channel=per_channel)
         assert decode_stats(encode_stats(stats)) == stats
+
+    def test_sparse_histogram_round_trip(self):
+        # histogram ships as sparse (index, count) pairs; absent (old-wire),
+        # all-zero (idle window) and populated hists all round-trip distinct
+        hist = [0] * NBUCKETS
+        hist[3], hist[17], hist[NBUCKETS - 1] = 5, 1_000_000, 7
+        cases = [(), (0,) * NBUCKETS, tuple(hist)]
+        for wait_hist in cases:
+            stats = StageStats(per_channel={
+                "c": StatsSnapshot(channel="c", ops=1, bytes=1, window_seconds=1.0,
+                                   throughput=1.0, iops=1.0, wait_hist=wait_hist),
+            })
+            decoded = decode_stats(encode_stats(stats))
+            assert decoded.per_channel["c"].wait_hist == wait_hist
 
     def test_policy_wire_dict_round_trips(self):
         # the canonical (JSON-native) policy dict is wire-encodable as a value
