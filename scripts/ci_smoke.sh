@@ -14,6 +14,23 @@ if git ls-files | grep -E '\.pyc$'; then
 fi
 echo "ok"
 
+echo "== invariant lint (repro.analysis --strict over src/) =="
+python -m repro.analysis --strict src/
+
+echo "== offline policy verifier (examples/policies compile + sanity checks) =="
+python -m repro.analysis policies examples/policies/
+
+echo "== lint self-check (deliberately-broken fixture tree must fail) =="
+if python -m repro.analysis tests/fixtures/lint/bad/ >/dev/null 2>&1; then
+    echo "FAIL: linter passed the known-bad fixture tree" >&2
+    exit 1
+fi
+if python -m repro.analysis policies tests/fixtures/policies/ >/dev/null 2>&1; then
+    echo "FAIL: policy verifier passed the known-bad policy fixtures" >&2
+    exit 1
+fi
+echo "ok"
+
 echo "== tier-1 (non-slow) tests =="
 python -m pytest -x -q
 

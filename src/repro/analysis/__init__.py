@@ -1,0 +1,34 @@
+"""repro.analysis — invariant lint engine + offline policy verifier.
+
+Run as ``python -m repro.analysis [--strict] [--json] [paths...]`` (lint) or
+``python -m repro.analysis policies <files-or-dirs>`` (policy verifier).
+See ``docs/static-analysis.md`` for the rule catalog.
+"""
+from .engine import (
+    ERROR,
+    WARNING,
+    Finding,
+    LintEngine,
+    LintReport,
+    Project,
+    Rule,
+    Suppression,
+    render_json,
+    render_text,
+)
+from .rules import RULE_IDS, default_rules
+
+__all__ = [
+    "ERROR",
+    "WARNING",
+    "Finding",
+    "LintEngine",
+    "LintReport",
+    "Project",
+    "Rule",
+    "RULE_IDS",
+    "Suppression",
+    "default_rules",
+    "render_json",
+    "render_text",
+]

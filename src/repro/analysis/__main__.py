@@ -1,0 +1,95 @@
+"""CLI: ``python -m repro.analysis`` (lint) / ``... policies`` (verifier).
+
+Exit status: 0 clean, 1 findings (warnings count only under ``--strict``),
+2 usage error. ``--json`` emits machine-readable findings for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+from .engine import LintEngine, render_json, render_text
+from .rules import default_rules
+
+
+def _lint(args: argparse.Namespace) -> int:
+    engine = LintEngine(default_rules())
+    report = engine.run(args.paths or ["src"])
+    if args.json:
+        print(render_json(report))
+    else:
+        print(render_text(report, verbose_suppressed=args.show_suppressed))
+    return report.exit_code(strict=args.strict)
+
+
+def _policies(args: argparse.Namespace) -> int:
+    # lazy import: verifier mode needs repro.policy on sys.path, lint does not
+    from .policyver import verify_paths
+
+    findings, files = verify_paths(args.paths)
+    if not files:
+        print(f"no policy files found under: {', '.join(args.paths)}", file=sys.stderr)
+        return 2
+    errors = [f for f in findings if f.severity == "error"]
+    warnings = [f for f in findings if f.severity == "warning"]
+    if args.json:
+        print(json.dumps([f.to_json() for f in findings], indent=2, sort_keys=True))
+    else:
+        for f in findings:
+            print(f.format())
+        print(
+            f"{files} policy file(s) checked: {len(errors)} error(s), "
+            f"{len(warnings)} warning(s)"
+        )
+    if errors or (args.strict and warnings):
+        return 1
+    return 0
+
+
+def _list_rules() -> int:
+    for rule in default_rules():
+        print(f"{rule.rule_id}: {rule.description}")
+    print("suppression-syntax: '# paio: ignore[rule-id] -- reason' comments must be well-formed")
+    print("unused-suppression: suppressions that matched no finding are reported (warning)")
+    return 0
+
+
+def main(argv: List[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="data-plane invariant linter + offline policy verifier",
+    )
+    parser.add_argument("--json", action="store_true", help="machine-readable output")
+    parser.add_argument(
+        "--strict", action="store_true", help="warnings also fail the run"
+    )
+    parser.add_argument(
+        "--show-suppressed",
+        action="store_true",
+        help="also print suppressed findings with their reasons",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog and exit"
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        help="files/dirs to lint (default: src); "
+        "'policies <files-or-dirs>' runs the offline policy verifier instead",
+    )
+    args = parser.parse_args(argv)
+    if args.list_rules:
+        return _list_rules()
+    if args.paths and args.paths[0] == "policies":
+        args.paths = args.paths[1:]
+        if not args.paths:
+            parser.error("policies mode needs at least one file or directory")
+        return _policies(args)
+    return _lint(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

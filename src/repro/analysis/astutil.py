@@ -1,0 +1,101 @@
+"""Small AST helpers shared by the rule battery."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a pure Name/Attribute chain, else None."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Local name → imported dotted origin, for every ``import``/``from``
+    statement in ``tree`` (e.g. ``import time as t`` → ``{"t": "time"}``,
+    ``from datetime import datetime`` → ``{"datetime": "datetime.datetime"}``)."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                out[alias.asname or alias.name] = f"{node.module}.{alias.name}"
+    return out
+
+
+def resolve_call_target(node: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    """Dotted origin of a call target with the first segment resolved through
+    the file's import aliases: ``t.time()`` (after ``import time as t``) →
+    ``"time.time"``."""
+    dotted = dotted_name(node.func)
+    if dotted is None:
+        return None
+    head, _, rest = dotted.partition(".")
+    origin = aliases.get(head)
+    if origin is None:
+        return dotted
+    return f"{origin}.{rest}" if rest else origin
+
+
+def docstring_nodes(tree: ast.AST) -> Set[int]:
+    """ids of Constant nodes that are docstrings (module/class/function)."""
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(
+            node, (ast.Module, ast.ClassDef, ast.FunctionDef, ast.AsyncFunctionDef)
+        ):
+            body = node.body
+            if (
+                body
+                and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)
+            ):
+                out.add(id(body[0].value))
+    return out
+
+
+def class_methods(cls: ast.ClassDef) -> Iterator[ast.FunctionDef]:
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def dataclass_fields(cls: ast.ClassDef) -> List[Tuple[str, int]]:
+    """(name, lineno) of annotated class-level fields, in declaration order —
+    how a dataclass declares its wire schema. Names starting with an
+    underscore or annotated as ClassVar are skipped."""
+    out: List[Tuple[str, int]] = []
+    for node in cls.body:
+        if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            name = node.target.id
+            anno = ast.unparse(node.annotation) if node.annotation is not None else ""
+            if name.startswith("_") or "ClassVar" in anno:
+                continue
+            out.append((name, node.lineno))
+    return out
+
+
+def self_attr_target(node: ast.AST) -> Optional[str]:
+    """``X`` when ``node`` is the assignment target ``self.X``."""
+    if (
+        isinstance(node, ast.Attribute)
+        and isinstance(node.value, ast.Name)
+        and node.value.id == "self"
+    ):
+        return node.attr
+    return None

@@ -1,0 +1,374 @@
+"""AST lint engine for the data-plane's project-specific invariants.
+
+Seven PRs of correctness conventions — monotonic-clock discipline, lock-guarded
+stats fields, pre-registered ``paio_*`` metric families, codec field coverage,
+rules-never-retried idempotency — previously lived only in prose (docstrings,
+``docs/operations.md``, reviewer memory). This engine makes them *checkable*:
+
+* every target file is parsed once into an ``ast`` tree and wrapped in a
+  :class:`FileContext` (source, lines, suppressions);
+* a :class:`Rule` sees each file (``visit``) and, for cross-file invariants
+  (code↔docs metric tables, codec coverage), the whole :class:`Project`
+  (``finalize``);
+* findings carry ``file:line``, a severity, a stable ``rule_id`` and a
+  message — rendered for humans or ``--json`` for tooling;
+* a finding is suppressed by an inline ``# paio: ignore[rule-id] -- reason``
+  comment on the flagged line. The reason is **mandatory** (a bare ignore is
+  itself an error) and unused suppressions are reported, so the suppression
+  inventory can never silently rot.
+
+The rule battery lives in :mod:`repro.analysis.rules`; the CLI in
+``python -m repro.analysis`` (see :mod:`repro.analysis.__main__`).
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+ERROR = "error"
+WARNING = "warning"
+
+#: rule id for malformed / reasonless suppression comments
+SUPPRESSION_RULE = "suppression-syntax"
+#: rule id for suppressions that matched no finding
+UNUSED_SUPPRESSION_RULE = "unused-suppression"
+
+#: ``paio: ignore[rule-a,rule-b] -- reason`` inside a comment token (the
+#: reason, after the double dash, is mandatory; its absence is reported as a
+#: SUPPRESSION_RULE error)
+_SUPPRESS_RE = re.compile(
+    r"#\s*paio:\s*ignore\[(?P<rules>[^\]]*)\]\s*(?:--\s*(?P<reason>.*))?$"
+)
+_SUPPRESS_HINT_RE = re.compile(r"#\s*paio:\s*ignore")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One lint finding, anchored to a file and line."""
+
+    rule: str
+    file: str
+    line: int
+    message: str
+    severity: str = ERROR
+
+    def format(self) -> str:
+        return f"{self.file}:{self.line}: {self.severity}: [{self.rule}] {self.message}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "rule": self.rule,
+            "file": self.file,
+            "line": self.line,
+            "severity": self.severity,
+            "message": self.message,
+        }
+
+
+@dataclass
+class Suppression:
+    """An inline ``# paio: ignore[...]`` comment."""
+
+    file: str
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+    def covers(self, finding: Finding) -> bool:
+        return finding.line == self.line and (
+            finding.rule in self.rules or "*" in self.rules
+        )
+
+
+class FileContext:
+    """One parsed source file as the rules see it."""
+
+    def __init__(self, path: Path, relpath: str, text: str, tree: ast.AST) -> None:
+        self.path = path
+        self.relpath = relpath
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = tree
+        self.suppressions: List[Suppression] = []
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"FileContext({self.relpath!r})"
+
+
+class Project:
+    """The whole linted file set plus the repo root (for docs cross-checks)."""
+
+    def __init__(self, files: Sequence[FileContext], root: Path) -> None:
+        self.files = list(files)
+        self.root = root
+        self._by_suffix_cache: Dict[str, Optional[FileContext]] = {}
+
+    def find(self, suffix: str) -> Optional[FileContext]:
+        """The linted file whose normalized path ends with ``suffix``
+        (e.g. ``"transport/codec.py"``), or None."""
+        cached = self._by_suffix_cache.get(suffix)
+        if cached is not None:
+            return cached
+        for f in self.files:
+            if f.relpath.replace("\\", "/").endswith(suffix):
+                self._by_suffix_cache[suffix] = f
+                return f
+        return None
+
+
+class Rule:
+    """Base class for checkers. Subclasses set ``rule_id``/``description`` and
+    override ``visit`` (per-file) and/or ``finalize`` (whole-project)."""
+
+    rule_id: str = "rule"
+    description: str = ""
+
+    def visit(self, f: FileContext) -> Iterator[Finding]:
+        return iter(())
+
+    def finalize(self, project: Project) -> Iterator[Finding]:
+        return iter(())
+
+    # -- helpers shared by concrete rules -----------------------------------
+    def finding(
+        self, f: FileContext, line: int, message: str, severity: str = ERROR
+    ) -> Finding:
+        return Finding(
+            rule=self.rule_id, file=f.relpath, line=line, message=message, severity=severity
+        )
+
+
+def _comment_tokens(text: str) -> Iterator[Tuple[int, str]]:
+    """(lineno, comment_text) for every real COMMENT token — strings and
+    docstrings that merely *mention* the suppression syntax never count."""
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                yield tok.start[0], tok.string
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return  # the ast parse will report the breakage with a better message
+
+
+def parse_suppressions(ctx: FileContext) -> List[Finding]:
+    """Extract ``paio: ignore[...]`` comments; returns syntax findings for
+    malformed ones (empty rule list, missing reason)."""
+    findings: List[Finding] = []
+    for lineno, line in _comment_tokens(ctx.text):
+        if "paio:" not in line:
+            continue
+        m = _SUPPRESS_RE.search(line)
+        if m is None:
+            if _SUPPRESS_HINT_RE.search(line):
+                findings.append(
+                    Finding(
+                        rule=SUPPRESSION_RULE,
+                        file=ctx.relpath,
+                        line=lineno,
+                        message=(
+                            "malformed suppression (expected "
+                            "'# paio: ignore[rule-id] -- reason')"
+                        ),
+                    )
+                )
+            continue
+        rules = tuple(r.strip() for r in m.group("rules").split(",") if r.strip())
+        reason = (m.group("reason") or "").strip()
+        if not rules:
+            findings.append(
+                Finding(
+                    rule=SUPPRESSION_RULE,
+                    file=ctx.relpath,
+                    line=lineno,
+                    message="suppression names no rule ids",
+                )
+            )
+            continue
+        if not reason:
+            findings.append(
+                Finding(
+                    rule=SUPPRESSION_RULE,
+                    file=ctx.relpath,
+                    line=lineno,
+                    message=(
+                        f"suppression for [{', '.join(rules)}] carries no reason "
+                        "(append ' -- <why this is safe>')"
+                    ),
+                )
+            )
+            continue
+        ctx.suppressions.append(
+            Suppression(file=ctx.relpath, line=lineno, rules=rules, reason=reason)
+        )
+    return findings
+
+
+def _detect_root(paths: Sequence[Path]) -> Path:
+    """Walk up from the first path to the repo root (the dir holding
+    ``docs/operations.md`` or ``.git``); falls back to the cwd."""
+    for start in paths:
+        cur = start if start.is_dir() else start.parent
+        cur = cur.resolve()
+        for candidate in (cur, *cur.parents):
+            if (candidate / "docs" / "operations.md").exists() or (
+                candidate / ".git"
+            ).exists():
+                return candidate
+    return Path.cwd()
+
+
+def gather_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(
+                sorted(
+                    f
+                    for f in path.rglob("*.py")
+                    if "__pycache__" not in f.parts
+                )
+            )
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+@dataclass
+class LintReport:
+    findings: List[Finding] = field(default_factory=list)
+    suppressed: List[Tuple[Finding, Suppression]] = field(default_factory=list)
+    files: int = 0
+
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == WARNING]
+
+    def exit_code(self, strict: bool = False) -> int:
+        if self.errors():
+            return 1
+        if strict and self.warnings():
+            return 1
+        return 0
+
+    def to_json(self) -> Dict[str, object]:
+        return {
+            "files": self.files,
+            "findings": [f.to_json() for f in self.findings],
+            "suppressed": [
+                {"finding": f.to_json(), "reason": s.reason, "line": s.line}
+                for f, s in self.suppressed
+            ],
+        }
+
+
+class LintEngine:
+    """Run a rule battery over a file set and apply suppressions."""
+
+    def __init__(self, rules: Sequence[Rule], root: Optional[Path] = None) -> None:
+        self.rules = list(rules)
+        self.root = root
+
+    def run(self, paths: Sequence[str]) -> LintReport:
+        files = gather_files(paths)
+        root = self.root if self.root is not None else _detect_root(files)
+        report = LintReport(files=len(files))
+        contexts: List[FileContext] = []
+        raw: List[Finding] = []
+        for path in files:
+            try:
+                text = path.read_text()
+            except OSError as exc:
+                raw.append(
+                    Finding(rule="io", file=str(path), line=0, message=str(exc))
+                )
+                continue
+            relpath = _relpath(path, root)
+            try:
+                tree = ast.parse(text, filename=str(path))
+            except SyntaxError as exc:
+                raw.append(
+                    Finding(
+                        rule="syntax",
+                        file=relpath,
+                        line=exc.lineno or 0,
+                        message=f"syntax error: {exc.msg}",
+                    )
+                )
+                continue
+            ctx = FileContext(path=path, relpath=relpath, text=text, tree=tree)
+            raw.extend(parse_suppressions(ctx))
+            contexts.append(ctx)
+
+        project = Project(contexts, root)
+        for ctx in contexts:
+            for rule in self.rules:
+                raw.extend(rule.visit(ctx))
+        for rule in self.rules:
+            raw.extend(rule.finalize(project))
+
+        suppressions = [s for ctx in contexts for s in ctx.suppressions]
+        by_file: Dict[str, List[Suppression]] = {}
+        for s in suppressions:
+            by_file.setdefault(s.file, []).append(s)
+        for f in sorted(raw, key=lambda f: (f.file, f.line, f.rule)):
+            hit = None
+            for s in by_file.get(f.file, ()):  # suppressions are per-line: O(few)
+                if s.covers(f):
+                    hit = s
+                    break
+            if hit is not None:
+                hit.used = True
+                report.suppressed.append((f, hit))
+            else:
+                report.findings.append(f)
+        for s in suppressions:
+            if not s.used:
+                report.findings.append(
+                    Finding(
+                        rule=UNUSED_SUPPRESSION_RULE,
+                        file=s.file,
+                        line=s.line,
+                        message=(
+                            f"suppression for [{', '.join(s.rules)}] matched no "
+                            "finding; delete it"
+                        ),
+                        severity=WARNING,
+                    )
+                )
+        report.findings.sort(key=lambda f: (f.file, f.line, f.rule))
+        return report
+
+
+def _relpath(path: Path, root: Path) -> str:
+    try:
+        return str(path.resolve().relative_to(root))
+    except ValueError:
+        return str(path)
+
+
+def render_text(report: LintReport, verbose_suppressed: bool = False) -> str:
+    lines = [f.format() for f in report.findings]
+    if verbose_suppressed:
+        lines.extend(
+            f"{f.file}:{f.line}: suppressed [{f.rule}] -- {s.reason}"
+            for f, s in report.suppressed
+        )
+    n_err, n_warn = len(report.errors()), len(report.warnings())
+    lines.append(
+        f"{report.files} files checked: {n_err} error(s), {n_warn} warning(s), "
+        f"{len(report.suppressed)} suppressed"
+    )
+    return "\n".join(lines)
+
+
+def render_json(report: LintReport) -> str:
+    return json.dumps(report.to_json(), indent=2, sort_keys=True)

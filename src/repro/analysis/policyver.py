@@ -1,0 +1,217 @@
+"""Offline policy verifier: compile + sanity-check ``examples/policies/*``.
+
+``compile_policy(policy)`` with no ``infos`` is the offline compile the DSL
+already supports (``scope: global`` flows bind to the ``"*"`` placeholder
+stage); this module layers static checks a compile alone cannot express:
+
+* **policy-compile** — the file does not load or compile at all;
+* **policy-unknown-metric** — a trigger watches a dotted registry key that no
+  known scheme produces (channel stats, ``@fleet.*`` folds, ``stage.*.up``
+  liveness, ``rpc.*.retries``, ``policy.*.version``, ``trigger.*.fired``,
+  ``serve.*``). A typo here compiles fine and then never fires, because
+  ``TriggerEngine.observe`` skips absent samples — the worst failure mode, a
+  silent one;
+* **policy-contradiction** — two triggers whose conditions can hold
+  simultaneously ship EnforcementRules pinning the same ``(stage, channel,
+  object)`` state key to different values: last-collect-wins flapping;
+* **policy-dead-hysteresis** — a ``>``/``>=`` trigger whose release point
+  ``value - hysteresis`` is negative can never release on a non-negative
+  metric, so its release rules are dead and the fired state latches forever.
+
+Findings reuse :class:`repro.analysis.engine.Finding`, anchored to the policy
+file (line = where the trigger is named, when the text search finds it).
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .engine import ERROR, WARNING, Finding
+
+#: registry-key schemes the runtime actually publishes (docs/operations.md)
+_KNOWN_KEY_SCHEMES = (
+    re.compile(r"^stage\.[^.]+\.(up|down|breaker)$"),
+    re.compile(r"^rpc\.[^.]+\.retries$"),
+    re.compile(r"^policy\.[^.]+\.version$"),
+    re.compile(r"^policies\.installed$"),
+    re.compile(r"^trigger\..+\.fired$"),
+    re.compile(r"^serve\..+$"),
+)
+
+POLICY_SUFFIXES = (".json", ".pol")
+
+
+def _channel_fields() -> Tuple[str, ...]:
+    from repro.policy.engine import CHANNEL_FIELDS
+
+    return tuple(CHANNEL_FIELDS) + ("wait_hist_ms",)
+
+
+def _known_metric_key(key: str) -> bool:
+    fields = _channel_fields()
+    last = key.rsplit(".", 1)[-1]
+    if last in fields:
+        # <stage>.<field>, <stage>.<channel>.<field>, @fleet[.<channel>].<field>
+        return True
+    return any(p.match(key) for p in _KNOWN_KEY_SCHEMES)
+
+
+def _interval(op: str, value: float) -> Optional[Tuple[float, float]]:
+    """The closed-ish interval of metric values satisfying ``<agg> <op>
+    <value>``; None when the op is not interval-shaped."""
+    if op in (">", ">="):
+        return (value, float("inf"))
+    if op in ("<", "<="):
+        return (float("-inf"), value)
+    if op in ("==", "="):
+        return (value, value)
+    return None
+
+
+def _conditions_coexist(a, b) -> bool:
+    """Can both triggers' conditions hold at once? Conservative: anything we
+    cannot prove disjoint is assumed to coexist."""
+    if a.metric_key != b.metric_key or a.agg != b.agg:
+        return True
+    ia, ib = _interval(a.op, a.value), _interval(b.op, b.value)
+    if ia is None or ib is None:
+        return True
+    lo, hi = max(ia[0], ib[0]), min(ia[1], ib[1])
+    if lo > hi:
+        return False
+    if lo == hi:
+        # the shared point only satisfies both when both ops are inclusive
+        return all(op in (">=", "<=", "==", "=") for op in (a.op, b.op))
+    return True
+
+
+def _enforcement_states(trigger) -> Iterable[Tuple[Tuple[str, str, str, str], Any]]:
+    """((stage, channel, object_id, state_key), value) for every
+    EnforcementRule state entry the trigger fires."""
+    from repro.core.rules import EnforcementRule
+
+    for stage, rules in trigger.fire_rules.items():
+        for rule in rules:
+            if isinstance(rule, EnforcementRule):
+                for k, v in (rule.state or {}).items():
+                    yield (stage, rule.channel, rule.object_id, k), v
+
+
+def _anchor_line(text: str, needle: str) -> int:
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if needle and needle in line:
+            return lineno
+    return 0
+
+
+def verify_policy_file(path: str) -> List[Finding]:
+    """Compile one policy file offline and run every static check."""
+    from repro.policy import PolicyError, compile_policy, load_policy_file
+
+    rel = str(path)
+    try:
+        text = Path(path).read_text()
+    except OSError as exc:
+        return [Finding(rule="policy-compile", file=rel, line=0, message=str(exc))]
+    try:
+        policy = load_policy_file(path)
+        compiled = compile_policy(policy)  # offline: infos=None, "*" placeholder
+    except PolicyError as exc:
+        return [
+            Finding(
+                rule="policy-compile",
+                file=rel,
+                line=0,
+                message=f"does not compile offline: {exc}",
+            )
+        ]
+
+    findings: List[Finding] = []
+    triggers = compiled.triggers
+
+    for t in triggers:
+        line = _anchor_line(text, t.name)
+        if not _known_metric_key(t.metric_key):
+            findings.append(
+                Finding(
+                    rule="policy-unknown-metric",
+                    file=rel,
+                    line=line,
+                    message=(
+                        f"trigger {t.name!r} watches {t.metric_key!r}, which no "
+                        "known registry scheme publishes — the trigger would "
+                        "silently never fire (TriggerEngine skips absent "
+                        "samples); fix the metric name or register the "
+                        "pluggable gauge it refers to"
+                    ),
+                    severity=WARNING,
+                )
+            )
+        if t.op in (">", ">=") and t.hysteresis > 0 and t.value - t.hysteresis < 0:
+            findings.append(
+                Finding(
+                    rule="policy-dead-hysteresis",
+                    file=rel,
+                    line=line,
+                    message=(
+                        f"trigger {t.name!r}: release point value - hysteresis "
+                        f"= {t.value - t.hysteresis:g} is negative, and "
+                        f"{t.metric_key!r} never goes below zero — once fired "
+                        "the trigger can never release and its release rules "
+                        "are dead"
+                    ),
+                    severity=ERROR,
+                )
+            )
+
+    for i, a in enumerate(triggers):
+        states_a = dict(_enforcement_states(a))
+        if not states_a:
+            continue
+        for b in triggers[i + 1 :]:
+            clashes = [
+                (key, states_a[key], vb)
+                for key, vb in _enforcement_states(b)
+                if key in states_a and states_a[key] != vb
+            ]
+            if not clashes or not _conditions_coexist(a, b):
+                continue
+            (stage, channel, obj, state_key), va, vb = clashes[0]
+            findings.append(
+                Finding(
+                    rule="policy-contradiction",
+                    file=rel,
+                    line=_anchor_line(text, a.name),
+                    message=(
+                        f"triggers {a.name!r} and {b.name!r} can both hold and "
+                        f"both pin {state_key}={va!r} vs {vb!r} on "
+                        f"{stage}/{channel}/{obj} — last collect wins and the "
+                        "object flaps between the two states"
+                    ),
+                    severity=ERROR,
+                )
+            )
+    findings.sort(key=lambda f: (f.file, f.line, f.rule))
+    return findings
+
+
+def gather_policy_files(paths: Sequence[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            for suffix in POLICY_SUFFIXES:
+                out.extend(sorted(path.rglob(f"*{suffix}")))
+        elif path.suffix in POLICY_SUFFIXES:
+            out.append(path)
+    return out
+
+
+def verify_paths(paths: Sequence[str]) -> Tuple[List[Finding], int]:
+    """(findings, files_checked) over every policy file under ``paths``."""
+    files = gather_policy_files(paths)
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(verify_policy_file(str(f)))
+    return findings, len(files)

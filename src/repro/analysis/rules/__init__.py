@@ -1,0 +1,39 @@
+"""The project-specific rule battery.
+
+``default_rules()`` builds fresh instances (rules carry per-run state in
+``visit``/``finalize``); ``RULE_IDS`` is the stable catalog used by docs and
+the CLI's ``--list-rules``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from ..engine import Rule
+from .clock import ClockDisciplineRule
+from .codec import CodecCoverageRule
+from .locks import LockDisciplineRule
+from .metricdoc import MetricRegistryRule
+from .retry import RetrySafetyRule
+
+__all__ = [
+    "ClockDisciplineRule",
+    "CodecCoverageRule",
+    "LockDisciplineRule",
+    "MetricRegistryRule",
+    "RetrySafetyRule",
+    "default_rules",
+    "RULE_IDS",
+]
+
+
+def default_rules() -> List[Rule]:
+    return [
+        ClockDisciplineRule(),
+        LockDisciplineRule(),
+        MetricRegistryRule(),
+        CodecCoverageRule(),
+        RetrySafetyRule(),
+    ]
+
+
+RULE_IDS = tuple(r.rule_id for r in default_rules())

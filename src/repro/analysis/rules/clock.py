@@ -1,0 +1,75 @@
+"""clock-discipline: no wall-clock time sources in interval/rate/window math.
+
+PR 3 swept ``time.time()`` out of every collect window, trigger cooldown and
+cadence computation (``docs`` prose: "a wall-clock step — NTP, suspend/resume —
+cannot stretch or invert a collect window"); this rule keeps it out. Inside
+the time-sensitive subsystems (``core/``, ``policy/``, ``telemetry/``,
+``transport/``, ``ft/``, ``serve/``) the only legal time sources are
+``time.monotonic`` / ``time.monotonic_ns`` / ``time.perf_counter`` or an
+injected :class:`repro.core.clock.Clock`. Genuinely wall-clock uses (a
+user-facing timestamp in a log line) carry a reasoned
+``# paio: ignore[clock-discipline]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Sequence
+
+from ..astutil import import_aliases, resolve_call_target
+from ..engine import FileContext, Finding, Rule
+
+#: directory names whose files do interval math on the hot/control path
+DEFAULT_SCOPE = ("core", "policy", "telemetry", "transport", "ft", "serve")
+
+#: resolved call targets that read the wall clock
+_WALL_CLOCK_CALLS = {
+    "time.time": "time.time()",
+    "time.time_ns": "time.time_ns()",
+}
+#: resolved targets that are wall-clock when called with no arguments
+_WALL_CLOCK_ARGLESS = {
+    "datetime.now": "datetime.now()",
+    "datetime.datetime.now": "datetime.now()",
+    "datetime.utcnow": "datetime.utcnow()",
+    "datetime.datetime.utcnow": "datetime.utcnow()",
+}
+
+
+class ClockDisciplineRule(Rule):
+    rule_id = "clock-discipline"
+    description = (
+        "interval/rate/window math must use clock.monotonic or an injected "
+        "Clock, never time.time()/datetime.now()"
+    )
+
+    def __init__(self, scope: Sequence[str] = DEFAULT_SCOPE) -> None:
+        self.scope = tuple(scope)
+
+    def _in_scope(self, ctx: FileContext) -> bool:
+        if not self.scope:
+            return True
+        parts = ctx.relpath.replace("\\", "/").split("/")
+        return any(seg in parts for seg in self.scope)
+
+    def visit(self, ctx: FileContext) -> Iterator[Finding]:
+        if not self._in_scope(ctx):
+            return
+        aliases = import_aliases(ctx.tree)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolve_call_target(node, aliases)
+            if target is None:
+                continue
+            label = _WALL_CLOCK_CALLS.get(target)
+            if label is None and not node.args and not node.keywords:
+                label = _WALL_CLOCK_ARGLESS.get(target)
+            if label is None:
+                continue
+            yield self.finding(
+                ctx,
+                node.lineno,
+                f"{label} is a wall-clock read; interval math must use "
+                "clock.monotonic (repro.core.clock) or an injected Clock — "
+                "annotate genuinely wall-clock uses with a reasoned suppression",
+            )

@@ -1,0 +1,163 @@
+"""codec-coverage: every wire dataclass field has encode+decode handling.
+
+The v2 binary transport (PR 5/7) hand-rolls its codec: ``encode_stats``
+serializes each :class:`StatsSnapshot` field positionally and ``decode_stats``
+rebuilds the dataclass by keyword; ``encode_rule``/``decode_rule`` do the same
+per rule class. Adding a field to ``core/stats.py`` or ``core/rules.py``
+without touching ``transport/codec.py`` silently drops it on the wire — the
+exact bug class this rule exists for. The check is structural:
+
+* every ``StatsSnapshot`` field must be read (``s.<field>``) somewhere in
+  ``encode_stats`` and passed as a keyword to the ``StatsSnapshot(...)``
+  construction in ``decode_stats``;
+* every field of each rule dataclass (``HousekeepingRule``,
+  ``DifferentiationRule``, ``EnforcementRule``) must be read in its
+  ``encode_rule`` branch and passed as a keyword in ``decode_rule``.
+
+The rule only runs when the linted set contains both the schema file and
+``transport/codec.py`` (fixtures mirror that layout); partial runs skip it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..astutil import dataclass_fields
+from ..engine import FileContext, Finding, Project, Rule
+
+STATS_SUFFIX = "core/stats.py"
+RULES_SUFFIX = "core/rules.py"
+CODEC_SUFFIX = "transport/codec.py"
+
+STATS_CLASS = "StatsSnapshot"
+RULE_CLASSES = ("HousekeepingRule", "DifferentiationRule", "EnforcementRule")
+
+
+def _find_class(ctx: FileContext, name: str) -> Optional[ast.ClassDef]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_function(ctx: FileContext, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node.name == name:
+            return node
+    return None
+
+
+def _attr_reads(fn: ast.AST) -> Set[str]:
+    """Every ``<anything>.attr`` read inside ``fn``."""
+    return {
+        node.attr
+        for node in ast.walk(fn)
+        if isinstance(node, ast.Attribute) and isinstance(node.ctx, ast.Load)
+    }
+
+
+def _ctor_keywords(fn: ast.AST, class_name: str) -> Optional[Set[str]]:
+    """Keywords passed to any ``ClassName(...)`` call in ``fn``; None when the
+    constructor call is absent, a set containing ``"**"`` when splatted."""
+    found: Optional[Set[str]] = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            callee = node.func
+            name = callee.attr if isinstance(callee, ast.Attribute) else (
+                callee.id if isinstance(callee, ast.Name) else ""
+            )
+            if name != class_name:
+                continue
+            kws = set()
+            for kw in node.keywords:
+                kws.add(kw.arg if kw.arg is not None else "**")
+            found = kws if found is None else (found | kws)
+    return found
+
+
+class CodecCoverageRule(Rule):
+    rule_id = "codec-coverage"
+    description = (
+        "every StatsSnapshot / rule-dataclass field needs encode and decode "
+        "handling in transport/codec.py"
+    )
+
+    def finalize(self, project: Project) -> Iterator[Finding]:
+        codec = project.find(CODEC_SUFFIX)
+        if codec is None:
+            return
+        stats = project.find(STATS_SUFFIX)
+        if stats is not None:
+            yield from self._check_schema(
+                codec,
+                schema=stats,
+                class_name=STATS_CLASS,
+                encode_fn="encode_stats",
+                decode_fn="decode_stats",
+            )
+        rules_file = project.find(RULES_SUFFIX)
+        if rules_file is not None:
+            for cls_name in RULE_CLASSES:
+                yield from self._check_schema(
+                    codec,
+                    schema=rules_file,
+                    class_name=cls_name,
+                    encode_fn="encode_rule",
+                    decode_fn="decode_rule",
+                )
+
+    def _check_schema(
+        self,
+        codec: FileContext,
+        schema: FileContext,
+        class_name: str,
+        encode_fn: str,
+        decode_fn: str,
+    ) -> Iterator[Finding]:
+        cls = _find_class(schema, class_name)
+        if cls is None:
+            return
+        fields: List[Tuple[str, int]] = dataclass_fields(cls)
+        if not fields:
+            return
+
+        enc = _find_function(codec, encode_fn)
+        if enc is None:
+            yield self.finding(
+                codec, 1, f"missing {encode_fn}() — cannot encode {class_name}"
+            )
+        else:
+            reads = _attr_reads(enc)
+            for name, lineno in fields:
+                if name not in reads:
+                    yield self.finding(
+                        codec,
+                        enc.lineno,
+                        f"{encode_fn}() never reads {class_name}.{name} "
+                        f"({schema.relpath}:{lineno}) — the field is dropped "
+                        "on encode",
+                    )
+
+        dec = _find_function(codec, decode_fn)
+        if dec is None:
+            yield self.finding(
+                codec, 1, f"missing {decode_fn}() — cannot decode {class_name}"
+            )
+        else:
+            kws = _ctor_keywords(dec, class_name)
+            if kws is None:
+                yield self.finding(
+                    codec,
+                    dec.lineno,
+                    f"{decode_fn}() never constructs {class_name}(...)",
+                )
+            elif "**" not in kws:
+                for name, lineno in fields:
+                    if name not in kws:
+                        yield self.finding(
+                            codec,
+                            dec.lineno,
+                            f"{decode_fn}() constructs {class_name} without "
+                            f"the {name}= keyword ({schema.relpath}:{lineno}) "
+                            "— the field is lost on decode",
+                        )

@@ -1,0 +1,149 @@
+"""lock-discipline: attributes guarded in one method stay guarded everywhere.
+
+The stats/runtime classes follow one convention (PR 1/3): a mutable attribute
+that is ever written under ``with self._lock:`` (or ``_policy_lock``, or a
+condition variable) belongs to that lock — every *other* write in the class
+must hold it too. A lock-free write elsewhere is exactly the bug class the
+PR-3 stats sweep fixed by hand: a torn read-modify-write racing the locked
+path.
+
+Mechanics (single-file, lexical):
+
+* guard attributes are anything used as ``with self.<attr>:`` where ``<attr>``
+  contains ``lock`` or ``cv`` (``_lock``, ``_policy_lock``, ``_cv``, …);
+* per class, every ``self.X = / += ...`` in a method body is classified as
+  guarded (lexically inside a guard ``with``) or bare;
+* ``__init__``/``__new__`` writes are exempt (no concurrent readers exist
+  before construction completes) — as are writes to the guards themselves;
+* a method named ``*_locked`` documents "caller holds the lock" (the repo's
+  own convention: ``_refill_locked``, ``_save_locked``), so its writes count
+  as guarded;
+* an attribute with at least one guarded write *and* at least one bare write
+  in a non-init method is flagged at each bare write.
+
+A deliberately lock-free write (e.g. a field documented as owned by a single
+thread) carries a reasoned ``# paio: ignore[lock-discipline]``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from ..astutil import class_methods, self_attr_target
+from ..engine import FileContext, Finding, Rule
+
+
+def _guard_name(item: ast.withitem) -> str:
+    expr = item.context_expr
+    # accept both ``with self._lock:`` and ``with self._lock.acquire_ctx():``
+    if isinstance(expr, ast.Call):
+        expr = expr.func
+    if (
+        isinstance(expr, ast.Attribute)
+        and isinstance(expr.value, ast.Name)
+        and expr.value.id == "self"
+    ):
+        attr = expr.attr.lower()
+        if "lock" in attr or "cv" in attr or "cond" in attr:
+            return expr.attr
+    return ""
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """Collect (attr, lineno, guarded) writes to ``self.*`` in one method."""
+
+    def __init__(self) -> None:
+        self.writes: List[Tuple[str, int, bool]] = []
+        self.guards_used: Set[str] = set()
+        self._depth = 0
+
+    def visit_With(self, node: ast.With) -> None:
+        names = [g for item in node.items if (g := _guard_name(item))]
+        self.guards_used.update(names)
+        if names:
+            self._depth += 1
+            self.generic_visit(node)
+            self._depth -= 1
+        else:
+            self.generic_visit(node)
+
+    def _record(self, target: ast.AST, lineno: int) -> None:
+        attr = self_attr_target(target)
+        if attr is not None:
+            self.writes.append((attr, lineno, self._depth > 0))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record(t, node.lineno)
+            if isinstance(t, ast.Tuple):
+                for elt in t.elts:
+                    self._record(elt, node.lineno)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record(node.target, node.lineno)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record(node.target, node.lineno)
+        self.generic_visit(node)
+
+    # nested defs run later / elsewhere: their writes are not this method's
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        return
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        return
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        return
+
+
+_INIT_METHODS = {"__init__", "__new__", "__post_init__"}
+
+
+class LockDisciplineRule(Rule):
+    rule_id = "lock-discipline"
+    description = (
+        "an attribute written under self._lock in one method must not be "
+        "written lock-free elsewhere in the class"
+    )
+
+    def visit(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(ctx, node)
+
+    def _check_class(self, ctx: FileContext, cls: ast.ClassDef) -> Iterator[Finding]:
+        guarded_in: Dict[str, List[str]] = {}  # attr -> methods with guarded writes
+        bare: List[Tuple[str, int, str]] = []  # (attr, lineno, method)
+        guard_attrs: Set[str] = set()
+        for method in class_methods(cls):
+            scanner = _MethodScanner()
+            for stmt in method.body:
+                scanner.visit(stmt)
+            guard_attrs |= scanner.guards_used
+            if method.name in _INIT_METHODS:
+                continue
+            # the *_locked suffix is the repo's "caller holds the lock"
+            # contract — treat the whole body as guarded
+            held_by_caller = method.name.endswith("_locked")
+            for attr, lineno, is_guarded in scanner.writes:
+                if is_guarded or held_by_caller:
+                    guarded_in.setdefault(attr, []).append(method.name)
+                else:
+                    bare.append((attr, lineno, method.name))
+        for attr, lineno, method in bare:
+            if attr in guard_attrs:
+                continue  # re-binding the lock object itself is its own sin
+            methods = guarded_in.get(attr)
+            if not methods:
+                continue
+            yield self.finding(
+                ctx,
+                lineno,
+                f"{cls.name}.{method} writes self.{attr} without the lock, but "
+                f"{', '.join(sorted(set(methods)))} writes it lock-guarded — "
+                "hold the lock here too (or suppress with the ownership reason)",
+            )

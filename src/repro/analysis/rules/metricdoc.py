@@ -1,0 +1,256 @@
+"""metric-registry: ``paio_*`` families in code ↔ docs/operations.md table.
+
+The operational contract since PR 3/4: every exported metric family is
+(a) registered (described) in code — pre-registered at zero where the family
+must exist before its first event (the ``paio_rpc_retries_total`` convention) —
+and (b) listed in the *Metric naming* table of ``docs/operations.md``. This
+rule cross-checks the two **both directions** from the AST:
+
+* every ``paio_*`` family literal used anywhere in code must be covered by a
+  ``describe(...)`` registration (exact literal or an f-string template such
+  as ``f"paio_fleet_{fld}"``, which covers the ``paio_fleet_*`` family space);
+* every family registered in code must appear in the docs table;
+* every family the docs table lists must exist in code.
+
+Matching understands the exporter's rendering conventions: counters gain
+``_total`` (code ``paio_stage_down`` ⇔ docs ``paio_stage_down_total``), docs
+placeholders (``paio_stage_<field>``) and wildcards (``paio_serve_*_ms``)
+match as prefixes, and f-string families match anything sharing their
+constant prefix. Docstrings are prose, not registrations, and are skipped;
+table rows describing the sanitization fallback (marked "sanitized") are
+examples, not families.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..astutil import docstring_nodes
+from ..engine import ERROR, FileContext, Finding, Project, Rule
+
+#: a complete family name: paio_ + at least one word char, no trailing _
+_FAMILY_RE = re.compile(r"^paio_[a-z0-9_]*[a-z0-9]$")
+#: a family-prefix literal (exporter allowlists): paio_ + trailing underscore
+_PREFIX_RE = re.compile(r"^paio_[a-z0-9_]*_$")
+#: docs tokens, including <placeholder> and * wildcards
+_DOC_TOKEN_RE = re.compile(r"paio_[a-zA-Z0-9_<>*]+")
+
+DOCS_RELPATH = "docs/operations.md"
+#: a linted file that marks "this run covers the real tree" — the docs→code
+#: direction is meaningless when linting a lone fixture file
+FULL_TREE_MARKER = "telemetry/exporter.py"
+
+
+@dataclass(frozen=True)
+class _Entry:
+    """One family reference: exact name, or a prefix pattern (f-string /
+    ``<placeholder>`` / ``*`` template)."""
+
+    name: str  # for patterns: the constant prefix before the wildcard
+    is_pattern: bool
+    file: str
+    line: int
+
+    def matches_name(self, other: str) -> bool:
+        """Does this entry cover the concrete family ``other`` (modulo the
+        counter ``_total`` suffix)?"""
+        if self.is_pattern:
+            return other.startswith(self.name)
+        return other in (self.name, self.name + "_total") or self.name == other + "_total"
+
+    def matches(self, other: "_Entry") -> bool:
+        if other.is_pattern and self.is_pattern:
+            return other.name.startswith(self.name) or self.name.startswith(other.name)
+        if other.is_pattern:
+            return other.matches_name(self.name)
+        return self.matches_name(other.name)
+
+
+def _doc_entry(token: str, file: str, line: int) -> Optional[_Entry]:
+    """Normalize a docs-table token: ``paio_stage_<field>{stage}`` →
+    prefix pattern ``paio_stage_``; plain names stay exact."""
+    cut = len(token)
+    for marker in ("<", "*"):
+        idx = token.find(marker)
+        if idx != -1:
+            cut = min(cut, idx)
+    if cut == len(token):
+        return _Entry(token, False, file, line) if _FAMILY_RE.match(token) else None
+    prefix = token[:cut]
+    if not prefix.startswith("paio_") or len(prefix) <= len("paio_"):
+        return None
+    return _Entry(prefix, True, file, line)
+
+
+class MetricRegistryRule(Rule):
+    rule_id = "metric-registry"
+    description = (
+        "every paio_* family must be described in code and listed in the "
+        "docs/operations.md metric table (checked both directions)"
+    )
+
+    def __init__(
+        self,
+        docs_relpath: str = DOCS_RELPATH,
+        full_tree_marker: str = FULL_TREE_MARKER,
+    ) -> None:
+        self.docs_relpath = docs_relpath
+        self.full_tree_marker = full_tree_marker
+        self._used: List[_Entry] = []
+        self._registered: List[_Entry] = []
+
+    # -- per-file: harvest family strings -----------------------------------
+    def visit(self, ctx: FileContext) -> Iterator[Finding]:
+        docstrings = docstring_nodes(ctx.tree)
+        register_ctx = set()
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                func = node.func
+                name = func.attr if isinstance(func, ast.Attribute) else (
+                    func.id if isinstance(func, ast.Name) else ""
+                )
+                if "describe" in name:
+                    for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                        if isinstance(arg, ast.Starred):
+                            arg = arg.value
+                        register_ctx.update(id(n) for n in ast.walk(arg))
+            elif isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ) and ("descriptor" in node.name or "describe" in node.name):
+                # helpers like _export_descriptor build the family strings
+                # that describe(key, *helper(...)) registers
+                register_ctx.update(id(n) for n in ast.walk(node))
+        fstring_parts = {
+            id(v)
+            for node in ast.walk(ctx.tree)
+            if isinstance(node, ast.JoinedStr)
+            for v in node.values
+        }
+        for node in ast.walk(ctx.tree):
+            if id(node) in fstring_parts:
+                continue  # the JoinedStr itself is the entry, not its head
+            entry = self._entry_for(node, ctx, docstrings)
+            if entry is None:
+                continue
+            self._used.append(entry)
+            if id(node) in register_ctx:
+                self._registered.append(entry)
+        return iter(())
+
+    def _entry_for(self, node: ast.AST, ctx: FileContext, docstrings) -> Optional[_Entry]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            if id(node) in docstrings:
+                return None
+            value = node.value
+            if _FAMILY_RE.match(value):
+                return _Entry(value, False, ctx.relpath, node.lineno)
+            if _PREFIX_RE.match(value):
+                return _Entry(value, True, ctx.relpath, node.lineno)
+            return None
+        if isinstance(node, ast.JoinedStr) and node.values:
+            head = node.values[0]
+            if (
+                isinstance(head, ast.Constant)
+                and isinstance(head.value, str)
+                and head.value.startswith("paio_")
+                and len(head.value) > len("paio_")
+            ):
+                return _Entry(head.value, True, ctx.relpath, node.lineno)
+        return None
+
+    # -- project-wide: docs table cross-check -------------------------------
+    def finalize(self, project: Project) -> Iterator[Finding]:
+        used, registered = self._used, self._registered
+        self._used, self._registered = [], []  # engine instances are reusable
+        if not used:
+            return
+        docs_path = project.root / self.docs_relpath
+        docs_entries, doc_findings = self._parse_docs(docs_path)
+        yield from doc_findings
+        full_tree = project.find(self.full_tree_marker) is not None
+
+        # 1. used-but-never-registered: a family string floating in code that
+        #    no describe() call (or template) ever creates
+        for entry in used:
+            if any(reg.matches(entry) for reg in registered):
+                continue
+            yield Finding(
+                rule=self.rule_id,
+                file=entry.file,
+                line=entry.line,
+                message=(
+                    f"family {entry.name!r}{'*' if entry.is_pattern else ''} is "
+                    "referenced but never registered via describe() anywhere "
+                    "in the linted tree"
+                ),
+                severity=ERROR,
+            )
+        # 2. code→docs: every registered family is documented
+        if docs_entries:
+            for entry in registered:
+                if any(doc.matches(entry) for doc in docs_entries):
+                    continue
+                yield Finding(
+                    rule=self.rule_id,
+                    file=entry.file,
+                    line=entry.line,
+                    message=(
+                        f"family {entry.name!r}{'*' if entry.is_pattern else ''} is "
+                        f"registered in code but missing from the metric table in "
+                        f"{self.docs_relpath}"
+                    ),
+                    severity=ERROR,
+                )
+            # 3. docs→code: every documented family exists (only meaningful on
+            #    a full-tree run)
+            if full_tree:
+                for doc in docs_entries:
+                    if any(doc.matches(entry) for entry in used):
+                        continue
+                    yield Finding(
+                        rule=self.rule_id,
+                        file=self.docs_relpath,
+                        line=doc.line,
+                        message=(
+                            f"documented family {doc.name!r}"
+                            f"{'*' if doc.is_pattern else ''} does not appear "
+                            "anywhere in code — stale docs row?"
+                        ),
+                        severity=ERROR,
+                    )
+
+    def _parse_docs(self, path) -> Tuple[List[_Entry], List[Finding]]:
+        try:
+            text = path.read_text()
+        except OSError:
+            return [], [
+                Finding(
+                    rule=self.rule_id,
+                    file=self.docs_relpath,
+                    line=0,
+                    message=f"cannot read {self.docs_relpath}; the metric table "
+                    "cross-check needs it",
+                    severity=ERROR,
+                )
+            ]
+        entries: Dict[str, _Entry] = {}
+        in_table = False
+        for lineno, line in enumerate(text.splitlines(), 1):
+            stripped = line.strip()
+            if stripped.startswith("## "):
+                in_table = stripped.lower().startswith("## metric naming")
+                continue
+            if not in_table or not stripped.startswith("|"):
+                continue
+            cells = [c.strip() for c in stripped.strip("|").split("|")]
+            if len(cells) < 2 or set(cells[0]) <= {"-", " "}:
+                continue
+            if "sanitized" in cells[1]:
+                continue  # the fallback-naming example row, not a family
+            for token in _DOC_TOKEN_RE.findall(cells[1]):
+                entry = _doc_entry(token, self.docs_relpath, lineno)
+                if entry is not None and entry.name not in entries:
+                    entries[entry.name] = entry
+        return list(entries.values()), []

@@ -1,0 +1,157 @@
+"""retry-safety: RetryPolicy wraps only the idempotent allowlist.
+
+PR 6's contract: transport retries are legal only for read-only calls
+(``ping`` / ``collect`` / ``stage_info``) — re-sending a rule program after an
+ambiguous failure can double-apply an enforcement action, which is why rule
+shipping owns its own applied/pending deferral in the control plane instead.
+Structurally:
+
+* every ``self._idempotent(<op>)`` call site must pass a bound method from the
+  idempotent allowlist (``_ping_once`` / ``_collect_once`` /
+  ``_stage_info_once``) — wrapping anything else smuggles a write under the
+  retry loop;
+* the rule-shipping methods (``_rule`` / ``hsk_rule`` / ``dif_rule`` /
+  ``enf_rule`` / ``apply_rules``) must be unreachable from any allowlisted
+  method through the class's own ``self.*()`` call graph, and must not
+  themselves invoke ``self._idempotent`` or ``self.retry.backoff``.
+
+Everything is per-class and lexical — no imports are followed.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Sequence, Set, Tuple
+
+from ..astutil import class_methods, dotted_name
+from ..engine import FileContext, Finding, Rule
+
+#: bound methods _idempotent() may legally wrap
+DEFAULT_IDEMPOTENT = ("_ping_once", "_collect_once", "_stage_info_once")
+#: methods that ship rules to a stage — never retried
+DEFAULT_RULE_SHIP = ("_rule", "hsk_rule", "dif_rule", "enf_rule", "apply_rules")
+
+_WRAPPER = "_idempotent"
+
+
+def _self_calls(fn: ast.AST) -> List[Tuple[str, int]]:
+    """(method, lineno) for every ``self.<method>(...)`` call in ``fn``."""
+    out: List[Tuple[str, int]] = []
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id == "self"
+        ):
+            out.append((node.func.attr, node.lineno))
+    return out
+
+
+class RetrySafetyRule(Rule):
+    rule_id = "retry-safety"
+    description = (
+        "RetryPolicy may wrap only the idempotent allowlist; rule-shipping "
+        "paths must be unreachable from retried code"
+    )
+
+    def __init__(
+        self,
+        idempotent: Sequence[str] = DEFAULT_IDEMPOTENT,
+        rule_ship: Sequence[str] = DEFAULT_RULE_SHIP,
+    ) -> None:
+        self.idempotent = frozenset(idempotent)
+        self.rule_ship = frozenset(rule_ship)
+
+    def visit(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(ctx, node)
+
+    def _check_class(self, ctx: FileContext, cls: ast.ClassDef) -> Iterator[Finding]:
+        methods = {m.name: m for m in class_methods(cls)}
+        if _WRAPPER not in methods and not (self.rule_ship & set(methods)):
+            return  # not a retry-bearing class
+
+        # 1. every _idempotent(<op>) wraps an allowlisted bound method
+        for method in methods.values():
+            for node in ast.walk(method):
+                if not (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "self"
+                    and node.func.attr == _WRAPPER
+                ):
+                    continue
+                if not node.args:
+                    continue
+                op = dotted_name(node.args[0])
+                wrapped = op[len("self.") :] if op and op.startswith("self.") else None
+                if wrapped is None or wrapped not in self.idempotent:
+                    shown = op or ast.unparse(node.args[0])
+                    yield self.finding(
+                        ctx,
+                        node.lineno,
+                        f"{cls.name}.{method.name} wraps {shown!r} in "
+                        f"{_WRAPPER}(); only the idempotent allowlist "
+                        f"({', '.join(sorted(self.idempotent))}) may be "
+                        "retried — writes must not ride the retry loop",
+                    )
+
+        # 2. rule-ship methods unreachable from allowlisted methods, and
+        #    themselves free of retry machinery
+        call_graph: Dict[str, List[Tuple[str, int]]] = {
+            name: _self_calls(m) for name, m in methods.items()
+        }
+        for start in self.idempotent & set(methods):
+            for ship, line, path in _reachable_ship(call_graph, start, self.rule_ship):
+                yield self.finding(
+                    ctx,
+                    line,
+                    f"{cls.name}.{start} (retried via {_WRAPPER}) reaches the "
+                    f"rule-shipping method {ship}() through "
+                    f"{' -> '.join(path)} — a retry would re-send rules",
+                )
+        for ship in self.rule_ship & set(methods):
+            for callee, line in call_graph[ship]:
+                if callee == _WRAPPER:
+                    yield self.finding(
+                        ctx,
+                        line,
+                        f"{cls.name}.{ship} calls {_WRAPPER}() — rule shipping "
+                        "must never run under the retry loop (the applied/"
+                        "pending deferral owns replay)",
+                    )
+            for node in ast.walk(methods[ship]):
+                if (
+                    isinstance(node, ast.Call)
+                    and dotted_name(node.func) == "self.retry.backoff"
+                ):
+                    yield self.finding(
+                        ctx,
+                        node.lineno,
+                        f"{cls.name}.{ship} consults self.retry.backoff — "
+                        "rule shipping must not implement its own retry loop",
+                    )
+
+
+def _reachable_ship(
+    graph: Dict[str, List[Tuple[str, int]]],
+    start: str,
+    ship: frozenset,
+) -> Iterator[Tuple[str, int, List[str]]]:
+    """Yield (ship_method, call_lineno, path) for each rule-ship method
+    reachable from ``start`` via self-calls. Each offending edge is reported
+    once, at the line of the call that crosses into rule-ship territory."""
+    seen: Set[str] = set()
+    stack: List[Tuple[str, List[str]]] = [(start, [start])]
+    while stack:
+        cur, path = stack.pop()
+        if cur in seen:
+            continue
+        seen.add(cur)
+        for callee, line in graph.get(cur, ()):
+            if callee in ship:
+                yield callee, line, path + [callee]
+            elif callee in graph and callee not in seen:
+                stack.append((callee, path + [callee]))

@@ -1177,9 +1177,13 @@ class ControlPlane:
         trigger states on the exporter forever. Also usable as a context
         manager: ``with ControlPlane() as cp: ...``."""
         self.stop()
-        if self._executor is not None:
-            self._executor.shutdown(wait=False, cancel_futures=True)
-            self._executor = None
+        # swap the pool out under _fleet_lock (the lock _fanout_pool creates
+        # it under), then shut it down outside: a concurrent fan-out either
+        # got the old pool before the swap or will lazily build a fresh one
+        with self._fleet_lock:
+            executor, self._executor = self._executor, None
+        if executor is not None:
+            executor.shutdown(wait=False, cancel_futures=True)
         for exporter in self._exporters:
             try:
                 exporter.stop()

@@ -112,7 +112,7 @@ class StageConfigJournal:
             # a missing/torn snapshot (crash before the first rename) means
             # "no restored state", never a refusal to start
             return
-        self._version = self._restored_version = int(doc.get("version", 0))
+        self._version = self._restored_version = int(doc.get("version", 0))  # paio: ignore[lock-discipline] -- _load runs only from __init__, before any concurrent reader can exist
         if doc.get("stage") and self.stage is None:
             self.stage = doc["stage"]
         for wire in doc.get("rules", []):

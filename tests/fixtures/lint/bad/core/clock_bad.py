@@ -1,0 +1,32 @@
+"""Fixture: wall-clock reads in interval math (clock-discipline) plus the
+suppression-handling cases (valid / reasonless / unused)."""
+import time
+import time as walltime
+from datetime import datetime
+
+
+def window_start():
+    return time.time()
+
+
+def cadence():
+    start = walltime.time()
+    stamp = datetime.now()
+    return start, stamp
+
+
+def allowed():
+    t0 = time.monotonic()
+    local = datetime.now(tz=None)
+    return t0, local
+
+
+def suppressed_ok():
+    return time.time()  # paio: ignore[clock-discipline] -- fixture: user-facing timestamp, wall clock intended
+
+
+def reasonless():
+    return time.time()  # paio: ignore[clock-discipline]
+
+
+UNUSED = 1  # paio: ignore[clock-discipline] -- fixture: nothing on this line to suppress

@@ -1,0 +1,22 @@
+"""Fixture: lock-free write to a lock-guarded attribute (lock-discipline)."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+        self._rate = 0.0
+
+    def incr(self):
+        with self._lock:
+            self._count += 1
+
+    def reset(self):
+        self._count = 0
+
+    def _rebuild_locked(self, n):
+        self._count = n
+
+    def set_rate(self, r):
+        self._rate = r

@@ -1,0 +1,9 @@
+"""Fixture schema: a rule dataclass with a field the codec forgot."""
+from dataclasses import dataclass
+
+
+@dataclass
+class HousekeepingRule:
+    op: str
+    channel: str
+    priority: int

@@ -1,0 +1,10 @@
+"""Fixture schema: StatsSnapshot with a field the codec forgot."""
+from dataclasses import dataclass
+
+
+@dataclass
+class StatsSnapshot:
+    channel: str
+    ops: int
+    bytes: int
+    dropped: int

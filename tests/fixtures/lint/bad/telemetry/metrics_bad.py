@@ -1,0 +1,10 @@
+"""Fixture: unregistered + undocumented metric families (metric-registry)."""
+
+
+def publish(registry):
+    registry.inc("x.y.z")
+    return "paio_phantom_family"
+
+
+def register(registry):
+    registry.describe("x.y.z", "paio_undocumented_family")

@@ -1,0 +1,18 @@
+"""Fixture codec: drops StatsSnapshot.dropped and HousekeepingRule.priority
+on both encode and decode (codec-coverage)."""
+
+
+def encode_stats(s):
+    return [s.channel, s.ops, s.bytes]
+
+
+def decode_stats(payload, StatsSnapshot):
+    return StatsSnapshot(channel=payload[0], ops=payload[1], bytes=payload[2])
+
+
+def encode_rule(r):
+    return [r.op, r.channel]
+
+
+def decode_rule(payload, HousekeepingRule):
+    return HousekeepingRule(op=payload[0], channel=payload[1])

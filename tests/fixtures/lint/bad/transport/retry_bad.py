@@ -1,0 +1,35 @@
+"""Fixture: rule shipping riding the retry loop (retry-safety)."""
+
+
+class Handle:
+    def __init__(self, conn):
+        self.conn = conn
+        self.retry = None
+
+    def _ping_once(self):
+        return self.conn.ping()
+
+    def _collect_once(self):
+        return self._refresh()
+
+    def _refresh(self):
+        return self.enf_rule(None)
+
+    def _idempotent(self, op):
+        return op()
+
+    def ping(self):
+        return self._idempotent(self._ping_once)
+
+    def push_rule(self, rule):
+        return self._idempotent(self._send_rule)
+
+    def _send_rule(self):
+        return True
+
+    def enf_rule(self, rule):
+        return self._idempotent(self._ping_once)
+
+    def apply_rules(self, rules):
+        self.retry.backoff(0)
+        return []

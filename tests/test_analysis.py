@@ -1,0 +1,235 @@
+"""Golden-fixture tests for the repro.analysis lint engine + policy verifier.
+
+Every rule is pinned to exact (rule-id, line) findings on a known-bad fixture
+tree under ``tests/fixtures/lint/bad/``, and the real ``src/`` tree must come
+back clean (the acceptance bar for ``python -m repro.analysis --strict``).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import LintEngine, default_rules
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.policyver import verify_paths, verify_policy_file
+
+REPO = Path(__file__).resolve().parent.parent
+BAD = REPO / "tests" / "fixtures" / "lint" / "bad"
+POLICY_FIXTURES = REPO / "tests" / "fixtures" / "policies"
+
+
+def run_lint(*paths):
+    return LintEngine(default_rules()).run([str(p) for p in paths])
+
+
+def pairs(report, rule=None):
+    """(relpath-basename, line) pairs, optionally filtered by rule id."""
+    return sorted(
+        (Path(f.file).name, f.line)
+        for f in report.findings
+        if rule is None or f.rule == rule
+    )
+
+
+# --------------------------------------------------------------------------- #
+# per-rule golden fixtures                                                     #
+# --------------------------------------------------------------------------- #
+def test_clock_discipline_exact_findings():
+    report = run_lint(BAD / "core" / "clock_bad.py")
+    assert pairs(report, "clock-discipline") == [
+        ("clock_bad.py", 9),   # time.time()
+        ("clock_bad.py", 13),  # aliased walltime.time()
+        ("clock_bad.py", 14),  # argless datetime.now()
+        ("clock_bad.py", 29),  # reasonless suppression does not suppress
+    ]
+    # monotonic + tz-carrying datetime.now(tz=...) stay clean
+    assert not [f for f in report.findings if f.line in (19, 20)]
+
+
+def test_suppression_handling():
+    report = run_lint(BAD / "core" / "clock_bad.py")
+    # line 25: valid reasoned suppression swallows the finding
+    assert [(f.line, s.reason) for f, s in report.suppressed] == [
+        (25, "fixture: user-facing timestamp, wall clock intended")
+    ]
+    # line 29: reason missing -> suppression-syntax error, finding survives
+    assert pairs(report, "suppression-syntax") == [("clock_bad.py", 29)]
+    # line 32: suppression that matches nothing -> warning
+    assert pairs(report, "unused-suppression") == [("clock_bad.py", 32)]
+    assert report.exit_code(strict=False) == 1
+
+
+def test_lock_discipline_exact_findings():
+    report = run_lint(BAD / "core" / "locks_bad.py")
+    assert pairs(report, "lock-discipline") == [("locks_bad.py", 16)]
+    msgs = [f.message for f in report.findings if f.rule == "lock-discipline"]
+    assert "Counter.reset" in msgs[0] and "_count" in msgs[0]
+    # _rebuild_locked (caller-holds-lock convention) and the never-guarded
+    # _rate write are both clean
+    assert not [f for f in report.findings if f.line in (19, 22)]
+
+
+def test_codec_coverage_exact_findings():
+    report = run_lint(BAD)  # needs the stats/rules/codec trio together
+    assert pairs(report, "codec-coverage") == [
+        ("codec.py", 5),   # encode_stats misses .dropped
+        ("codec.py", 9),   # decode_stats misses dropped=
+        ("codec.py", 13),  # encode_rule misses .priority
+        ("codec.py", 17),  # decode_rule misses priority=
+    ]
+
+
+def test_retry_safety_exact_findings():
+    report = run_lint(BAD / "transport" / "retry_bad.py")
+    assert pairs(report, "retry-safety") == [
+        ("retry_bad.py", 16),  # _collect_once -> _refresh -> enf_rule
+        ("retry_bad.py", 25),  # _idempotent(self._send_rule) off-allowlist
+        ("retry_bad.py", 31),  # enf_rule calls _idempotent
+        ("retry_bad.py", 34),  # apply_rules consults retry.backoff
+    ]
+
+
+def test_metric_registry_exact_findings():
+    report = run_lint(BAD / "telemetry" / "metrics_bad.py")
+    assert pairs(report, "metric-registry") == [
+        ("metrics_bad.py", 6),   # used, never registered
+        ("metrics_bad.py", 10),  # registered, not in docs table
+    ]
+    msgs = sorted(f.message for f in report.findings if f.rule == "metric-registry")
+    assert "never registered" in msgs[0]
+    assert "missing from the metric table" in msgs[1]
+
+
+def test_clean_tree_yields_zero_findings():
+    report = run_lint(REPO / "src" / "repro")
+    assert report.findings == [], "\n".join(f.format() for f in report.findings)
+    # the one deliberate suppression in the tree carries its reason
+    assert all(s.reason for _, s in report.suppressed)
+    assert report.exit_code(strict=True) == 0
+
+
+# --------------------------------------------------------------------------- #
+# offline policy verifier                                                      #
+# --------------------------------------------------------------------------- #
+def test_verifier_flags_contradictory_triggers():
+    findings = verify_policy_file(
+        str(POLICY_FIXTURES / "contradictory_triggers.json")
+    )
+    assert [f.rule for f in findings] == ["policy-contradiction"]
+    msg = findings[0].message
+    assert "squeeze_batch" in msg and "boost_batch" in msg and "rate" in msg
+
+
+def test_verifier_flags_dead_hysteresis():
+    findings = verify_policy_file(str(POLICY_FIXTURES / "dead_hysteresis.json"))
+    assert [f.rule for f in findings] == ["policy-dead-hysteresis"]
+    assert "latch_forever" in findings[0].message
+    assert "never release" in findings[0].message
+
+
+def test_verifier_names_both_defects_over_fixture_dir():
+    findings, files = verify_paths([str(POLICY_FIXTURES)])
+    assert files == 2
+    assert sorted(f.rule for f in findings) == [
+        "policy-contradiction",
+        "policy-dead-hysteresis",
+    ]
+
+
+def test_verifier_examples_policies_clean():
+    findings, files = verify_paths([str(REPO / "examples" / "policies")])
+    assert files >= 4
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_verifier_unknown_metric_is_warning(tmp_path):
+    pol = tmp_path / "typo.json"
+    pol.write_text(
+        json.dumps(
+            {
+                "policy": "typo_metric",
+                "flows": [
+                    {
+                        "name": "f",
+                        "scope": "global",
+                        "match": {"tenant": "t"},
+                        "objects": [
+                            {
+                                "kind": "drl",
+                                "id": "0",
+                                "params": {"rate": "10MiB/s", "demote_rate": "1MiB/s"},
+                            }
+                        ],
+                    }
+                ],
+                "triggers": [
+                    {
+                        "name": "watch_typo",
+                        "when": {
+                            "metric": "stage.s0.upp",
+                            "op": ">",
+                            "value": 1,
+                            "window": "1s",
+                        },
+                        "do": [{"op": "demote", "flow": "f"}],
+                    }
+                ],
+            }
+        )
+    )
+    findings = verify_policy_file(str(pol))
+    by_rule = {f.rule for f in findings}
+    assert "policy-unknown-metric" in by_rule
+    unk = next(f for f in findings if f.rule == "policy-unknown-metric")
+    assert unk.severity == "warning" and "stage.s0.upp" in unk.message
+
+
+# --------------------------------------------------------------------------- #
+# CLI                                                                          #
+# --------------------------------------------------------------------------- #
+def test_cli_strict_src_exits_zero(capsys):
+    rc = cli_main(["--strict", str(REPO / "src" / "repro")])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 error(s), 0 warning(s)" in out
+
+
+def test_cli_bad_fixture_exits_nonzero_with_json(capsys):
+    rc = cli_main(["--json", str(BAD)])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    rules_seen = {f["rule"] for f in doc["findings"]}
+    assert {
+        "clock-discipline",
+        "lock-discipline",
+        "metric-registry",
+        "codec-coverage",
+        "retry-safety",
+        "suppression-syntax",
+    } <= rules_seen
+    assert doc["suppressed"] and doc["suppressed"][0]["reason"]
+
+
+def test_cli_policies_mode(capsys):
+    rc = cli_main(["policies", str(POLICY_FIXTURES)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "policy-contradiction" in out and "policy-dead-hysteresis" in out
+    rc = cli_main(["policies", str(REPO / "examples" / "policies")])
+    assert rc == 0
+
+
+def test_cli_list_rules(capsys):
+    rc = cli_main(["--list-rules"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    for rid in (
+        "clock-discipline",
+        "lock-discipline",
+        "metric-registry",
+        "codec-coverage",
+        "retry-safety",
+        "suppression-syntax",
+        "unused-suppression",
+    ):
+        assert rid in out
