@@ -1,0 +1,199 @@
+"""Sharded logical stage: flow-hash router, global fair share, kill -9 demo.
+
+A single Python stage process tops out around one core (ROADMAP item 1), so
+one *logical* stage is spread over N local ``StageServer`` shard processes
+and a :class:`~repro.distributed.ShardRouter` presents them as one stage
+again: requests hash by flow (rendezvous/HRW), each flow lives on exactly one
+shard, and the checked-in ``examples/policies/sharded_fairshare.json`` policy
+declares ``shards: 3`` so its three ``scope: global`` tenant flows bind to
+the shard stages ``web/0 … web/2`` — the control plane max-min-shares the
+capacity across tenants and splits each tenant's grant across the shards by
+measured throughput, so a flow's grant concentrates on its owner shard.
+
+The run then kill -9's the shard owning ``tenant_a``'s flow mid-traffic and
+asserts the failover story end to end:
+
+1. the enforce call in flight when the shard dies completes — the router
+   re-homes exactly the dead shard's flows to their new HRW owners;
+2. the fair share re-converges onto the survivors within ``--tolerance``;
+3. after the shard restarts, the control plane replays its deferred rules,
+   the router's readmit gate lets it back in only once replay drained, and
+   the flow re-homes back to its original owner with the full-fleet fair
+   share restored.
+
+Exit 1 if any phase misses its tolerance — usable as a smoke gate.
+
+Run: PYTHONPATH=src python examples/sharded_fairshare.py [--shards 3]
+     [--seconds 8] [--tolerance 0.02]
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import os
+import sys
+import tempfile
+import time
+from typing import Dict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MiB = float(1 << 20)
+POLICY_FILE = os.path.join(
+    os.path.dirname(__file__), "policies", "sharded_fairshare.json"
+)
+DEMANDS = {"tenant_a": 60 * MiB, "tenant_b": 40 * MiB, "tenant_c": 20 * MiB}
+
+
+def _serve_shard(name: str, socket_path: str, seconds: float) -> None:
+    """One shard process: a plain Stage behind the UDS transport. The shard
+    id on the server makes misrouted enforce batches a loud error."""
+    from repro.core import Stage
+    from repro.transport.server import StageServer
+
+    StageServer(Stage(name), socket_path, shard_id=name).start()
+    time.sleep(seconds + 30.0)
+
+
+def _spawn(mp, name: str, path: str, seconds: float, children: Dict) -> None:
+    if os.path.exists(path):
+        os.unlink(path)  # stale socket left by a kill -9
+    child = mp.Process(target=_serve_shard, args=(name, path, seconds), daemon=True)
+    child.start()
+    children[name] = child
+    t0 = time.monotonic()
+    while not os.path.exists(path):
+        if time.monotonic() - t0 > 10.0:
+            raise RuntimeError(f"shard {name} never bound {path}")
+        time.sleep(0.01)
+
+
+def _grant_sums(router) -> Dict[str, float]:
+    """Per-tenant DRL rate summed over live shards — split_flow_rate
+    preserves each flow's total grant across its members."""
+    sums = {t: 0.0 for t in DEMANDS}
+    for info in router.stage_info()["shards"].values():
+        for tenant in sums:
+            obj = ((info.get("channels") or {}).get(tenant) or {}).get("objects", {})
+            if "0" in obj:
+                sums[tenant] += obj["0"]["rate"]
+    return sums
+
+
+def _fair(sums: Dict[str, float], tolerance: float) -> bool:
+    return all(abs(sums[t] - d) <= tolerance * d for t, d in DEMANDS.items())
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--shards", type=int, default=3)
+    ap.add_argument("--seconds", type=float, default=8.0)
+    ap.add_argument("--tolerance", type=float, default=0.02)
+    args = ap.parse_args()
+
+    import json
+
+    from repro.core import Context, ControlPlane, RequestType
+    from repro.distributed import ShardRouter
+
+    with open(POLICY_FILE) as f:
+        policy = json.load(f)
+    policy["shards"] = args.shards
+
+    mp = multiprocessing.get_context("fork")
+    children: Dict = {}
+    exit_code = 0
+    with tempfile.TemporaryDirectory() as d:
+        paths = [f"{d}/web{i}.sock" for i in range(args.shards)]
+        for i in range(args.shards):
+            _spawn(mp, f"web/{i}", paths[i], args.seconds, children)
+        cp = ControlPlane(probe_interval=0.05)
+        router = None
+        try:
+            names = cp.connect_sharded("web", paths)
+            cp.install_policy(policy)
+            router = ShardRouter.connect_all(
+                "web",
+                paths,
+                probe_interval=0.05,
+                readmit_gate=lambda sid: (
+                    cp.stage_up(sid) and cp.fleet_status()[sid]["deferred_rules"] == 0
+                ),
+            )
+            ctxs = [
+                Context(0, RequestType.write, 64 << 10, tenant=t)
+                for t in DEMANDS
+                for _ in range(8)
+            ]
+
+            def tick() -> None:
+                router.enforce_batch(ctxs)
+                cp.run_once()
+
+            def converge(label: str, deadline_s: float, check) -> bool:
+                deadline = time.monotonic() + deadline_s
+                while time.monotonic() < deadline:
+                    tick()
+                    if check():
+                        print(f"  {label}: ok ({_fmt(_grant_sums(router))})")
+                        return True
+                    time.sleep(0.02)
+                print(f"  {label}: FAILED ({_fmt(_grant_sums(router))})", file=sys.stderr)
+                return False
+
+            def _fmt(sums: Dict[str, float]) -> str:
+                return ", ".join(f"{t}={v / MiB:.1f}MiB/s" for t, v in sums.items())
+
+            print(f"[1/4] {len(names)} shards up, policy installed; converging fair share")
+            if not converge("fair share", args.seconds, lambda: _fair(_grant_sums(router), args.tolerance)):
+                return 1
+
+            ctx_a = Context(0, RequestType.write, 64 << 10, tenant="tenant_a")
+            victim = router.owner_of(ctx_a)
+            print(f"[2/4] kill -9 {victim} (owner of tenant_a's flow), mid-traffic")
+            children[victim].kill()
+            children[victim].join(timeout=10.0)
+            results = router.enforce_batch(ctxs)
+            assert len(results) == len(ctxs), "enforce lost requests across the death"
+            print(
+                f"  re-homed: tenant_a now on {router.owner_of(ctx_a)}, "
+                f"failovers={router.failovers}, live={list(router.shards)}"
+            )
+
+            print(f"[3/4] converging survivor fair share (tolerance {args.tolerance:.0%})")
+            if not converge(
+                "survivor fair share",
+                args.seconds,
+                lambda: not cp.stage_up(victim) and _fair(_grant_sums(router), args.tolerance),
+            ):
+                return 1
+
+            print(f"[4/4] restart {victim}; waiting for replay + readmit")
+            _spawn(mp, victim, paths[int(victim.split("/")[1])], args.seconds, children)
+            ok = converge(
+                "recovery",
+                args.seconds + 10.0,
+                lambda: (
+                    cp.stage_up(victim)
+                    and cp.fleet_status()[victim]["deferred_rules"] == 0
+                    and victim in router.shards
+                    and router.owner_of(ctx_a) == victim
+                    and _fair(_grant_sums(router), args.tolerance)
+                ),
+            )
+            if not ok:
+                return 1
+            deferred = sum(s["deferred_rules"] for s in cp.fleet_status().values())
+            print(f"PASS: zero deferred rules fleet-wide ({deferred}), flow back on {victim}")
+        finally:
+            if router is not None:
+                router.close()
+            cp.close()
+            for child in children.values():
+                if child.is_alive():
+                    child.kill()
+    return exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,5 +58,11 @@ python scripts/transport_smoke.py
 echo "== chaos smoke (fixed-seed fault plan + kill -9/restart: fleet converges, snapshots restore, retry/breaker metrics scraped) =="
 python scripts/chaos_smoke.py
 
+echo "== shard chaos (kill -9 one shard mid-traffic: router re-homes, fair share within 2%, deferred rules drain) =="
+python -m pytest -q tests/test_chaos.py -k shard
+
+echo "== shard scalability (4-shard router >= 2.5x admitted throughput vs 1 shard) =="
+python -m benchmarks.bench_stage_scalability --shards 4 --smoke
+
 echo "== per-RPC wire bench (pipelined binary >= 3x JSON-line per rule RPC) =="
 python -m benchmarks.bench_fleet_control --rpc --smoke

@@ -67,6 +67,7 @@ from .rules import (
     rules_from_wire,
     rules_to_wire,
 )
+from .shard import ShardMap, flow_key, flow_token, logical_stage_name, shard_stage_names
 from .snapshot import StageConfigJournal
 from .stage import Stage
 from .stats import StageStats, StatsSnapshot
@@ -107,6 +108,7 @@ __all__ = [
     "RemoteStageHandle",
     "RequestType",
     "Result",
+    "ShardMap",
     "Stage",
     "StageConfigJournal",
     "StageServer",
@@ -119,6 +121,9 @@ __all__ = [
     "VirtualClock",
     "build_context",
     "current_context",
+    "flow_key",
+    "flow_token",
+    "logical_stage_name",
     "max_min_fair_share",
     "murmur3_32",
     "murmur3_32_batch",
@@ -127,6 +132,7 @@ __all__ = [
     "rule_from_wire",
     "rules_from_wire",
     "rules_to_wire",
+    "shard_stage_names",
     "split_flow_rate",
     "tail_latency_allocation",
     "token_for",

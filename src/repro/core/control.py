@@ -18,7 +18,7 @@ import time
 import weakref
 from concurrent.futures import ThreadPoolExecutor, wait as futures_wait
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.ft.monitor import HeartbeatMonitor, StragglerReport
 
@@ -35,6 +35,7 @@ from repro.transport.server import StageServer
 
 from .clock import Clock, DEFAULT_CLOCK
 from .rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from .shard import shard_stage_names
 from .stage import Stage
 from .stats import StageStats, fleet_view
 
@@ -305,6 +306,25 @@ class ControlPlane:
                 registry=self._registry,
             ),
         )
+
+    def connect_sharded(
+        self,
+        logical: str,
+        socket_paths: Sequence[str],
+        timeout: float = 5.0,
+        protocol: str = "auto",
+    ) -> List[str]:
+        """Register the N shard stages of logical stage ``logical`` (shard
+        router deployment: one stage process per socket path). Each shard
+        registers as ``<logical>/<i>`` — an ordinary stage to everything
+        downstream, so liveness, deferred-rule replay, and ``scope: global``
+        grant splitting apply per shard with no special casing; a policy's
+        ``shards: N`` stanza binds its global flows to exactly these names.
+        Returns the shard stage names."""
+        names = shard_stage_names(logical, len(socket_paths))
+        for name, path in zip(names, socket_paths):
+            self.connect(name, path, timeout=timeout, protocol=protocol)
+        return names
 
     def _breaker_for(self, name: str) -> Optional[CircuitBreaker]:
         if not self._breaker_enabled:

@@ -1,0 +1,169 @@
+"""Shard map: rendezvous (HRW) flow placement for the sharded data plane.
+
+One logical stage is spread over N local stage processes ("shards") to escape
+the GIL (ROADMAP item 1; the paper's Fig. 4 single-stage scaling assumes C++
+threads — our Python stage tops out around one core). Requests are placed by
+*flow*: the classifier tuple that already keys route resolution
+(``workflow_id``, ``request_type``, ``request_context``, ``tenant``) hashes to
+a 32-bit flow token (the same murmur3 tokenizer differentiation uses), and the
+token picks a shard by **highest-random-weight** (rendezvous) hashing:
+
+    owner(token) = argmax over shards of murmur3_32(token_le32, seed(shard))
+
+HRW gives the property the failover path is built on: removing a shard moves
+*only that shard's flows* (every surviving shard's weight for every token is
+unchanged, so any flow whose argmax survives keeps its owner), and adding a
+shard steals only the flows the new shard now wins. No consistent-hash ring,
+no token ranges to rebalance — the map is a pure function of the live shard
+set.
+
+Naming convention: shard stages of logical stage ``web`` register on the
+control plane as ``web/0`` … ``web/N-1`` (:func:`shard_stage_names`), which is
+what the policy layer's ``shards: N`` stanza validates against.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .context import Context
+from .hashing import _murmur3_32_fixed, murmur3_32, token_for
+
+#: separator between a logical stage name and its shard ordinal
+SHARD_SEP = "/"
+
+#: seed for deriving per-shard weight seeds from shard ids (any fixed value;
+#: distinct from the classifier-token seed so flow tokens never collide with
+#: shard seeds by construction)
+_SHARD_SEED = 0x51A2D
+
+
+def shard_stage_names(logical: str, n: int) -> List[str]:
+    """Control-plane stage names for the ``n`` shards of ``logical``."""
+    if n < 1:
+        raise ValueError(f"shard count must be >= 1, got {n}")
+    return [f"{logical}{SHARD_SEP}{i}" for i in range(n)]
+
+
+def logical_stage_name(shard_stage: str) -> str:
+    """Inverse of :func:`shard_stage_names`: ``web/3`` → ``web`` (a name with
+    no shard ordinal maps to itself)."""
+    base, sep, ordinal = shard_stage.rpartition(SHARD_SEP)
+    if sep and ordinal.isdigit():
+        return base
+    return shard_stage
+
+
+def flow_key(ctx: Context) -> Tuple:
+    """The classifier tuple that identifies a flow for placement — identical
+    to the stage's route-cache key, so one flow always means one channel
+    resolution AND one shard owner."""
+    return (ctx.workflow_id, ctx.request_type, ctx.request_context, ctx.tenant)
+
+
+def flow_token(ctx: Context) -> int:
+    """32-bit flow token of a request (murmur3 over the packed flow key)."""
+    return token_for(flow_key(ctx))
+
+
+class ShardMap:
+    """Rendezvous placement of flow tokens over a mutable set of shard ids.
+
+    ``shard_of`` is the scalar owner lookup; ``shard_of_batch`` runs the same
+    weight computation vectorized (one :func:`_murmur3_32_fixed` pass per
+    shard over the token column — bit-exact with the scalar path, asserted by
+    the property tests). Mutations (``add`` / ``remove``) are copy-on-write
+    over the shard list so concurrent lookups never see a half-updated map.
+    """
+
+    def __init__(self, shards: Sequence[str] = ()) -> None:
+        self._shards: Tuple[str, ...] = ()
+        self._seeds: Dict[str, int] = {}
+        for s in shards:
+            self.add(s)
+
+    # -- membership ----------------------------------------------------------
+    @property
+    def shards(self) -> Tuple[str, ...]:
+        return self._shards
+
+    def __len__(self) -> int:
+        return len(self._shards)
+
+    def __contains__(self, shard_id: str) -> bool:
+        return shard_id in self._seeds
+
+    def add(self, shard_id: str) -> None:
+        if shard_id in self._seeds:
+            return
+        seeds = dict(self._seeds)
+        seeds[shard_id] = murmur3_32(shard_id.encode("utf-8"), _SHARD_SEED)
+        self._seeds = seeds
+        self._shards = tuple(sorted(seeds))
+
+    def remove(self, shard_id: str) -> None:
+        if shard_id not in self._seeds:
+            return
+        seeds = dict(self._seeds)
+        del seeds[shard_id]
+        self._seeds = seeds
+        self._shards = tuple(sorted(seeds))
+
+    # -- placement -----------------------------------------------------------
+    def weight(self, token: int, shard_id: str) -> int:
+        """HRW weight of ``shard_id`` for ``token`` (pure; independent of the
+        other members — the whole point of rendezvous placement)."""
+        return murmur3_32(
+            (token & 0xFFFFFFFF).to_bytes(4, "little"), self._seeds[shard_id]
+        )
+
+    def shard_of(self, token: int) -> str:
+        """Owner of ``token``: the highest-weight shard (ties broken by shard
+        id so the owner is deterministic even on 32-bit collisions)."""
+        shards = self._shards
+        if not shards:
+            raise LookupError("shard map is empty (every shard is down)")
+        return max(shards, key=lambda s: (self.weight(token, s), s))
+
+    def shard_of_batch(self, tokens: Sequence[int]) -> List[str]:
+        """Vectorized :meth:`shard_of` — elementwise equal to the scalar path.
+
+        One fixed-width murmur pass per shard over the token column (tokens
+        are u32, one word each), then an argmax across the shard axis.
+        """
+        import numpy as np
+
+        shards = self._shards
+        if not shards:
+            raise LookupError("shard map is empty (every shard is down)")
+        n = len(tokens)
+        if n == 0:
+            return []
+        if len(shards) == 1:
+            return [shards[0]] * n
+        words = (np.asarray(tokens, dtype=np.uint64) & 0xFFFFFFFF).reshape(n, 1)
+        weights = np.empty((len(shards), n), dtype=np.uint64)
+        for row, s in enumerate(shards):
+            weights[row] = _murmur3_32_fixed(words, n, 1, self._seeds[s])
+        # ties break toward the lexicographically larger shard id, matching
+        # the scalar (weight, shard_id) max key: among equal weights, argmax
+        # over the reversed row order picks the later (sorted-larger) shard
+        best = (len(shards) - 1) - np.argmax(weights[::-1], axis=0)
+        return [shards[int(i)] for i in best]
+
+    def owner_of_ctx(self, ctx: Context) -> str:
+        return self.shard_of(flow_token(ctx))
+
+
+def placement_moves(
+    before: ShardMap, after: ShardMap, tokens: Sequence[int]
+) -> Dict[int, Tuple[str, Optional[str]]]:
+    """Tokens whose owner differs between two maps → ``(old, new)`` (``new``
+    is None when ``after`` is empty). Test/diagnostic helper for the HRW
+    minimal-movement property."""
+    moves: Dict[int, Tuple[str, Optional[str]]] = {}
+    for t in tokens:
+        old = before.shard_of(t)
+        new = after.shard_of(t) if len(after) else None
+        if old != new:
+            moves[t] = (old, new)
+    return moves

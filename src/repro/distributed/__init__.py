@@ -1,4 +1,16 @@
-"""Distribution: logical sharding rules, compressed collectives, pipeline."""
+"""Distribution: logical sharding rules, compressed collectives, pipeline,
+and the data-plane shard router (one logical stage over N stage processes)."""
+from .router import AllShardsDownError, LocalShardHandle, ShardRouter
 from .sharding import DEFAULT_RULES, active_mesh, logical_to_spec, lsc, named_sharding, sharding_rules
 
-__all__ = ["DEFAULT_RULES", "active_mesh", "logical_to_spec", "lsc", "named_sharding", "sharding_rules"]
+__all__ = [
+    "AllShardsDownError",
+    "DEFAULT_RULES",
+    "LocalShardHandle",
+    "ShardRouter",
+    "active_mesh",
+    "logical_to_spec",
+    "lsc",
+    "named_sharding",
+    "sharding_rules",
+]

@@ -25,6 +25,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.objects import OBJECT_KINDS
 from repro.core.rules import DifferentiationRule, EnforcementRule, HousekeepingRule
+from repro.core.shard import shard_stage_names
 
 from .dsl import (
     Action,
@@ -173,7 +174,22 @@ def _bind_flows(
     bindings: Dict[str, _FlowBinding] = {}
     for flow in policy.flows:
         if flow.is_global():
-            if infos is None:
+            if policy.shards is not None:
+                # sharded logical stage: the global flow spans exactly the
+                # policy's shard stages (<stage>/0 … <stage>/N-1) — member
+                # names are deterministic, so even an offline compile binds
+                # real members; an online compile additionally proves every
+                # shard is registered
+                members = shard_stage_names(policy.stage, policy.shards)
+                if infos is not None:
+                    missing = [m for m in members if m not in infos]
+                    if missing:
+                        raise PolicyError(
+                            f"flow {flow.name!r}: policy declares shards={policy.shards} "
+                            f"but shard stages {missing} are not registered "
+                            f"(registered: {sorted(infos)})"
+                        )
+            elif infos is None:
                 # offline compile: structure-check against a placeholder
                 # member; existence resolves when installed against live infos
                 members = [UNRESOLVED_STAGE]

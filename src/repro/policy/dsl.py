@@ -230,6 +230,11 @@ class Policy:
     flows: Tuple[Flow, ...] = ()
     triggers: Tuple[TriggerSpec, ...] = ()
     objective: Optional[Objective] = None
+    #: when set, ``stage`` is a *logical* sharded stage: its N shard stages
+    #: (``<stage>/0`` … ``<stage>/N-1``, the shard-router naming convention)
+    #: must all be registered, and ``scope: global`` flows bind to exactly
+    #: those members instead of every stage on the plane
+    shards: Optional[int] = None
 
     def flow(self, name: str) -> Optional[Flow]:
         for f in self.flows:
@@ -354,12 +359,23 @@ def policy_from_dict(d: Mapping[str, Any]) -> Policy:
         if not kind:
             raise PolicyError("objective missing 'kind'")
         objective = Objective(kind=str(kind), params=_freeze(od))
+    shards = d.get("shards")
+    if shards is not None:
+        try:
+            shards = int(shards)
+        except (TypeError, ValueError):
+            raise PolicyError(f"'shards' must be an integer, got {d.get('shards')!r}") from None
+        if shards < 1:
+            raise PolicyError(f"'shards' must be >= 1, got {shards}")
+        if not d.get("stage"):
+            raise PolicyError("'shards' needs a policy-level 'stage' (the logical stage name)")
     return Policy(
         name=str(name),
         stage=d.get("stage"),
         flows=tuple(flows),
         triggers=tuple(_trigger_from_dict(td, i) for i, td in enumerate(d.get("triggers") or ())),
         objective=objective,
+        shards=shards,
     )
 
 
@@ -368,6 +384,8 @@ def policy_to_dict(p: Policy) -> Dict[str, Any]:
     d: Dict[str, Any] = {"policy": p.name}
     if p.stage:
         d["stage"] = p.stage
+    if p.shards is not None:
+        d["shards"] = p.shards
     if p.flows:
         d["flows"] = [
             {
@@ -503,13 +521,19 @@ def parse_policy_text(text: str, name: str = "policy") -> Policy:
 
 def _parse_text_line(line: str, d: Dict[str, Any]) -> None:
     if line.startswith("policy "):
+        # policy <name> [stage <stage> [shards <n>]]
         toks = line.split()
         d["policy"] = toks[1]
         if len(toks) >= 4 and toks[2] == "stage":
             d["stage"] = toks[3]
+            if len(toks) >= 6 and toks[4] == "shards":
+                d["shards"] = toks[5]
         return
     if line.startswith("stage "):
         d["stage"] = line.split(None, 1)[1].strip()
+        return
+    if line.startswith("shards "):
+        d["shards"] = line.split(None, 1)[1].strip()
         return
     if line.startswith("for "):
         head, _, tail = line[4:].partition(":")

@@ -369,6 +369,63 @@ def decode_stats(payload: bytes) -> StageStats:
     return StageStats(per_channel=per_channel)
 
 
+# --------------------------------------------------------------------------- #
+# enforce-batch codec (shard router → shard stage)                             #
+# --------------------------------------------------------------------------- #
+#: fixed numeric fields of one enforce group: workflow_id, request_type,
+#: size, count (how many identical requests the group stands for)
+_ENF_GROUP = struct.Struct("<qqqq")
+
+
+def encode_enforce_batch(shard_id: str, groups) -> bytes:
+    """Encode a shard-addressed enforce batch.
+
+    ``groups`` is a sequence of ``(workflow_id, request_type, size,
+    request_context, tenant, count)`` tuples — one entry per *flow* in the
+    batch, not per request. The router groups a batch by flow before
+    dispatch, so a 4096-request batch over a handful of flows crosses the
+    socket as a handful of group records; request payload bytes never do
+    (ROADMAP's "only control frames need the socket").
+
+    ``shard_id`` is the frame-level addressee: the serving shard rejects a
+    mismatch, which turns a router placement bug into a loud error instead
+    of silently enforcing on the wrong shard's channels.
+    """
+    buf = bytearray()
+    _write_str(buf, shard_id)
+    buf += _U32.pack(len(groups))
+    for workflow_id, request_type, size, request_context, tenant, count in groups:
+        buf += _ENF_GROUP.pack(workflow_id, int(request_type), size, count)
+        _write_str(buf, request_context)
+        _write_opt_str(buf, tenant)
+    return bytes(buf)
+
+
+def decode_enforce_batch(payload: bytes):
+    """Inverse of :func:`encode_enforce_batch` → ``(shard_id, groups)``."""
+    r = _Reader(payload)
+    shard_id = r.str_()
+    n = r.u32()
+    groups = []
+    for _ in range(n):
+        workflow_id, request_type, size, count = _ENF_GROUP.unpack(r.take(_ENF_GROUP.size))
+        request_context = r.str_()
+        tenant = _read_opt_str(r)
+        if count < 0:
+            raise TransportError(f"negative enforce group count {count}")
+        groups.append((workflow_id, request_type, size, request_context, tenant, count))
+    if r.off != len(payload):
+        raise TransportError(f"{len(payload) - r.off} trailing bytes after enforce batch")
+    return shard_id, groups
+
+
+def decode_int(payload: bytes) -> int:
+    value = unpack_value(payload)
+    if isinstance(value, bool) or not isinstance(value, int):
+        raise TransportError(f"expected int reply, got {type(value).__name__}")
+    return value
+
+
 def decode_bool(payload: bytes) -> bool:
     value = unpack_value(payload)
     if not isinstance(value, bool):

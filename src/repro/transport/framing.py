@@ -37,6 +37,7 @@ OP_STAGE_INFO = 0x01
 OP_RULE = 0x02
 OP_COLLECT = 0x03
 OP_PING = 0x04
+OP_ENFORCE = 0x05
 
 # flags
 FLAG_REPLY = 0x01

@@ -54,9 +54,17 @@ from repro.core.rules import (
 )
 from repro.core.stats import StageStats
 
-from .codec import TransportError, decode_bool, decode_stats, encode_rule, unpack_value
+from .codec import (
+    TransportError,
+    decode_bool,
+    decode_int,
+    decode_stats,
+    encode_enforce_batch,
+    encode_rule,
+    unpack_value,
+)
 from .connection import PipelinedConnection
-from .framing import HELLO_LINE, OP_COLLECT, OP_PING, OP_RULE, OP_STAGE_INFO
+from .framing import HELLO_LINE, OP_COLLECT, OP_ENFORCE, OP_PING, OP_RULE, OP_STAGE_INFO
 from .server import snapshot_from_wire
 
 #: exception types meaning "the transport/stage died" — kept here so the
@@ -243,6 +251,27 @@ class _PipelinedCollect:
             raise
         self._handle._record_success()
         return stats
+
+
+class _PipelinedEnforce:
+    """In-flight pipelined enforce batch (see
+    :meth:`RemoteStageHandle.enforce_groups_begin`)."""
+
+    __slots__ = ("_handle", "_conn", "_pending")
+
+    def __init__(self, handle: "RemoteStageHandle", conn: PipelinedConnection, pending) -> None:
+        self._handle = handle
+        self._conn = conn
+        self._pending = pending
+
+    def result(self, timeout: Optional[float]) -> int:
+        try:
+            ops = self._conn.wait(self._pending, timeout)
+        except TRANSPORT_ERRORS:
+            self._handle._record_failure()
+            raise
+        self._handle._record_success()
+        return ops
 
 
 class RemoteStageHandle:
@@ -526,6 +555,45 @@ class RemoteStageHandle:
             self._record_failure()
             raise
         return _PipelinedCollect(self, conn, pending)
+
+    # -- shard enforce dispatch ----------------------------------------------
+    def enforce_groups(self, shard_id: str, groups: Sequence[Any], timeout: Optional[float] = None) -> int:
+        """Ship one shard-addressed enforce batch and wait for the applied
+        count. NOT retried: enforcement is not idempotent (a DRL admit spends
+        budget); like rules, a transport failure surfaces to the caller —
+        the router's failover re-homes the failed groups itself."""
+        waiter = self.enforce_groups_begin(shard_id, groups)
+        if waiter is not None:
+            return waiter.result(self.timeout if timeout is None else timeout)
+        try:
+            reply = self._call({"call": "enforce", "shard": shard_id, "groups": [list(g) for g in groups]})
+        except TRANSPORT_ERRORS:
+            self._record_failure()
+            raise
+        self._record_success()
+        if not reply.get("ok"):
+            raise TransportError(f"enforce failed on shard {shard_id}: {reply.get('error')}")
+        return int(reply["ops"])
+
+    def enforce_groups_begin(
+        self, shard_id: str, groups: Sequence[Any]
+    ) -> Optional[_PipelinedEnforce]:
+        """Issue an enforce batch WITHOUT blocking (binary peers only; None on
+        v1, where the caller degrades to the blocking :meth:`enforce_groups`).
+        This is the router's split-dispatch primitive: one frame per shard,
+        all flushed, then all waited — per-shard DRL waits overlap instead of
+        serializing through the router thread."""
+        conn = self._conn
+        if conn is None:
+            return None
+        if self.breaker is not None:
+            self.breaker.allow()
+        try:
+            pending = conn.request(OP_ENFORCE, encode_enforce_batch(shard_id, groups), decode_int)
+        except TRANSPORT_ERRORS:
+            self._record_failure()
+            raise
+        return _PipelinedEnforce(self, conn, pending)
 
     def _ping_once(self) -> None:
         conn = self._conn

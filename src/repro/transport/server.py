@@ -44,18 +44,20 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import asdict
 from typing import Any, Dict, Optional
 
+from repro.core.context import Context
 from repro.core.rules import DifferentiationRule, HousekeepingRule, rule_from_wire
 from repro.core.snapshot import StageConfigJournal
 from repro.core.stage import Stage
 from repro.core.stats import StatsSnapshot
 
-from .codec import TransportError, decode_rule, encode_stats, pack_value
+from .codec import TransportError, decode_enforce_batch, decode_rule, encode_stats, pack_value
 from .faults import DELAY, DROP, PARTIAL, RESET, ConnectionFaults, FaultPlan, InjectedReset
 from .framing import (
     FLAG_ERROR,
     FLAG_REPLY,
     HELLO_ACK,
     OP_COLLECT,
+    OP_ENFORCE,
     OP_PING,
     OP_RULE,
     OP_STAGE_INFO,
@@ -67,7 +69,13 @@ from .framing import (
 PROTO_VERSION = 2
 
 #: binary op → the op name fault plans target (shared with the v1 loop)
-_OP_NAMES = {OP_RULE: "rule", OP_COLLECT: "collect", OP_STAGE_INFO: "stage_info", OP_PING: "ping"}
+_OP_NAMES = {
+    OP_RULE: "rule",
+    OP_COLLECT: "collect",
+    OP_STAGE_INFO: "stage_info",
+    OP_PING: "ping",
+    OP_ENFORCE: "enforce",
+}
 
 
 def snapshot_to_wire(s: StatsSnapshot) -> Dict[str, Any]:
@@ -87,7 +95,10 @@ def _stage_info(stage: Stage, journal: Optional[StageConfigJournal]) -> Dict[str
 
 
 def dispatch_json(
-    stage: Stage, msg: Dict[str, Any], journal: Optional[StageConfigJournal] = None
+    stage: Stage,
+    msg: Dict[str, Any],
+    journal: Optional[StageConfigJournal] = None,
+    shard_id: Optional[str] = None,
 ) -> Dict[str, Any]:
     """v1 JSON-line dispatch — the protocol every pre-v2 peer speaks."""
     call = msg.get("call")
@@ -98,7 +109,33 @@ def dispatch_json(
     if call == "collect":
         stats = stage.collect()
         return {"ok": True, "stats": {n: snapshot_to_wire(s) for n, s in stats.per_channel.items()}}
+    if call == "enforce":
+        groups = [tuple(g) for g in msg.get("groups", ())]
+        ops = _apply_enforce(stage, shard_id, str(msg.get("shard", "")), groups)
+        return {"ok": True, "ops": ops}
     return {"ok": False, "error": f"unknown call {call!r}"}
+
+
+def _apply_enforce(stage: Stage, shard_id: Optional[str], wire_shard: str, groups) -> int:
+    """Serve one shard-addressed enforce batch → total requests enforced.
+
+    A shard-id mismatch raises instead of enforcing: the router addressed a
+    batch to a shard that is not us (stale map, crossed sockets), and silently
+    running it would charge the wrong shard's channels — the one failure mode
+    rendezvous placement cannot detect on its own.
+    """
+    if shard_id is not None and wire_shard != shard_id:
+        raise ValueError(f"enforce batch addressed to shard {wire_shard!r}, this is {shard_id!r}")
+    total = 0
+    for workflow_id, request_type, size, request_context, tenant, count in groups:
+        if count <= 0:
+            continue
+        ctx = Context(workflow_id, request_type, size, request_context, tenant)
+        # one Context fanned out over the group hits the homogeneous batch
+        # fast path (identity check), so wire grouping costs nothing to undo
+        stage.enforce_batch([ctx] * count)
+        total += count
+    return total
 
 
 def _apply_rule(stage: Stage, rule, journal: Optional[StageConfigJournal] = None) -> bool:
@@ -118,6 +155,7 @@ def serve_binary(
     sock,
     journal: Optional[StageConfigJournal] = None,
     faults: Optional[ConnectionFaults] = None,
+    shard_id: Optional[str] = None,
 ) -> None:
     """Frame loop for one upgraded connection (runs on the handler thread).
 
@@ -232,6 +270,17 @@ def serve_binary(
                 except Exception:  # noqa: BLE001 — v1 parity: stage error → False
                     ok = False
                 reply(op, corr_id, FLAG_REPLY, pack_value(ok), flush=False)
+            elif op == OP_ENFORCE:
+                # inline, like rules: enforcement *is* the shard's serial
+                # capacity — a DRL wait here is the rate cap doing its job,
+                # and the router overlaps waits across shards, not within one
+                try:
+                    wire_shard, groups = decode_enforce_batch(payload)
+                    ops = _apply_enforce(stage, shard_id, wire_shard, groups)
+                except Exception as exc:  # noqa: BLE001 — framed, stream still sane
+                    reply(op, corr_id, FLAG_REPLY | FLAG_ERROR, pack_value(repr(exc)), flush=False)
+                    continue
+                reply(op, corr_id, FLAG_REPLY, pack_value(ops), flush=False)
             elif op in (OP_COLLECT, OP_STAGE_INFO):
                 pool.submit(serve_async, op, corr_id)
             elif op == OP_PING:
@@ -269,11 +318,15 @@ class StageServer:
         max_protocol: int = PROTO_VERSION,
         snapshot_path: Optional[str] = None,
         fault_plan: Optional[FaultPlan] = None,
+        shard_id: Optional[str] = None,
     ) -> None:
         self.stage = stage
         self.socket_path = socket_path
         self.max_protocol = max_protocol
         self.fault_plan = fault_plan
+        #: shard identity enforced on incoming enforce batches (None = accept
+        #: any — an unsharded stage doesn't care what the router calls it)
+        self.shard_id = shard_id
         self.journal: Optional[StageConfigJournal] = None
         #: rules replayed from the snapshot before the socket was bound
         self.restored_rules = 0
@@ -286,6 +339,7 @@ class StageServer:
         stage_ref = stage
         journal_ref = self.journal
         plan_ref = fault_plan
+        shard_ref = shard_id
         binary_enabled = max_protocol >= 2
 
         class Handler(socketserver.StreamRequestHandler):
@@ -304,7 +358,7 @@ class StageServer:
                         if int(msg.get("proto", 1)) >= 2:
                             self.wfile.write(HELLO_ACK)
                             self.wfile.flush()
-                            serve_binary(stage_ref, self.connection, journal_ref, faults)
+                            serve_binary(stage_ref, self.connection, journal_ref, faults, shard_ref)
                             return
                         self._reply({"ok": True, "proto": 1})
                         continue
@@ -324,7 +378,7 @@ class StageServer:
                                 self.wfile.flush()
                                 return
                     try:
-                        reply = dispatch_json(stage_ref, msg, journal_ref)
+                        reply = dispatch_json(stage_ref, msg, journal_ref, shard_ref)
                     except Exception as exc:  # noqa: BLE001 — report to controller
                         reply = {"ok": False, "error": repr(exc)}
                     self._reply(reply)

@@ -67,3 +67,19 @@ def settings(*_args: Any, **_kwargs: Any):
         return fn
 
     return decorate
+
+
+def assume(_condition: Any) -> bool:
+    """Inert ``hypothesis.assume``: property bodies never execute under the
+    stub (``@given`` skips them), so this only needs to be importable."""
+    return True
+
+
+def example(*_args: Any, **_kwargs: Any):
+    """Inert ``hypothesis.example`` decorator (explicit examples only matter
+    when the real engine drives the test)."""
+
+    def decorate(fn):
+        return fn
+
+    return decorate

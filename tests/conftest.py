@@ -1,9 +1,16 @@
-"""Shared fixtures: per-test isolation of the process-wide metric registry.
+"""Shared fixtures: per-test isolation of the process-wide metric registry,
+and reaping of orphaned child processes.
 
 Control planes and serve engines publish into the shared registry by default
 (so one exporter endpoint covers the process); tests must not see each
 other's gauges, so every test gets a fresh registry swapped in.
+
+Fleet/shard tests fork stage-server child processes; a test that fails an
+assertion mid-body can leave them running (holding sockets and CPU), so
+teardown force-kills whatever the test itself did not join.
 """
+import multiprocessing
+
 import pytest
 
 from repro.telemetry import MetricRegistry, set_registry
@@ -13,3 +20,11 @@ from repro.telemetry import MetricRegistry, set_registry
 def _fresh_metric_registry():
     set_registry(MetricRegistry())
     yield
+
+
+@pytest.fixture(autouse=True)
+def _reap_child_processes():
+    yield
+    for child in multiprocessing.active_children():
+        child.kill()
+        child.join(timeout=5.0)

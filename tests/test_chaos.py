@@ -1,10 +1,11 @@
 """Chaos hardening: fault injection (repro.transport.faults), retry/circuit
 breaker resilience, terminal ConnectionClosed semantics, the crash-safe stage
-config journal, and control-plane recovery reconcile against restored
-snapshots.
+config journal, control-plane recovery reconcile against restored snapshots,
+and the sharded data plane's kill -9 failover (re-home + fair-share recovery).
 """
 from __future__ import annotations
 
+import multiprocessing
 import os
 import tempfile
 import threading
@@ -13,15 +14,19 @@ import time
 import pytest
 
 from repro.core import (
+    Context,
     ControlPlane,
     DifferentiationRule,
     EnforcementRule,
     HousekeepingRule,
+    RequestType,
     Stage,
     StageConfigJournal,
     StageServer,
     VirtualClock,
 )
+from repro.distributed import ShardRouter
+from repro.telemetry import get_registry
 from repro.ft import HeartbeatMonitor
 from repro.transport import (
     DELAY,
@@ -697,3 +702,211 @@ class TestPipelinedCollect:
             assert not cp.stage_up("s")
         finally:
             cp.close()
+
+
+# --------------------------------------------------------------------------- #
+# sharded data plane: kill -9 one shard mid-traffic                            #
+# --------------------------------------------------------------------------- #
+SHARD_FAIR_POLICY = {
+    "policy": "shardfair",
+    "stage": "web",
+    "shards": 3,
+    "flows": [
+        {
+            "name": "tenant_a",
+            "scope": "global",
+            "match": {"tenant": "tenant_a"},
+            "objects": [{"kind": "drl", "id": "0", "params": {"rate": "60MiB/s"}}],
+        },
+        {
+            "name": "tenant_b",
+            "scope": "global",
+            "match": {"tenant": "tenant_b"},
+            "objects": [{"kind": "drl", "id": "0", "params": {"rate": "40MiB/s"}}],
+        },
+        {
+            "name": "tenant_c",
+            "scope": "global",
+            "match": {"tenant": "tenant_c"},
+            "objects": [{"kind": "drl", "id": "0", "params": {"rate": "20MiB/s"}}],
+        },
+    ],
+    "objective": {
+        "kind": "fairshare",
+        "capacity": "120MiB/s",
+        "loop_interval": "50ms",
+        "demands": {
+            "tenant_a": "60MiB/s",
+            "tenant_b": "40MiB/s",
+            "tenant_c": "20MiB/s",
+        },
+    },
+}
+
+
+def _serve_shard(name: str, socket_path: str) -> None:  # child process
+    stage = Stage(name)
+    StageServer(stage, socket_path, shard_id=name).start()
+    time.sleep(600)
+
+
+class TestShardDeathChaos:
+    """kill -9 one shard of a 3-shard logical stage mid-traffic: the router
+    re-homes exactly the dead shard's flows within the enforce call, the
+    control plane's ``scope: global`` grant splitting re-converges the fair
+    share onto the survivors within 2%, ``paio_shard_up`` drops and recovers,
+    and after the shard restarts the deferred-rule replay drains to zero."""
+
+    DEMANDS = {"tenant_a": 60 * MiB, "tenant_b": 40 * MiB, "tenant_c": 20 * MiB}
+
+    def _grant_sums(self, router):
+        """Per-tenant DRL rate summed over the *live* shards (split_flow_rate
+        preserves the flow's total grant across its members)."""
+        sums = {t: 0.0 for t in self.DEMANDS}
+        for shard_info in router.stage_info()["shards"].values():
+            for tenant in sums:
+                chan = (shard_info.get("channels") or {}).get(tenant)
+                if chan:
+                    obj = (chan.get("objects") or {}).get("0")
+                    if obj:
+                        sums[tenant] += obj["rate"]
+        return sums
+
+    def _fair(self, sums, tolerance=0.02):
+        return all(
+            abs(sums[t] - demand) <= tolerance * demand
+            for t, demand in self.DEMANDS.items()
+        )
+
+    def _drive(self, router, per_tenant=5):
+        ctxs = [
+            Context(0, RequestType.write, 4096, tenant=tenant)
+            for tenant in self.DEMANDS
+            for _ in range(per_tenant)
+        ]
+        return router.enforce_batch(ctxs)
+
+    def test_kill9_rehomes_and_fair_share_recovers(self):
+        mp = multiprocessing.get_context("fork")
+        with tempfile.TemporaryDirectory() as d:
+            paths = [f"{d}/web{i}.sock" for i in range(3)]
+            children = {}
+
+            def spawn(i: int) -> None:
+                name = f"web/{i}"
+                if os.path.exists(paths[i]):
+                    os.unlink(paths[i])  # stale socket from the killed shard
+                child = mp.Process(
+                    target=_serve_shard, args=(name, paths[i]), daemon=True
+                )
+                child.start()
+                children[name] = child
+                t0 = time.monotonic()
+                while not os.path.exists(paths[i]):
+                    assert time.monotonic() - t0 < 10.0
+                    time.sleep(0.01)
+
+            for i in range(3):
+                spawn(i)
+            cp = ControlPlane(probe_interval=0.05)
+            router = None
+            try:
+                assert cp.connect_sharded("web", paths) == ["web/0", "web/1", "web/2"]
+                cp.install_policy(SHARD_FAIR_POLICY)
+                # readmit gate: a restarted shard rejoins the router only after
+                # the control plane re-admitted it AND replayed every deferred
+                # rule — no enforcement gap on the re-homed-back flows
+                router = ShardRouter.connect_all(
+                    "web",
+                    paths,
+                    probe_interval=0.05,
+                    readmit_gate=lambda sid: (
+                        cp.stage_up(sid)
+                        and cp.fleet_status()[sid]["deferred_rules"] == 0
+                    ),
+                )
+                for _ in range(5):  # warm up: traffic + control ticks
+                    self._drive(router)
+                    cp.run_once()
+                sums = self._grant_sums(router)
+                assert self._fair(sums), f"fair share not established: {sums}"
+                sample = get_registry().sample()
+                for name in children:
+                    assert sample[f"shard.{name}.up"] == 1.0
+                assert sample["shard.web.count"] == 3.0
+
+                # --- kill -9 the shard owning tenant_a's flow, mid-traffic ---
+                ctx_a = Context(0, RequestType.write, 4096, tenant="tenant_a")
+                victim = router.owner_of(ctx_a)
+                children[victim].kill()
+                children[victim].join(timeout=10.0)
+                results = self._drive(router, per_tenant=10)
+                assert len(results) == 30  # the caller never saw the death
+                assert router.failovers >= 1
+                assert victim not in router.shards
+                assert router.owner_of(ctx_a) != victim  # re-homed
+                sample = get_registry().sample()
+                assert sample[f"shard.{victim}.up"] == 0.0
+                assert sample["shard.web.count"] == 2.0
+                assert sample["shard.web.failovers"] >= 1.0
+
+                # --- fair share re-converges onto the survivors within 2% ---
+                deadline = time.monotonic() + 10.0
+                converged = False
+                while time.monotonic() < deadline:
+                    self._drive(router)
+                    cp.run_once()
+                    if not cp.stage_up(victim) and self._fair(self._grant_sums(router)):
+                        converged = True
+                        break
+                    time.sleep(0.02)
+                assert converged, (
+                    f"survivor fair share did not converge: {self._grant_sums(router)}"
+                )
+
+                # --- restart the shard: replay drains, paio_shard_up recovers -
+                spawn(int(victim.split("/")[1]))
+                deadline = time.monotonic() + 15.0
+                recovered = False
+                while time.monotonic() < deadline:
+                    self._drive(router)
+                    cp.run_once()
+                    status = cp.fleet_status()
+                    if (
+                        cp.stage_up(victim)
+                        and status[victim]["deferred_rules"] == 0
+                        and victim in router.shards
+                    ):
+                        recovered = True
+                        break
+                    time.sleep(0.02)
+                assert recovered, f"shard {victim} did not recover: {cp.fleet_status()}"
+                # zero deferred rules anywhere after convergence
+                assert all(
+                    s["deferred_rules"] == 0 for s in cp.fleet_status().values()
+                )
+                sample = get_registry().sample()
+                assert sample[f"shard.{victim}.up"] == 1.0
+                assert sample["shard.web.count"] == 3.0
+                # the flow re-homed back to its rendezvous owner…
+                assert router.owner_of(ctx_a) == victim
+                # …and the full-fleet fair share is restored within 2%
+                deadline = time.monotonic() + 10.0
+                converged = False
+                while time.monotonic() < deadline:
+                    self._drive(router)
+                    cp.run_once()
+                    if self._fair(self._grant_sums(router)):
+                        converged = True
+                        break
+                    time.sleep(0.02)
+                assert converged, (
+                    f"full-fleet fair share not restored: {self._grant_sums(router)}"
+                )
+            finally:
+                if router is not None:
+                    router.close()
+                cp.close()
+                for child in children.values():
+                    if child.is_alive():
+                        child.kill()
