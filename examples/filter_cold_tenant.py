@@ -1,0 +1,256 @@
+"""Runtime filter install: cache-sensing filters demote a thrashing tenant.
+
+One checked-in policy (``examples/policies/filter_cold_tenant.json``)
+installs, onto an already-running 3-process fleet and with zero restarts,
+
+* a ``content_cache`` filter + a ``compression`` filter on every member's
+  ``cold`` channel (the filter plane: versioned enforcement code shipped
+  over the control plane as housekeeping rules), and
+* a trigger on the metric those filters *create*:
+  ``cache.hit_rate@cold < 0.3`` — when the cold tenant stops re-reading its
+  working set the fleet-merged hit rate collapses, and the trigger demotes
+  the tenant's DRLs to the 5 MiB/s floor until locality returns.
+
+The run drives three phases of cold-tenant traffic — re-read a small
+working set (hits), thrash with never-repeating payloads (misses), then
+re-read again — and verifies everything off the Prometheus scrape
+endpoint, exactly as an operator would:
+
+1. the filter chain is live on every member (``stage_info`` shows it) and
+   ``paio_trigger_fired`` is pre-registered at 0,
+2. ``paio_filter_cache_hit_rate`` for the fleet view breaches 0.3 during
+   the thrash phase, the trigger fires, and cold's fleet throughput
+   collapses toward the demote floor,
+3. locality returns, the hit rate recovers past the hysteresis point, and
+   the trigger releases (fired back to 0).
+
+Run: PYTHONPATH=src python examples/filter_cold_tenant.py [--stages 3]
+     [--seconds 9]
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing
+import os
+import sys
+import tempfile
+import threading
+import time
+import urllib.request
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MiB = float(1 << 20)
+POLICY_FILE = os.path.join(os.path.dirname(__file__), "policies", "filter_cold_tenant.json")
+
+THRASH_START = 2.5  # cold tenant loses locality, seconds after channel birth
+THRASH_END = 5.5
+PAYLOAD = 16 * 1024  # bytes per cold-tenant read
+
+
+def _stage_process(name: str, socket_path: str, seconds: float) -> None:
+    """One storage-server process. The cold tenant re-reads a 64-payload
+    working set (cache hits) except during the thrash window, where every
+    read is a never-seen payload (pure misses); the hot tenant is steady
+    background traffic that must keep flowing through it all."""
+    from repro.core import RequestType, Stage, StageServer, build_context, propagate_tenant
+
+    stage = Stage(name)
+    server = StageServer(stage, socket_path).start()
+    deadline = time.monotonic() + seconds
+
+    def drive_cold() -> None:
+        while stage.channel("cold") is None:
+            if time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
+        born = time.monotonic()
+        with propagate_tenant("cold"):
+            ctx = build_context(RequestType.read, size=PAYLOAD)
+        working_set = [
+            (f"{name}:{i}".encode() * PAYLOAD)[:PAYLOAD] for i in range(64)
+        ]
+        unique = 0
+        i = 0
+        while time.monotonic() < deadline:
+            t = time.monotonic() - born
+            if THRASH_START < t < THRASH_END:
+                unique += 1  # locality lost: every payload is new
+                payload = (f"{name}:u{unique}".encode() * PAYLOAD)[:PAYLOAD]
+            else:
+                payload = working_set[i % len(working_set)]
+                i += 1
+            stage.enforce(ctx, payload)
+
+    def drive_hot() -> None:
+        while stage.channel("hot") is None:
+            if time.monotonic() >= deadline:
+                return
+            time.sleep(0.01)
+        with propagate_tenant("hot"):
+            ctx = build_context(RequestType.read, size=PAYLOAD)
+        while time.monotonic() < deadline:
+            stage.enforce(ctx, None)
+
+    threads = [
+        threading.Thread(target=drive_cold, daemon=True),
+        threading.Thread(target=drive_hot, daemon=True),
+    ]
+    for t in threads:
+        t.start()
+    while time.monotonic() < deadline:
+        time.sleep(0.1)
+    server.stop()
+
+
+def _fleet_hit_rate(vals) -> float:
+    from repro.telemetry import parse_labels
+
+    for series, v in vals.items():
+        fam, labels = parse_labels(series)
+        if (
+            fam == "paio_filter_cache_hit_rate"
+            and labels.get("stage") == "@fleet"
+            and labels.get("channel") == "cold"
+        ):
+            return v
+    return float("nan")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--stages", type=int, default=3, help="fleet size (stage server processes)")
+    ap.add_argument("--seconds", type=float, default=9.0, help="traffic duration per stage process")
+    args = ap.parse_args()
+
+    from repro.core import ControlPlane
+    from repro.telemetry import parse_prometheus
+
+    stage_names = [f"s{i+1}" for i in range(args.stages)]
+    mp = multiprocessing.get_context(
+        "fork" if "fork" in multiprocessing.get_all_start_methods() else None
+    )
+    timeline = []  # (t, fired, fleet_hit_rate, fleet_tput_cold)
+    with tempfile.TemporaryDirectory() as sock_dir, ControlPlane(loop_interval=0.05) as cp:
+        procs = []
+        for name in stage_names:
+            path = os.path.join(sock_dir, f"{name}.sock")
+            p = mp.Process(
+                target=_stage_process, args=(name, path, args.seconds + 5.0), daemon=True
+            )
+            p.start()
+            procs.append((name, path, p))
+        for name, path, _ in procs:
+            t0 = time.monotonic()
+            while not os.path.exists(path):
+                if time.monotonic() - t0 > 10.0:
+                    raise SystemExit(f"stage {name} never opened {path}")
+                time.sleep(0.01)
+            cp.connect(name, path)
+
+        # the fleet is live and serving; THIS is the runtime install — no
+        # member restarts, the filter chain appears on the next enforce call
+        cp.install_policy(POLICY_FILE)
+        exporter = cp.serve_metrics()
+        print(f"policy + filters installed on {len(stage_names)} live stages; "
+              f"exporter on {exporter.url}")
+
+        from repro.transport import RemoteStageHandle
+
+        for name, path, _p in procs:
+            handle = RemoteStageHandle(path)
+            try:
+                info = handle.stage_info()
+            finally:
+                handle.close()
+            filters = info["channels"]["cold"]["filters"]
+            if set(filters) != {"content_cache", "compression"}:
+                print(f"FAIL: {name} missing filter chain: {sorted(filters)}", file=sys.stderr)
+                return 1
+            if filters["content_cache"]["capacity"] != 512:
+                print(f"FAIL: {name} filter params not applied: {filters}", file=sys.stderr)
+                return 1
+        print("filter chain live on every member: [content_cache(capacity=512), compression]")
+
+        with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+            vals = parse_prometheus(resp.read().decode())
+        fired_keys = [k for k in vals if k.startswith("paio_trigger_fired")]
+        if not fired_keys or any(vals[k] != 0.0 for k in fired_keys):
+            print(f"FAIL: trigger not pre-registered at zero: {fired_keys}", file=sys.stderr)
+            return 1
+        (fired_key,) = fired_keys
+
+        cp.start()
+        t0 = time.monotonic()
+        deadline = t0 + args.seconds + 6.0
+        released_after_fire = False
+        while time.monotonic() < deadline:
+            time.sleep(0.2)
+            with urllib.request.urlopen(exporter.url, timeout=5.0) as resp:
+                vals = parse_prometheus(resp.read().decode())
+            fired = vals.get(fired_key, 0.0)
+            timeline.append(
+                (
+                    time.monotonic() - t0,
+                    fired,
+                    _fleet_hit_rate(vals),
+                    vals.get('paio_fleet_throughput{flow="cold"}', 0.0),
+                )
+            )
+            if fired == 0.0 and any(s[1] == 1.0 for s in timeline):
+                released_after_fire = True
+                break
+        cp.stop()
+        for _, _, p in procs:
+            p.terminate()
+            p.join(timeout=10.0)
+
+    fire_idx = next((i for i, s in enumerate(timeline) if s[1] == 1.0), None)
+    pre = timeline[:fire_idx] if fire_idx is not None else timeline
+    during = [s for s in timeline if s[1] == 1.0]
+    failures = []
+    if not pre:
+        failures.append("no armed samples before the thrash phase")
+    if not during:
+        failures.append("cache.hit_rate trigger never fired under the thrash phase")
+    if not released_after_fire:
+        failures.append("trigger never released after locality returned")
+    if pre:
+        warm = [s[2] for s in pre if s[2] == s[2] and s[0] > 1.5]  # skip warmup, NaNs
+        if warm and min(warm) < 0.5:
+            failures.append(f"hit rate collapsed before the thrash phase: {min(warm):.2f}")
+    if during:
+        floor_rate = min(s[2] for s in during if s[2] == s[2])
+        if not floor_rate < 0.3:
+            failures.append(f"fired but scraped fleet hit rate never breached ({floor_rate:.2f})")
+    if pre and during:
+        settled = [s for s in pre if s[0] > 1.5] or pre
+        cold_before = sum(s[3] for s in settled) / len(settled)
+        cold_during = min(s[3] for s in during)
+        if cold_before > 0 and cold_during >= 0.7 * cold_before:
+            failures.append(
+                f"demote did not re-weight cold: {cold_before / MiB:.1f} -> "
+                f"{cold_during / MiB:.1f} MiB/s"
+            )
+        else:
+            print(
+                f"cold demoted under the miss storm: {cold_before / MiB:.1f} -> "
+                f"{cold_during / MiB:.1f} MiB/s aggregate; fleet hit rate floor "
+                f"{min(s[2] for s in during if s[2] == s[2]):.2f}"
+            )
+
+    for f in failures:
+        print(f"filter_cold_tenant FAIL: {f}", file=sys.stderr)
+    if failures:
+        return 1
+    fire_at = next(s[0] for s in timeline if s[1] == 1.0)
+    release_at = next(s[0] for s in timeline if s[1] == 0.0 and s[0] > fire_at)
+    print(
+        f"filter plane OK: runtime install, fired at t={fire_at:.1f}s on the miss storm, "
+        f"released at t={release_at:.1f}s ({len(timeline)} scrapes)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

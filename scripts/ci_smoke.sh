@@ -46,6 +46,12 @@ python scripts/scrape_smoke.py
 echo "== fleet SLO autopilot (3 stage processes: @fleet.p99 trigger fires under injected hotspot, batch demoted, all scraped) =="
 python examples/fleet_slo_autopilot.py --stages 3
 
+echo "== runtime filter plane (3 stage processes: filters installed live, cache.hit_rate trigger demotes the thrashing tenant, all scraped) =="
+python examples/filter_cold_tenant.py --stages 3
+
+echo "== codec microbench (struct fast path vs value codec on rule/filter/stats payloads) =="
+python benchmarks/bench_codec.py --seconds 0.05
+
 echo "== fleet smoke (3 stage processes over UDS: global fair-share guarantees + paio_stage_up) =="
 python examples/fleet_fairshare.py --stages 3 --seconds 5 --export 0
 

@@ -11,6 +11,10 @@ stage); this module layers static checks a compile alone cannot express:
   ``serve.*``). A typo here compiles fine and then never fires, because
   ``TriggerEngine.observe`` skips absent samples — the worst failure mode, a
   silent one;
+* **policy-unknown-filter** — a flow installs a filter the filter registry
+  does not provide, pins a version that does not exist, or passes params the
+  filter's constructor does not accept (checked against the registry schema:
+  :meth:`repro.filters.FilterRegistry.advertise`);
 * **policy-contradiction** — two triggers whose conditions can hold
   simultaneously ship EnforcementRules pinning the same ``(stage, channel,
   object)`` state key to different values: last-collect-wins flapping;
@@ -48,11 +52,24 @@ def _channel_fields() -> Tuple[str, ...]:
     return tuple(CHANNEL_FIELDS) + ("wait_hist_ms",)
 
 
+#: dotted suffixes the filter plane publishes per channel (raw window
+#: counters shipped in StatsSnapshot.extras plus the engine-derived ratios /
+#: trace percentiles — see repro.policy.engine._extras_to_samples)
+_FILTER_METRIC_SUFFIXES = (
+    "cache.hits", "cache.misses", "cache.evictions", "cache.hit_rate",
+    "compress.raw_bytes", "compress.out_bytes", "compress.ratio",
+    "trace.sampled", "trace.wait_p50_ms", "trace.wait_p95_ms", "trace.wait_p99_ms",
+)
+
+
 def _known_metric_key(key: str) -> bool:
     fields = _channel_fields()
     last = key.rsplit(".", 1)[-1]
     if last in fields:
         # <stage>.<field>, <stage>.<channel>.<field>, @fleet[.<channel>].<field>
+        return True
+    if any(key.endswith("." + s) for s in _FILTER_METRIC_SUFFIXES):
+        # <stage>.<channel>.cache.hit_rate and friends (filter plane)
         return True
     return any(p.match(key) for p in _KNOWN_KEY_SCHEMES)
 
@@ -105,6 +122,63 @@ def _anchor_line(text: str, needle: str) -> int:
     return 0
 
 
+def _check_filters(policy, text: str, rel: str) -> List[Finding]:
+    """Flow filter declarations vs. the filter registry schema."""
+    from repro.filters.registry import FILTER_REGISTRY
+
+    advert = FILTER_REGISTRY.advertise()
+    findings: List[Finding] = []
+    for flow in policy.flows:
+        for flt in flow.filters:
+            line = _anchor_line(text, flt.name)
+            entry = advert.get(flt.name)
+            if entry is None:
+                findings.append(
+                    Finding(
+                        rule="policy-unknown-filter",
+                        file=rel,
+                        line=line,
+                        message=(
+                            f"flow {flow.name!r} installs filter {flt.name!r}, "
+                            "which the filter registry does not provide "
+                            f"(registered: {sorted(advert)}) — the install would "
+                            "be rejected by every stage"
+                        ),
+                    )
+                )
+                continue
+            if flt.version and flt.version not in entry.get("versions", ()):
+                findings.append(
+                    Finding(
+                        rule="policy-unknown-filter",
+                        file=rel,
+                        line=line,
+                        message=(
+                            f"flow {flow.name!r} pins filter {flt.name!r} to "
+                            f"version {flt.version}, which is not registered "
+                            f"(versions: {sorted(entry.get('versions', ()))})"
+                        ),
+                    )
+                )
+                continue
+            if flt.version in (0, entry.get("latest")):
+                unknown = sorted(set(flt.params_dict()) - set(entry.get("params", ())))
+                if unknown:
+                    findings.append(
+                        Finding(
+                            rule="policy-unknown-filter",
+                            file=rel,
+                            line=line,
+                            message=(
+                                f"flow {flow.name!r}: filter {flt.name!r} does not "
+                                f"accept param(s) {unknown} "
+                                f"(accepted: {sorted(entry.get('params', ()))})"
+                            ),
+                        )
+                    )
+    return findings
+
+
 def verify_policy_file(path: str) -> List[Finding]:
     """Compile one policy file offline and run every static check."""
     from repro.policy import PolicyError, compile_policy, load_policy_file
@@ -116,7 +190,6 @@ def verify_policy_file(path: str) -> List[Finding]:
         return [Finding(rule="policy-compile", file=rel, line=0, message=str(exc))]
     try:
         policy = load_policy_file(path)
-        compiled = compile_policy(policy)  # offline: infos=None, "*" placeholder
     except PolicyError as exc:
         return [
             Finding(
@@ -126,8 +199,24 @@ def verify_policy_file(path: str) -> List[Finding]:
                 message=f"does not compile offline: {exc}",
             )
         ]
-
-    findings: List[Finding] = []
+    # filter-schema findings come from the policy model, before the compile:
+    # the compiler also rejects bad filters, but as a generic PolicyError —
+    # the dedicated rule names the schema violation precisely
+    findings: List[Finding] = _check_filters(policy, text, rel)
+    try:
+        compiled = compile_policy(policy)  # offline: infos=None, "*" placeholder
+    except PolicyError as exc:
+        if not findings:
+            findings.append(
+                Finding(
+                    rule="policy-compile",
+                    file=rel,
+                    line=0,
+                    message=f"does not compile offline: {exc}",
+                )
+            )
+        findings.sort(key=lambda f: (f.file, f.line, f.rule))
+        return findings
     triggers = compiled.triggers
 
     for t in triggers:

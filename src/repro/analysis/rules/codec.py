@@ -28,9 +28,11 @@ from ..engine import FileContext, Finding, Project, Rule
 STATS_SUFFIX = "core/stats.py"
 RULES_SUFFIX = "core/rules.py"
 CODEC_SUFFIX = "transport/codec.py"
+FILTER_SPEC_SUFFIX = "filters/spec.py"
 
 STATS_CLASS = "StatsSnapshot"
 RULE_CLASSES = ("HousekeepingRule", "DifferentiationRule", "EnforcementRule")
+FILTER_SPEC_CLASS = "FilterSpec"
 
 
 def _find_class(ctx: FileContext, name: str) -> Optional[ast.ClassDef]:
@@ -105,6 +107,15 @@ class CodecCoverageRule(Rule):
                     encode_fn="encode_rule",
                     decode_fn="decode_rule",
                 )
+        spec_file = project.find(FILTER_SPEC_SUFFIX)
+        if spec_file is not None:
+            yield from self._check_schema(
+                codec,
+                schema=spec_file,
+                class_name=FILTER_SPEC_CLASS,
+                encode_fn="encode_filter_spec",
+                decode_fn="decode_filter_spec",
+            )
 
     def _check_schema(
         self,

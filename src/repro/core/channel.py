@@ -74,6 +74,17 @@ def group_dispatch(
     return results  # type: ignore[return-value]
 
 
+def _wants_observe(flt: Any) -> bool:
+    """Does this filter override ``observe``? Pre-computed at install so the
+    enforce hot path never pays per-request no-op observe calls."""
+    observe = getattr(type(flt), "observe", None)
+    if observe is None:
+        return False
+    from repro.filters.registry import Filter  # local: core stays cycle-free
+
+    return not isinstance(flt, Filter) or observe is not Filter.observe
+
+
 class Channel:
     def __init__(self, name: str, clock: Clock = DEFAULT_CLOCK) -> None:
         self.name = name
@@ -90,6 +101,10 @@ class Channel:
         self._track_inflight = False
         #: wait summation needed once any possibly-blocking object is present
         self._track_wait = False
+        #: installed filter chain: ``(filter_id, filter, wants_observe)`` in
+        #: install order, swapped copy-on-write like the routing table — the
+        #: hot path reads it with a single attribute load, no lock
+        self._filters: Tuple[Tuple[str, Any, bool], ...] = ()
 
     # -- housekeeping ------------------------------------------------------
     def add_object(self, object_id: str, obj: EnforcementObject) -> None:
@@ -117,6 +132,50 @@ class Channel:
 
     def object_ids(self) -> List[str]:
         return list(self._objects.keys())
+
+    # -- filters (runtime-installable, repro.filters) ------------------------
+    def install_filter(self, filter_id: str, flt: Any) -> None:
+        """Install (or atomically replace) a filter in this channel's chain.
+
+        Filters wrap object dispatch: every enforced request's result flows
+        through the chain in install order. Re-installing an existing
+        ``filter_id`` swaps the instance in place, keeping its chain
+        position — an in-flight request sees either the old or the new
+        filter, never a gap.
+        """
+        wants_observe = _wants_observe(flt)
+        with self._mutate:
+            chain = list(self._filters)
+            for i, entry in enumerate(chain):
+                if entry[0] == filter_id:
+                    chain[i] = (filter_id, flt, wants_observe)
+                    break
+            else:
+                chain.append((filter_id, flt, wants_observe))
+            self._filters = tuple(chain)
+
+    def remove_filter(self, filter_id: str) -> bool:
+        with self._mutate:
+            chain = tuple(e for e in self._filters if e[0] != filter_id)
+            removed = len(chain) != len(self._filters)
+            self._filters = chain
+        return removed
+
+    def get_filter(self, filter_id: str) -> Optional[Any]:
+        for fid, flt, _ in self._filters:
+            if fid == filter_id:
+                return flt
+        return None
+
+    def filter_ids(self) -> List[str]:
+        return [fid for fid, _, _ in self._filters]
+
+    def configure_filter(self, filter_id: str, state: Dict[str, Any]) -> bool:
+        flt = self.get_filter(filter_id)
+        if flt is None:
+            return False
+        flt.obj_config(state)
+        return True
 
     # -- differentiation ----------------------------------------------------
     def add_object_route(self, mask: Tuple[str, ...], key: Tuple[Any, ...], object_id: str) -> None:
@@ -168,6 +227,18 @@ class Channel:
         if self._track_inflight:
             self.stats.begin_op()
         result = obj.obj_enf(ctx, request)
+        filters = self._filters
+        if filters:
+            enf_wait = result.wait_seconds
+            for _fid, flt, wants_observe in filters:
+                fres = flt.obj_enf(ctx, result.content)
+                result.content = fres.content
+                if fres.wait_seconds:
+                    result.wait_seconds += fres.wait_seconds
+                if fres.meta:
+                    result.meta = {**result.meta, **fres.meta} if result.meta else fres.meta
+                if wants_observe:
+                    flt.observe(ctx, enf_wait)
         self.stats.record(ctx.size, result.wait_seconds)
         return result
 
@@ -212,6 +283,8 @@ class Channel:
                     requests,
                     lambda oid, sc, sr: (self._objects.get(oid) or default).obj_enf_batch(sc, sr),
                 )
+        if self._filters:
+            self._apply_filters_batch(ctxs, results)
         # gated on kind, not on the drl/priority allowlist: any object whose
         # kind is not known non-blocking feeds wait telemetry identically
         # batch vs sequential — per-op waits, so the histogram sees the same
@@ -223,6 +296,28 @@ class Channel:
             self.stats.record_batch(n, nbytes)
         return results
 
+    def _apply_filters_batch(self, ctxs: Sequence[Context], results: List[Result]) -> None:
+        """Run the filter chain over a whole batch in place: one
+        ``obj_enf_batch`` per filter, elementwise equivalent to the
+        sequential ``enforce`` chain (same contents, waits, meta)."""
+        # snapshot the enforcement waits BEFORE the chain runs, as the
+        # sequential path does — observers see object-imposed delay only
+        enf_waits: Optional[List[float]] = None
+        if any(entry[2] for entry in self._filters):
+            enf_waits = [r.wait_seconds for r in results]
+        for _fid, flt, wants_observe in self._filters:
+            fres_list = flt.obj_enf_batch(ctxs, [r.content for r in results])
+            for r, fres in zip(results, fres_list):
+                r.content = fres.content
+                if fres.wait_seconds:
+                    r.wait_seconds += fres.wait_seconds
+                if fres.meta:
+                    r.meta = {**r.meta, **fres.meta} if r.meta else fres.meta
+            if wants_observe:
+                observe = flt.observe
+                for ctx, w in zip(ctxs, enf_waits):
+                    observe(ctx, w)
+
     # -- control ------------------------------------------------------------
     def configure_object(self, object_id: str, state: Dict[str, Any]) -> bool:
         obj = self._objects.get(object_id)
@@ -232,13 +327,26 @@ class Channel:
         return True
 
     def collect(self) -> StatsSnapshot:
-        return self.stats.collect()
+        snap = self.stats.collect()
+        filters = self._filters
+        if filters:
+            extras = snap.extras
+            for _fid, flt, _ in filters:
+                collect_extras = getattr(flt, "collect_extras", None)
+                if collect_extras is None:
+                    continue
+                for k, v in collect_extras().items():
+                    extras[k] = extras.get(k, 0.0) + v
+        return snap
 
     def describe(self) -> Dict[str, Any]:
-        return {
+        out = {
             "name": self.name,
             "objects": {oid: obj.describe() for oid, obj in self._objects.items()},
             "routes": [
                 {"mask": list(mask), "entries": len(table)} for mask, table in self._routing
             ],
         }
+        if self._filters:
+            out["filters"] = {fid: flt.describe() for fid, flt, _ in self._filters}
+        return out

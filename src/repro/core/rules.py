@@ -26,12 +26,18 @@ WILDCARD = "*"
 @dataclass(frozen=True)
 class HousekeepingRule:
     """op ∈ {create_channel, remove_channel, create_object, remove_object,
-    remove_route}.
+    remove_route, install_filter, remove_filter}.
 
     ``remove_route`` (the inverse of a differentiation rule — required for a
     clean policy uninstall) carries the original ``match`` in ``params`` and
     removes the corresponding request→channel entry (or, with ``object_id``
     set, the channel's request→object entry).
+
+    ``install_filter`` / ``remove_filter`` are the filter-install plane
+    (``repro.filters``): ``object_kind`` names the registered filter,
+    ``object_id`` the instance slot on the channel, and ``params`` carries
+    ``{"version": int, "params": {...}}`` — the JSON-native image of a
+    :class:`repro.filters.FilterSpec`, so v1 transports ship it losslessly.
     """
 
     op: str

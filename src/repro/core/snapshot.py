@@ -58,6 +58,10 @@ def _config_key(rule: Any) -> Optional[Tuple]:
             return ("chan", rule.channel)
         if rule.op == "create_object":
             return ("obj", rule.channel, rule.object_id)
+        if rule.op == "install_filter":
+            # re-installs of the same slot collapse to the latest spec; the
+            # remove_channel cascade (k[1] == channel) covers filters too
+            return ("filter", rule.channel, rule.object_id)
         return None
     if isinstance(rule, DifferentiationRule):
         return ("route", rule.channel, _freeze_match(rule.match), rule.object_id)
@@ -73,6 +77,8 @@ def _remove_key(rule: Any) -> Optional[Tuple]:
             return ("chan", rule.channel)
         if rule.op == "remove_object":
             return ("obj", rule.channel, rule.object_id)
+        if rule.op == "remove_filter":
+            return ("filter", rule.channel, rule.object_id)
         if rule.op == "remove_route":
             return (
                 "route",

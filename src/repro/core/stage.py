@@ -17,6 +17,8 @@ from __future__ import annotations
 
 import os
 import threading
+from collections import OrderedDict
+from functools import lru_cache
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .channel import DEFAULT_OBJECT_ID, Channel, group_dispatch, routing_without
@@ -31,6 +33,23 @@ DEFAULT_CHANNEL = "default"
 
 #: position of each routable classifier inside the resolved-route cache key
 _CLASSIFIER_POS = {name: i for i, name in enumerate(CLASSIFIERS)}
+
+#: resolved-route memo capacity; past it the oldest entry is evicted (FIFO ≈
+#: LRU for routing workloads, where hot flows re-insert rarely) so
+#: high-cardinality classifier spaces keep benefiting instead of freezing
+#: the cache at its first 64Ki keys. The memo is an OrderedDict purely for
+#: ``popitem(last=False)`` — O(1) true FIFO; ``dict.pop(next(iter(d)))``
+#: degrades to an O(cap) tombstone scan between internal resizes
+_ROUTE_CACHE_CAP = 65536
+
+
+@lru_cache(maxsize=8192)
+def _mask_token(parts: Tuple[Any, ...]) -> int:
+    """Bounded memo of the classifier-subtuple → murmur token map (§Perf
+    satellite, PR 10): the token is a pure function of the parts, and route-
+    cache misses re-hash the same few hundred distinct subtuples over and
+    over — an LRU probe is ~6x cheaper than re-running murmur3 in Python."""
+    return token_for(parts)
 
 
 class Stage:
@@ -47,7 +66,7 @@ class Stage:
         # ordered (mask, {token: channel_name}) — most specific first
         self._routing: List[Tuple[Tuple[str, ...], Dict[int, str]]] = []
         #: classifier-tuple → resolved channel (pure function of _routing)
-        self._route_cache: Dict[tuple, str] = {}
+        self._route_cache: "OrderedDict[tuple, str]" = OrderedDict()
         self._mutate = threading.Lock()
         if create_default_channel:
             self._channels[DEFAULT_CHANNEL] = Channel(DEFAULT_CHANNEL, clock)
@@ -89,13 +108,13 @@ class Stage:
                 routing.append((mask, {token_for(key): channel}))
             routing.sort(key=lambda e: -len(e[0]))
             self._routing = routing
-            self._route_cache = {}  # routing changed: resolved routes stale
+            self._route_cache = OrderedDict()  # routing changed: resolved routes stale
 
     def remove_channel_route(self, mask: Tuple[str, ...], key: Tuple[Any, ...]) -> bool:
         """Uninstall one request→channel mapping (policy teardown path)."""
         with self._mutate:
             self._routing, removed = routing_without(self._routing, mask, token_for(key))
-            self._route_cache = {}
+            self._route_cache = OrderedDict()
         return removed
 
     def select_channel(self, ctx: Context) -> str:
@@ -109,13 +128,18 @@ class Stage:
             return cached
         name = DEFAULT_CHANNEL
         for mask, table in self._routing:
-            token = token_for(tuple(getattr(ctx, c) for c in mask))
+            token = _mask_token(tuple(getattr(ctx, c) for c in mask))
             hit = table.get(token)
             if hit is not None:
                 name = hit
                 break
-        if len(self._route_cache) < 65536:
-            self._route_cache[key] = name
+        cache = self._route_cache
+        if len(cache) >= _ROUTE_CACHE_CAP:
+            try:  # evict the oldest resolution; tolerate concurrent clears
+                cache.popitem(last=False)
+            except KeyError:
+                pass
+        cache[key] = name
         return name
 
     def select_channels_batch(self, ctxs: Sequence[Context]) -> List[str]:
@@ -152,8 +176,12 @@ class Stage:
                         still.append(key)
                 unresolved = still
             for key, name in resolved.items():
-                if len(cache) < 65536:
-                    cache[key] = name
+                if len(cache) >= _ROUTE_CACHE_CAP:
+                    try:
+                        cache.popitem(last=False)
+                    except KeyError:
+                        pass
+                cache[key] = name
                 for i in misses[key]:
                     names[i] = name
         return names  # type: ignore[return-value]
@@ -214,10 +242,16 @@ class Stage:
     # control interface (Table 2)                                        #
     # ------------------------------------------------------------------ #
     def stage_info(self) -> Dict[str, Any]:
+        from repro.filters.registry import FILTER_REGISTRY  # local: no core cycle
+
         return {
             "pid": self.pid,
             "stage": self.name,
             "channels": {n: c.describe() for n, c in self._channels.items()},
+            # advertised filter registry: names → versions/param schema, so
+            # the policy compiler validates a filters: stanza against what
+            # THIS stage process can actually instantiate
+            "filters": FILTER_REGISTRY.advertise(),
         }
 
     def hsk_rule(self, rule: HousekeepingRule) -> bool:
@@ -243,6 +277,26 @@ class Stage:
                 return False
             chan.remove_object(rule.object_id or DEFAULT_OBJECT_ID)
             return True
+        if rule.op == "install_filter":
+            chan = self._channels.get(rule.channel)
+            if chan is None or not rule.object_kind:
+                return False
+            from repro.filters import FILTER_REGISTRY, FilterError, FilterSpec
+
+            spec = FilterSpec.from_rule(rule)
+            try:
+                flt = FILTER_REGISTRY.create(
+                    spec.name, spec.version, spec.params, clock=self._clock
+                )
+            except FilterError:
+                return False
+            chan.install_filter(spec.filter_id, flt)
+            return True
+        if rule.op == "remove_filter":
+            chan = self._channels.get(rule.channel)
+            if chan is None:
+                return False
+            return chan.remove_filter(rule.object_id or (rule.object_kind or ""))
         if rule.op == "remove_route":
             # inverse of dif_rule: params carries the original match
             dr = DifferentiationRule(

@@ -67,17 +67,34 @@ class StatsSnapshot:
     #: WAIT_BOUNDS_MS layout (+ one +Inf bucket). Empty tuple = no histogram
     #: (old-wire snapshots); merges exactly across windows and stages
     wait_hist: Tuple[int, ...] = ()
+    #: filter-plane window counters keyed by dotted metric suffix (e.g.
+    #: ``cache.hits``). Every value is *summable*: extras add across
+    #: consecutive windows and across stages/shards, so ratio metrics (hit
+    #: rates) are derived control-plane side from the merged raw counts,
+    #: never averaged from pre-divided members
+    extras: Dict[str, float] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         # v1 JSON transports round-trip tuples as lists; normalize so wire
         # equality and merge arithmetic hold regardless of the path taken
         if not isinstance(self.wait_hist, tuple):
             self.wait_hist = tuple(self.wait_hist)
+        if not isinstance(self.extras, dict):
+            self.extras = dict(self.extras)
 
     @property
     def mean_wait_ms(self) -> float:
         """Mean imposed wait per op over the window, milliseconds."""
         return (self.wait_seconds / self.ops) * 1e3 if self.ops else 0.0
+
+
+def _sum_extras(dicts: Iterable[Dict[str, float]]) -> Dict[str, float]:
+    """Key-wise sum of extras maps (all extras are summable by contract)."""
+    out: Dict[str, float] = {}
+    for d in dicts:
+        for k, v in d.items():
+            out[k] = out.get(k, 0.0) + v
+    return out
 
 
 def _hist_percentiles(counts: Sequence[int]) -> Tuple[float, float, float]:
@@ -249,6 +266,7 @@ def merge_snapshots(a: StatsSnapshot, b: StatsSnapshot) -> StatsSnapshot:
         wait_p95_ms=p95,
         wait_p99_ms=p99,
         wait_hist=hist,
+        extras=_sum_extras((a.extras, b.extras)),
     )
 
 
@@ -290,6 +308,7 @@ def merge_parallel(snaps: Iterable[StatsSnapshot], channel: str) -> StatsSnapsho
         wait_p95_ms=p95,
         wait_p99_ms=p99,
         wait_hist=hist,
+        extras=_sum_extras(s.extras for s in snaps),
     )
 
 

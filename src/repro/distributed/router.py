@@ -435,6 +435,7 @@ class ShardRouter:
         self._maybe_probe()
         shard_infos: Dict[str, Any] = {}
         channels: Dict[str, Any] = {}
+        filters: Dict[str, Any] = {}
         for sid, handle in self._live_items():
             try:
                 info = handle.stage_info()
@@ -444,12 +445,18 @@ class ShardRouter:
             shard_infos[sid] = info
             for name, desc in (info.get("channels") or {}).items():
                 channels.setdefault(name, desc)
+            # filter registry advertisement: shards run the same code, so a
+            # union is a formality — but a mid-upgrade fleet advertises only
+            # what some shard can actually instantiate
+            for name, desc in (info.get("filters") or {}).items():
+                filters.setdefault(name, desc)
         return {
             "stage": self.logical,
             "sharded": True,
             "shard_count": len(shard_infos),
             "shards": shard_infos,
             "channels": channels,
+            "filters": filters,
         }
 
     def _fanout_rule(self, call: str, rule) -> bool:

@@ -1,0 +1,28 @@
+"""Runtime-pluggable enforcement filters (ROADMAP Open Item 2).
+
+PAIO's enforcement-object set is fixed at build time; this subsystem makes
+the *logic* pluggable at runtime, Crystal-style: a process-wide
+:class:`FilterRegistry` of named, versioned filter classes, a wire-level
+:class:`FilterSpec` shipped over the control plane as housekeeping rules,
+and three shipping filters (compression, content cache, trace sampler).
+
+Importing this package registers the builtin filters.
+"""
+from .builtin import CompressionFilter, ContentCacheFilter, TraceFilter
+from .registry import FILTER_REGISTRY, Filter, FilterError, FilterRegistry, register_filter
+from .spec import FILTER_OPS, INSTALL_FILTER, REMOVE_FILTER, FilterSpec
+
+__all__ = [
+    "CompressionFilter",
+    "ContentCacheFilter",
+    "TraceFilter",
+    "FILTER_REGISTRY",
+    "Filter",
+    "FilterError",
+    "FilterRegistry",
+    "register_filter",
+    "FILTER_OPS",
+    "INSTALL_FILTER",
+    "REMOVE_FILTER",
+    "FilterSpec",
+]

@@ -1,0 +1,298 @@
+"""The three shipping filters: compression, content cache, trace sampler.
+
+Each is deliberately small — the point of the subsystem is that logic like
+this installs onto a *running* stage through the control plane, so every
+filter here doubles as a reference implementation of the protocol:
+
+* transform content in ``obj_enf`` / ``obj_enf_batch``,
+* keep windowed **summable** counters and drain them in ``collect_extras``
+  (ratios are derived control-plane side from merged raw counts),
+* never raise on missing optional dependencies: a filter install must
+  succeed on any stage, so :class:`CompressionFilter` gates ``zstandard``
+  and falls back to a numpy byte-shuffle + DEFLATE pipeline.
+"""
+from __future__ import annotations
+
+import threading
+import zlib
+from bisect import bisect_left
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.context import Context
+from repro.core.objects import Result
+from repro.telemetry.histogram import NBUCKETS, WAIT_BOUNDS_MS
+
+from .registry import Filter, register_filter
+
+__all__ = ["CompressionFilter", "ContentCacheFilter", "TraceFilter"]
+
+#: extras key prefix carrying the trace filter's sparse wait histogram
+#: (bucket index appended); summable across windows/stages like every extra
+TRACE_HIST_PREFIX = "trace.wait_hist."
+
+
+def _as_bytes(request: Any) -> bytes:
+    if isinstance(request, np.ndarray):
+        return request.tobytes()
+    return bytes(request)
+
+
+@register_filter
+class CompressionFilter(Filter):
+    """zstd compression for cold tenants; byte-shuffle + DEFLATE fallback.
+
+    Unlike the build-time ``compress`` enforcement object (which *requires*
+    ``zstandard`` at construction), an installable filter must come up on
+    whatever stage it lands on: when ``zstandard`` is absent the filter
+    byte-shuffles the payload with numpy (byte plane *i* of every 8-byte
+    word grouped together — similar-magnitude values line up, which is what
+    makes DEFLATE competitive on numeric data) and compresses with zlib.
+
+    Extras: ``compress.raw_bytes`` / ``compress.out_bytes`` per window — the
+    fleet-merged ratio is derived control-plane side.
+    """
+
+    name = "compression"
+    version = 1
+
+    _SHUFFLE_WORD = 8  # byte planes per word for the fallback shuffle
+
+    def __init__(self, level: int = 3) -> None:
+        self.level = int(level)
+        self._lock = threading.Lock()
+        self._raw = 0
+        self._out = 0
+        try:
+            import zstandard
+        except ImportError:
+            zstandard = None
+        self._zstd = zstandard
+        self._cctx = (
+            zstandard.ZstdCompressor(level=self.level) if zstandard is not None else None
+        )
+        self.backend = "zstd" if zstandard is not None else "shuffle+zlib"
+
+    def _compress(self, buf: bytes) -> bytes:
+        if self._cctx is not None:
+            return self._cctx.compress(buf)
+        arr = np.frombuffer(buf, dtype=np.uint8)
+        pad = (-arr.size) % self._SHUFFLE_WORD
+        if pad:
+            arr = np.concatenate([arr, np.zeros(pad, np.uint8)])
+        shuffled = arr.reshape(-1, self._SHUFFLE_WORD).T.tobytes()
+        return zlib.compress(shuffled, min(max(self.level, 1), 9))
+
+    def obj_enf(self, ctx: Context, request: Any = None) -> Result:
+        if request is None:
+            return Result(content=None)
+        buf = _as_bytes(request)
+        out = self._compress(buf)
+        with self._lock:
+            self._raw += len(buf)
+            self._out += len(out)
+        return Result(
+            content=out,
+            meta={"raw_bytes": len(buf), "compressed_bytes": len(out), "codec": self.backend},
+        )
+
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        if requests is None:
+            return [Result() for _ in ctxs]
+        out: List[Result] = []
+        raw_total = out_total = 0
+        for ctx, r in zip(ctxs, requests):
+            if r is None:
+                out.append(Result())
+                continue
+            buf = _as_bytes(r)
+            comp = self._compress(buf)
+            raw_total += len(buf)
+            out_total += len(comp)
+            out.append(
+                Result(
+                    content=comp,
+                    meta={
+                        "raw_bytes": len(buf),
+                        "compressed_bytes": len(comp),
+                        "codec": self.backend,
+                    },
+                )
+            )
+        if raw_total:
+            with self._lock:
+                self._raw += raw_total
+                self._out += out_total
+        return out
+
+    def obj_config(self, state: Dict[str, Any]) -> None:
+        if "level" in state:
+            self.level = int(state["level"])
+            if self._zstd is not None:
+                self._cctx = self._zstd.ZstdCompressor(level=self.level)
+
+    def collect_extras(self) -> Dict[str, float]:
+        with self._lock:
+            raw, self._raw = self._raw, 0
+            out, self._out = self._out, 0
+        if not raw:
+            return {}
+        return {"compress.raw_bytes": float(raw), "compress.out_bytes": float(out)}
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        d.update(level=self.level, backend=self.backend)
+        return d
+
+
+@register_filter
+class ContentCacheFilter(Filter):
+    """Content-addressed dedup cache: counts re-seen payloads.
+
+    An LRU of payload digests. A request whose content digest was seen
+    recently is a *hit* (the workload is re-reading data a real cache would
+    serve); unseen payloads are misses and enter the LRU, evicting the
+    oldest entry at capacity. Payloads pass through untouched — the filter
+    is a sensor, and its window counters (``cache.hits`` / ``cache.misses``
+    / ``cache.evictions``) are what feed the trigger engine: the runtime
+    derives ``cache.hit_rate`` from the merged counts, so
+    ``when cache.hit_rate@flow < 0.3: demote flow`` works fleet-wide.
+    """
+
+    name = "content_cache"
+    version = 1
+
+    def __init__(self, capacity: int = 256) -> None:
+        if int(capacity) < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._lock = threading.Lock()
+        self._lru: "OrderedDict[int, bool]" = OrderedDict()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def _touch(self, key: int) -> bool:
+        """True on hit. Caller holds no lock."""
+        with self._lock:
+            if key in self._lru:
+                self._lru.move_to_end(key)
+                self._hits += 1
+                return True
+            self._misses += 1
+            self._lru[key] = True
+            if len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+                self._evictions += 1
+            return False
+
+    def obj_enf(self, ctx: Context, request: Any = None) -> Result:
+        if request is None:
+            return Result(content=None)
+        buf = _as_bytes(request)
+        hit = self._touch(zlib.crc32(buf))
+        return Result(content=request, meta={"cache": "hit" if hit else "miss"})
+
+    def obj_config(self, state: Dict[str, Any]) -> None:
+        if "capacity" in state:
+            capacity = int(state["capacity"])
+            if capacity < 1:
+                raise ValueError(f"capacity must be >= 1, got {capacity}")
+            with self._lock:
+                self.capacity = capacity
+                while len(self._lru) > capacity:
+                    self._lru.popitem(last=False)
+                    self._evictions += 1
+
+    def collect_extras(self) -> Dict[str, float]:
+        with self._lock:
+            hits, self._hits = self._hits, 0
+            misses, self._misses = self._misses, 0
+            evictions, self._evictions = self._evictions, 0
+        if not (hits or misses or evictions):
+            return {}
+        return {
+            "cache.hits": float(hits),
+            "cache.misses": float(misses),
+            "cache.evictions": float(evictions),
+        }
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        with self._lock:
+            d.update(capacity=self.capacity, entries=len(self._lru))
+        return d
+
+
+@register_filter
+class TraceFilter(Filter):
+    """Sampling tracer: per-request wait observations into the histogram
+    plane.
+
+    Every ``sample_every``-th enforced request contributes its imposed wait
+    to a fixed-bucket histogram on the shared ``WAIT_BOUNDS_MS`` layout —
+    the same bucket scheme the channel stats use, so sampled-trace
+    percentiles and full-population percentiles are directly comparable.
+    The buckets drain through extras as sparse ``trace.wait_hist.<i>``
+    counts (summable, so shard/fleet merges are exact); the policy runtime
+    folds the merged counts back into ``trace.wait_p50/p95/p99_ms`` gauges.
+    """
+
+    name = "trace"
+    version = 1
+
+    def __init__(self, sample_every: int = 1) -> None:
+        if int(sample_every) < 1:
+            raise ValueError(f"sample_every must be >= 1, got {sample_every}")
+        self.sample_every = int(sample_every)
+        self._lock = threading.Lock()
+        self._seen = 0
+        self._sampled = 0
+        self._hist = [0] * NBUCKETS
+
+    def obj_enf(self, ctx: Context, request: Any = None) -> Result:
+        return Result(content=request)
+
+    def obj_enf_batch(
+        self, ctxs: Sequence[Context], requests: Optional[Sequence[Any]] = None
+    ) -> List[Result]:
+        if requests is None:
+            return [Result() for _ in ctxs]
+        return [Result(content=r) for r in requests]
+
+    def observe(self, ctx: Context, wait_seconds: float) -> None:
+        idx = bisect_left(WAIT_BOUNDS_MS, wait_seconds * 1e3)
+        with self._lock:
+            self._seen += 1
+            if self._seen % self.sample_every:
+                return
+            self._sampled += 1
+            self._hist[idx] += 1
+
+    def obj_config(self, state: Dict[str, Any]) -> None:
+        if "sample_every" in state:
+            sample_every = int(state["sample_every"])
+            if sample_every < 1:
+                raise ValueError(f"sample_every must be >= 1, got {sample_every}")
+            self.sample_every = sample_every
+
+    def collect_extras(self) -> Dict[str, float]:
+        with self._lock:
+            sampled, self._sampled = self._sampled, 0
+            hist, self._hist = self._hist, [0] * NBUCKETS
+        if not sampled:
+            return {}
+        out: Dict[str, float] = {"trace.sampled": float(sampled)}
+        for i, c in enumerate(hist):
+            if c:
+                out[f"{TRACE_HIST_PREFIX}{i}"] = float(c)
+        return out
+
+    def describe(self) -> Dict[str, Any]:
+        d = super().describe()
+        d.update(sample_every=self.sample_every)
+        return d

@@ -1,0 +1,210 @@
+"""Process-wide registry of named, versioned filter classes.
+
+A *filter* is an enforcement object (same ``obj_enf`` / ``obj_enf_batch`` /
+``obj_config`` protocol) that wraps a channel's object dispatch instead of
+occupying an object slot: installed filters post-process every enforced
+request's result, in install order. This is Crystal's injectable-filter
+abstraction grafted onto PAIO's stage anatomy — new data-plane logic deploys
+at runtime, no stage restart.
+
+Two extensions over plain enforcement objects:
+
+* ``observe(ctx, wait_seconds)`` — called once per enforced request with the
+  scheduling delay the channel's enforcement objects imposed, so sampling /
+  tracing filters can watch latency without sitting in the wait path;
+* ``collect_extras()`` — windowed, *summable* counters drained by the
+  channel's ``collect`` into ``StatsSnapshot.extras``, which is how filter
+  metrics (cache hit counts, compressed bytes) reach the control-plane
+  trigger engine and the Prometheus exporter.
+
+The registry maps ``name -> {version -> class}``. Stages advertise its
+contents through ``stage_info()["filters"]`` so the policy compiler and the
+offline verifier can validate a ``filters:`` stanza (names, versions, param
+names) before anything ships.
+"""
+from __future__ import annotations
+
+import inspect
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Type
+
+from repro.core.clock import Clock
+from repro.core.context import Context
+from repro.core.objects import EnforcementObject, Result
+
+__all__ = ["Filter", "FilterError", "FilterRegistry", "FILTER_REGISTRY", "register_filter"]
+
+
+class FilterError(ValueError):
+    """Unknown filter name/version, or params the filter does not accept."""
+
+
+class Filter(EnforcementObject):
+    """Base class for runtime-installable filters.
+
+    Subclasses set ``name`` (registry identity) and ``version``, implement
+    the enforcement-object protocol, and may override ``observe`` /
+    ``collect_extras``. ``obj_enf`` receives the *result content* of the
+    channel's enforcement object and returns the (possibly transformed)
+    content onward — filters chain.
+    """
+
+    kind = "filter"
+    #: registry identity; subclasses must override
+    name: str = "abstract"
+    #: monotonically bumped when behaviour or params change incompatibly
+    version: int = 1
+
+    def obj_enf(self, ctx: Context, request: Any = None) -> Result:
+        return Result(content=request)
+
+    def obj_config(self, state: Dict[str, Any]) -> None:
+        pass
+
+    def observe(self, ctx: Context, wait_seconds: float) -> None:
+        """Per-request hook: the wait the channel's objects imposed."""
+
+    def collect_extras(self) -> Dict[str, float]:
+        """Drain this window's summable counters (reset on read)."""
+        return {}
+
+    def describe(self) -> Dict[str, Any]:
+        return {"kind": self.kind, "name": self.name, "version": self.version}
+
+
+def _param_names(cls: Type[Filter]) -> Tuple[str, ...]:
+    """Constructor keyword names (minus self/clock) — the param schema a
+    stage advertises and the compiler/verifier validate against."""
+    try:
+        sig = inspect.signature(cls.__init__)
+    except (TypeError, ValueError):  # builtins without introspectable sigs
+        return ()
+    return tuple(
+        p.name
+        for p in sig.parameters.values()
+        if p.name not in ("self", "clock")
+        and p.kind in (p.POSITIONAL_OR_KEYWORD, p.KEYWORD_ONLY)
+    )
+
+
+class FilterRegistry:
+    """Thread-safe ``name -> {version -> class}`` registry."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._classes: Dict[str, Dict[int, Type[Filter]]] = {}
+
+    def register(
+        self,
+        cls: Type[Filter],
+        name: Optional[str] = None,
+        version: Optional[int] = None,
+    ) -> Type[Filter]:
+        name = name or cls.name
+        version = int(version if version is not None else cls.version)
+        if not name or name == "abstract":
+            raise FilterError(f"filter class {cls.__name__} has no registry name")
+        if version < 1:
+            raise FilterError(f"filter {name!r}: version must be >= 1, got {version}")
+        with self._lock:
+            versions = self._classes.setdefault(name, {})
+            prior = versions.get(version)
+            if prior is not None and prior is not cls:
+                # a versioned slot is immutable: silently replacing it would
+                # change what peers get for an already-advertised (name,
+                # version) — ship the new code as a new version instead
+                raise FilterError(
+                    f"filter {name!r} version {version} is already registered "
+                    f"({prior.__name__}); bump the version to ship new code"
+                )
+            versions[version] = cls
+        return cls
+
+    def names(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._classes))
+
+    def versions(self, name: str) -> Tuple[int, ...]:
+        with self._lock:
+            return tuple(sorted(self._classes.get(name, ())))
+
+    def latest(self, name: str) -> int:
+        versions = self.versions(name)
+        if not versions:
+            raise FilterError(f"unknown filter {name!r} (registered: {list(self.names())})")
+        return versions[-1]
+
+    def lookup(self, name: str, version: int = 0) -> Type[Filter]:
+        """Resolve a class; version 0 = latest registered."""
+        with self._lock:
+            by_version = self._classes.get(name)
+            if not by_version:
+                known = sorted(self._classes)
+                raise FilterError(f"unknown filter {name!r} (registered: {known})")
+            if not version:
+                return by_version[max(by_version)]
+            cls = by_version.get(int(version))
+            if cls is None:
+                raise FilterError(
+                    f"filter {name!r} has no version {version} "
+                    f"(registered: {sorted(by_version)})"
+                )
+            return cls
+
+    def param_names(self, name: str, version: int = 0) -> Tuple[str, ...]:
+        return _param_names(self.lookup(name, version))
+
+    def create(
+        self,
+        name: str,
+        version: int = 0,
+        params: Optional[Dict[str, Any]] = None,
+        clock: Optional[Clock] = None,
+    ) -> Filter:
+        """Instantiate; raises :class:`FilterError` on unknown name/version
+        or params the constructor does not accept."""
+        cls = self.lookup(name, version)
+        params = dict(params or {})
+        allowed = set(_param_names(cls))
+        unknown = sorted(set(params) - allowed)
+        if unknown:
+            raise FilterError(
+                f"filter {name!r} v{version or self.latest(name)}: unknown "
+                f"params {unknown} (accepts: {sorted(allowed)})"
+            )
+        try:
+            sig = inspect.signature(cls.__init__)
+        except (TypeError, ValueError):
+            sig = None
+        if clock is not None and sig is not None and "clock" in sig.parameters:
+            params["clock"] = clock
+        try:
+            return cls(**params)
+        except (TypeError, ValueError) as exc:
+            raise FilterError(f"filter {name!r}: {exc}") from exc
+
+    def advertise(self) -> Dict[str, Any]:
+        """The registry contents a stage puts in ``stage_info()["filters"]``:
+        per name, the registered versions and the latest version's param
+        names — everything the compiler needs to validate a spec remotely."""
+        out: Dict[str, Any] = {}
+        with self._lock:
+            items = {n: dict(v) for n, v in self._classes.items()}
+        for name, by_version in sorted(items.items()):
+            latest = max(by_version)
+            out[name] = {
+                "versions": sorted(by_version),
+                "latest": latest,
+                "params": list(_param_names(by_version[latest])),
+            }
+        return out
+
+
+#: the process-wide registry; builtin filters register on import of
+#: :mod:`repro.filters`
+FILTER_REGISTRY = FilterRegistry()
+
+
+def register_filter(cls: Type[Filter]) -> Type[Filter]:
+    """Class decorator: register into the process-wide registry."""
+    return FILTER_REGISTRY.register(cls)

@@ -1,0 +1,102 @@
+"""FilterSpec: the wire-level identity of one filter installation.
+
+A spec names *what* to instantiate (a registered filter ``name`` at a pinned
+``version`` with constructor ``params``) and *where* to place it (a
+``channel`` of the target stage; ``filter_id`` is the instance slot on that
+channel, so the same filter class can be installed twice under different
+ids). Placement by *flow* is a DSL-level concept — the policy compiler
+resolves a flow to its channel before the spec ever reaches the wire.
+
+Specs ship over the control plane as housekeeping rules (``install_filter``
+/ ``remove_filter`` ops), which buys the whole rule machinery for free:
+v1 JSON fallback via ``to_wire``, deferred replay for down stages, shard
+fan-out, and crash-safe journaling through ``StageConfigJournal``. The v2
+binary transport additionally carries install rules on a dedicated
+struct-packed codec entry (``repro.transport.codec.encode_filter_spec``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.core.rules import HousekeepingRule
+
+__all__ = ["FilterSpec", "INSTALL_FILTER", "REMOVE_FILTER", "FILTER_OPS"]
+
+#: housekeeping ops of the filter-install plane
+INSTALL_FILTER = "install_filter"
+REMOVE_FILTER = "remove_filter"
+FILTER_OPS = (INSTALL_FILTER, REMOVE_FILTER)
+
+#: version sentinel: "latest registered version at install time"
+LATEST = 0
+
+
+@dataclass(frozen=True)
+class FilterSpec:
+    """One filter installation: registry identity + placement.
+
+    ``version`` 0 means "latest registered on the installing stage" — the
+    policy compiler pins a concrete version when the target stage advertises
+    its registry, so 0 only survives to the wire for offline-compiled
+    programs.
+    """
+
+    name: str
+    version: int = LATEST
+    channel: str = ""
+    filter_id: str = ""
+    params: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.filter_id:
+            object.__setattr__(self, "filter_id", self.name)
+
+    # -- rule plumbing -----------------------------------------------------
+    def to_rule(self) -> HousekeepingRule:
+        """The ``install_filter`` housekeeping rule shipping this spec."""
+        return HousekeepingRule(
+            op=INSTALL_FILTER,
+            channel=self.channel,
+            object_id=self.filter_id,
+            object_kind=self.name,
+            params={"version": int(self.version), "params": dict(self.params)},
+        )
+
+    def removal_rule(self) -> HousekeepingRule:
+        return HousekeepingRule(
+            op=REMOVE_FILTER, channel=self.channel, object_id=self.filter_id
+        )
+
+    @classmethod
+    def from_rule(cls, rule: HousekeepingRule) -> "FilterSpec":
+        if rule.op != INSTALL_FILTER:
+            raise ValueError(f"not an install_filter rule: {rule.op!r}")
+        params = rule.params or {}
+        return cls(
+            name=rule.object_kind or "",
+            version=int(params.get("version") or LATEST),
+            channel=rule.channel,
+            filter_id=rule.object_id or (rule.object_kind or ""),
+            params=dict(params.get("params") or {}),
+        )
+
+    # -- JSON-native form (describe / stage_info) --------------------------
+    def to_wire(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "version": self.version,
+            "channel": self.channel,
+            "filter_id": self.filter_id,
+            "params": dict(self.params),
+        }
+
+    @classmethod
+    def from_wire(cls, d: Dict[str, Any]) -> "FilterSpec":
+        return cls(
+            name=d["name"],
+            version=int(d.get("version") or LATEST),
+            channel=d.get("channel") or "",
+            filter_id=d.get("filter_id") or "",
+            params=dict(d.get("params") or {}),
+        )

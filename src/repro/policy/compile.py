@@ -27,9 +27,13 @@ from repro.core.objects import OBJECT_KINDS
 from repro.core.rules import DifferentiationRule, EnforcementRule, HousekeepingRule
 from repro.core.shard import shard_stage_names
 
+from repro.filters.registry import FILTER_REGISTRY, FilterError
+from repro.filters.spec import FilterSpec
+
 from .dsl import (
     Action,
     Condition,
+    FilterDecl,
     Flow,
     ObjectSpec,
     Policy,
@@ -288,6 +292,20 @@ def _lower_flow_on(
             teardown.append(
                 HousekeepingRule(op="remove_object", channel=b.channel, object_id=obj.object_id)
             )
+    for flt in b.flow.filters:
+        spec = _pin_filter(b, stage, flt, infos)
+        if channel_exists:
+            have = existing.get(b.channel, {}).get("filters", {})
+            prior = have.get(spec.filter_id)
+            if prior is not None:
+                raise PolicyError(
+                    f"flow {b.flow.name!r}: filter slot {spec.filter_id!r} already exists "
+                    f"on channel {b.channel!r} ({prior.get('name')!r} "
+                    f"v{prior.get('version')}); refusing to replace"
+                )
+            # channel outlives the policy: uninstall filters one by one
+            teardown.append(spec.removal_rule())
+        install.append(spec.to_rule())
     match = b.flow.match_dict()
     install.append(DifferentiationRule(channel=b.channel, match=match))
     teardown.append(
@@ -296,6 +314,62 @@ def _lower_flow_on(
     if not channel_exists:
         teardown.append(HousekeepingRule(op="remove_channel", channel=b.channel))
     cp.teardown.setdefault(stage, []).extend(teardown)
+
+
+def _pin_filter(
+    b: _FlowBinding, stage: str, flt: FilterDecl, infos: Optional[Mapping[str, Any]]
+) -> FilterSpec:
+    """Validate one filter declaration against the target stage's advertised
+    filter registry (``stage_info()["filters"]``) and pin ``version: 0`` to
+    the concrete latest, so the installed configuration is reproducible.
+    Offline compiles (and stages that predate the filter plane and advertise
+    nothing) validate against the local registry — the same code both sides
+    run — so typos still fail at compile time."""
+    what = f"flow {b.flow.name!r}"
+    advert = None
+    if infos is not None:
+        advert = (infos.get(stage) or {}).get("filters")
+    if advert is None:
+        advert = FILTER_REGISTRY.advertise()
+    entry = advert.get(flt.name)
+    if entry is None:
+        raise PolicyError(
+            f"{what}: unknown filter {flt.name!r} on stage {stage!r} "
+            f"(advertised: {sorted(advert)})"
+        )
+    version = flt.version or int(entry.get("latest", 0))
+    if version not in entry.get("versions", ()):
+        raise PolicyError(
+            f"{what}: filter {flt.name!r} has no version {version} on stage {stage!r} "
+            f"(advertised: {sorted(entry.get('versions', ()))})"
+        )
+    params = flt.params_dict()
+    if version == entry.get("latest"):
+        known = set(entry.get("params", ()))
+        unknown = sorted(set(params) - known)
+        if unknown:
+            raise PolicyError(
+                f"{what}: filter {flt.name!r} does not accept param(s) {unknown} "
+                f"(accepted: {sorted(known)})"
+            )
+    # dry-construct when the local registry has the pinned version, so bad
+    # param *values* also fail at compile time instead of mid-install
+    try:
+        FILTER_REGISTRY.lookup(flt.name, version)
+    except FilterError:
+        pass
+    else:
+        try:
+            FILTER_REGISTRY.create(flt.name, version, params)
+        except FilterError as exc:
+            raise PolicyError(f"{what}: bad filter {flt.name!r} params: {exc}") from None
+    return FilterSpec(
+        name=flt.name,
+        version=version,
+        channel=b.channel,
+        filter_id=flt.slot(),
+        params=params,
+    )
 
 
 # --------------------------------------------------------------------------- #
@@ -424,9 +498,18 @@ def _resolve_metric_key(
     qualifiers force fleet scope explicitly (the latter aggregates over
     every channel of the control plane's fleet view).
     """
-    if "." in cond.metric:  # fully-qualified registry key — pluggable, pass through
-        return cond.metric, None
     canon = METRIC_ALIASES.get(cond.metric)
+    if "." in cond.metric and canon is None:
+        if cond.flow is None or cond.metric.startswith(f"{FLEET_STAGE}."):
+            # fully-qualified registry key — pluggable, pass through
+            return cond.metric, None
+        # dotted metric scoped to a flow (the filter-plane extras channel:
+        # ``cache.hit_rate@cold``) — qualify with the flow's stage + channel
+        # exactly like a builtin, fleet-folded for global flows
+        b = _resolve_action_flow(policy, bindings, cond.flow, what)
+        if b.flow.is_global():
+            return f"{FLEET_STAGE}.{b.channel}.{cond.metric}", None
+        return f"{b.stage}.{b.channel}.{cond.metric}", None
     if canon is None:
         raise PolicyError(
             f"{what}: unknown metric {cond.metric!r} "
@@ -612,6 +695,8 @@ def _install_key(rule: Any) -> Optional[Tuple]:
             return ("chan", rule.channel)
         if rule.op == "create_object":
             return ("obj", rule.channel, rule.object_id)
+        if rule.op == "install_filter":
+            return ("filter", rule.channel, rule.object_id)
         return None
     if isinstance(rule, DifferentiationRule):
         return ("route", rule.channel, _freeze_match(rule.match), rule.object_id)
@@ -627,6 +712,8 @@ def _teardown_key(rule: Any) -> Optional[Tuple]:
             return ("chan", rule.channel)
         if rule.op == "remove_object":
             return ("obj", rule.channel, rule.object_id)
+        if rule.op == "remove_filter":
+            return ("filter", rule.channel, rule.object_id)
         if rule.op == "remove_route":
             return ("route", rule.channel, _freeze_match(rule.params.get("match") or {}), rule.object_id)
     return None
@@ -639,6 +726,8 @@ def _undo_for_install(rule: Any) -> Any:
             return HousekeepingRule(op="remove_channel", channel=rule.channel)
         if rule.op == "create_object":
             return HousekeepingRule(op="remove_object", channel=rule.channel, object_id=rule.object_id)
+        if rule.op == "install_filter":
+            return HousekeepingRule(op="remove_filter", channel=rule.channel, object_id=rule.object_id)
     if isinstance(rule, DifferentiationRule):
         return HousekeepingRule(
             op="remove_route", channel=rule.channel, object_id=rule.object_id,
@@ -678,6 +767,12 @@ def infos_without_policy(
                 if (stage, ("obj", ch_name, oid)) not in owned_keys
             }
             channels[ch_name] = {**ch, "objects": objects}
+            if ch.get("filters"):
+                channels[ch_name]["filters"] = {
+                    fid: f
+                    for fid, f in ch["filters"].items()
+                    if (stage, ("filter", ch_name, fid)) not in owned_keys
+                }
         out[stage] = {**info, "channels": channels}
     return out
 
@@ -746,6 +841,11 @@ def diff_policies(old: CompiledPolicy, new: CompiledPolicy) -> PolicyDelta:
                     # the old channel rather than deleting it
                     delta.ops.append((stage, rule, prior))
                     continue
+            if old_rule is not None and key[0] == "filter":
+                # install_filter replaces the slot atomically, keeping its
+                # chain position — no gap; undo re-installs the old spec
+                delta.ops.append((stage, rule, old_rule))
+                continue
             if old_rule is not None and key[0] == "obj":
                 if old_rule.object_kind == rule.object_kind and _retunable(
                     rule.object_kind, old_rule.params, rule.params
@@ -802,19 +902,20 @@ def diff_policies(old: CompiledPolicy, new: CompiledPolicy) -> PolicyDelta:
                     r for k, r in old_by_key.items() if k[0] == "obj" and k[1] == key[1]
                 ]
             delta.ops.append((stage, td, undo))
-        # objects dropped from a SURVIVING channel have no teardown rule to
-        # reuse (owned channels' removal subsumes their objects, but here the
-        # channel lives on): synthesize the remove_object, or the stale
-        # object would keep enforcing forever
+        # objects/filters dropped from a SURVIVING channel have no teardown
+        # rule to reuse (owned channels' removal subsumes them, but here the
+        # channel lives on): synthesize the remove, or the stale entity would
+        # keep enforcing forever
         for key, old_rule in old_by_key.items():
-            if key[0] != "obj" or key in new_keys or key in covered:
+            if key[0] not in ("obj", "filter") or key in new_keys or key in covered:
                 continue
             if ("chan", key[1]) in covered:
-                continue  # whole channel is going away; object dies with it
+                continue  # whole channel is going away; entity dies with it
+            op = "remove_object" if key[0] == "obj" else "remove_filter"
             delta.ops.append(
                 (
                     stage,
-                    HousekeepingRule(op="remove_object", channel=key[1], object_id=key[2]),
+                    HousekeepingRule(op=op, channel=key[1], object_id=key[2]),
                     old_rule,
                 )
             )

@@ -135,6 +135,27 @@ class ObjectSpec:
 
 
 @dataclass(frozen=True)
+class FilterDecl:
+    """One runtime-pluggable filter installed on a flow's channel.
+
+    ``version`` 0 means "latest the stage's filter registry advertises" — the
+    compiler pins it to a concrete version at compile time so the installed
+    configuration is reproducible. ``filter_id`` is the instance slot on the
+    channel (defaults to the filter name: one instance per kind)."""
+
+    name: str
+    version: int = 0
+    filter_id: str = ""
+    params: Tuple[Tuple[str, Any], ...] = ()
+
+    def params_dict(self) -> Dict[str, Any]:
+        return dict(self.params)
+
+    def slot(self) -> str:
+        return self.filter_id or self.name
+
+
+@dataclass(frozen=True)
 class Flow:
     """A named flow: classifier match → dedicated channel + objects.
 
@@ -150,6 +171,7 @@ class Flow:
     stage: Optional[str] = None  # None → the policy's default stage
     channel: Optional[str] = None  # None → flow name
     objects: Tuple[ObjectSpec, ...] = ()
+    filters: Tuple[FilterDecl, ...] = ()
     scope: str = "stage"
 
     def match_dict(self) -> Dict[str, Any]:
@@ -264,6 +286,23 @@ def _object_from_dict(d: Mapping[str, Any]) -> ObjectSpec:
     )
 
 
+def _filter_from_dict(d: Mapping[str, Any]) -> FilterDecl:
+    if "name" not in d:
+        raise PolicyError(f"filter spec missing 'name': {d!r}")
+    try:
+        version = int(d.get("version", 0))
+    except (TypeError, ValueError):
+        raise PolicyError(f"filter version must be an integer, got {d.get('version')!r}") from None
+    if version < 0:
+        raise PolicyError(f"filter version must be >= 0, got {version}")
+    return FilterDecl(
+        name=str(d["name"]),
+        version=version,
+        filter_id=str(d.get("id", d.get("filter_id", ""))),
+        params=_freeze(dict(d.get("params") or {})),
+    )
+
+
 def _action_from_dict(d: Mapping[str, Any]) -> Action:
     op = d.get("op") or d.get("action")
     if op not in ("set", "demote", "promote"):
@@ -342,6 +381,13 @@ def policy_from_dict(d: Mapping[str, Any]) -> Policy:
                 f"flow {fd['name']!r}: 'scope: global' and an explicit 'stage' are "
                 "mutually exclusive (a global flow spans every registered stage)"
             )
+        filters = tuple(_filter_from_dict(x) for x in fd.get("filters") or ())
+        slots = [flt.slot() for flt in filters]
+        if len(slots) != len(set(slots)):
+            raise PolicyError(
+                f"flow {fd['name']!r}: duplicate filter slot (give each instance "
+                "a distinct 'id' to install the same filter twice)"
+            )
         flows.append(
             Flow(
                 name=str(fd["name"]),
@@ -349,6 +395,7 @@ def policy_from_dict(d: Mapping[str, Any]) -> Policy:
                 stage=fd.get("stage"),
                 channel=fd.get("channel"),
                 objects=tuple(_object_from_dict(o) for o in fd.get("objects") or ()),
+                filters=filters,
                 scope=scope,
             )
         )
@@ -398,6 +445,21 @@ def policy_to_dict(p: Policy) -> Dict[str, Any]:
                     {"kind": o.kind, "id": o.object_id, "params": o.params_dict()}
                     for o in f.objects
                 ],
+                **(
+                    {
+                        "filters": [
+                            {
+                                "name": flt.name,
+                                **({"version": flt.version} if flt.version else {}),
+                                **({"id": flt.filter_id} if flt.filter_id else {}),
+                                **({"params": flt.params_dict()} if flt.params else {}),
+                            }
+                            for flt in f.filters
+                        ]
+                    }
+                    if f.filters
+                    else {}
+                ),
             }
             for f in p.flows
         ]
@@ -485,6 +547,37 @@ def _parse_text_action(text: str, own_flow: Optional[str]) -> Action:
     raise PolicyError(f"unknown action verb {verb!r} in {text!r}")
 
 
+def _parse_text_filter(text: str) -> Dict[str, Any]:
+    # filter <name>[@<version>] [id=<slot>] [k=v ...]
+    toks = text.split()
+    if len(toks) < 2:
+        raise PolicyError(f"bad filter declaration {text!r} (filter <name>[@version] [k=v ...])")
+    name, _, ver = toks[1].partition("@")
+    out: Dict[str, Any] = {"name": name}
+    if ver:
+        if not ver.isdigit():
+            raise PolicyError(f"bad filter version {ver!r} in {text!r} (expected an integer)")
+        out["version"] = int(ver)
+    params: Dict[str, Any] = {}
+    for kv in toks[2:]:
+        if "=" not in kv:
+            raise PolicyError(f"bad filter param {kv!r} in {text!r} (need key=value)")
+        k, v = kv.split("=", 1)
+        if k == "id":
+            out["id"] = v
+            continue
+        try:
+            params[k] = int(v)
+        except ValueError:
+            try:
+                params[k] = parse_quantity(v)
+            except PolicyError:
+                params[k] = v
+    if params:
+        out["params"] = params
+    return out
+
+
 def _parse_on_clause(toks, text: str, own_flow: Optional[str]):
     if not toks:
         return own_flow, "0"
@@ -559,9 +652,13 @@ def _parse_text_line(line: str, d: Dict[str, Any]) -> None:
         canon = _canon_match(match)
         flow_name = alias or _flow_name_from_match(canon)
         objects = []
+        filters = []
         for a_text in tail.split(";"):
             a_text = a_text.strip()
             if not a_text:
+                continue
+            if a_text.split(None, 1)[0] == "filter":
+                filters.append(_parse_text_filter(a_text))
                 continue
             act = _parse_text_action(a_text, flow_name)
             if act.op == "set" and (act.flow in (None, flow_name)) and "rate" in act.state_dict():
@@ -574,6 +671,8 @@ def _parse_text_line(line: str, d: Dict[str, Any]) -> None:
                     "use 'when' for runtime actions"
                 )
         flow_d: Dict[str, Any] = {"name": flow_name, "match": dict(canon), "objects": objects}
+        if filters:
+            flow_d["filters"] = filters
         if scope != "stage":
             flow_d["scope"] = scope
         d["flows"].append(flow_d)

@@ -23,6 +23,7 @@ import threading
 from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from repro.core.stats import StageStats, fleet_view
+from repro.telemetry.histogram import NBUCKETS, quantile_from_counts
 from repro.telemetry.metrics import MetricRegistry, get_registry
 
 from .compile import FLEET_STAGE, CompiledPolicy
@@ -33,6 +34,53 @@ CHANNEL_FIELDS = (
     "throughput", "iops", "wait_ms", "inflight", "ops", "bytes",
     "wait_p50_ms", "wait_p95_ms", "wait_p99_ms",
 )
+
+#: extras keys carrying sparse trace-filter wait-histogram buckets — folded
+#: into percentile gauges, never published raw
+_TRACE_HIST_PREFIX = "trace.wait_hist."
+
+
+def _extras_to_samples(out: Dict[str, float], prefix: str, extras: Mapping[str, float]) -> None:
+    """Publish one channel's filter-plane ``extras`` window counters under
+    ``<prefix><key>`` and derive the control-plane-side ratios:
+
+    * ``cache.hit_rate`` = hits / (hits + misses) — **omitted** when the
+      window saw no lookups, so trigger windows freeze instead of reading a
+      phantom 0.0 from an idle tenant,
+    * ``compress.ratio`` = out_bytes / raw_bytes (omitted when idle),
+    * sparse ``trace.wait_hist.<i>`` buckets fold into
+      ``trace.wait_p{50,95,99}_ms`` (the buckets themselves are not
+      published — they are transport, not signal).
+
+    Extras are summable raw counters, so the same derivations are honest on
+    merged (sharded / fleet-view) snapshots.
+    """
+    hist: Optional[List[int]] = None
+    for k, v in extras.items():
+        if k.startswith(_TRACE_HIST_PREFIX):
+            if hist is None:
+                hist = [0] * NBUCKETS
+            try:
+                idx = int(k[len(_TRACE_HIST_PREFIX):])
+            except ValueError:
+                continue
+            if 0 <= idx < NBUCKETS:
+                hist[idx] = int(v)
+            continue
+        out[prefix + k] = v
+    hits = extras.get("cache.hits")
+    misses = extras.get("cache.misses")
+    if hits is not None or misses is not None:
+        total = (hits or 0.0) + (misses or 0.0)
+        if total > 0:
+            out[prefix + "cache.hit_rate"] = (hits or 0.0) / total
+    raw = extras.get("compress.raw_bytes")
+    if raw:
+        out[prefix + "compress.ratio"] = extras.get("compress.out_bytes", 0.0) / raw
+    if hist is not None and any(hist):
+        out[prefix + "trace.wait_p50_ms"] = quantile_from_counts(hist, 0.5)
+        out[prefix + "trace.wait_p95_ms"] = quantile_from_counts(hist, 0.95)
+        out[prefix + "trace.wait_p99_ms"] = quantile_from_counts(hist, 0.99)
 
 
 class _StatKeys:
@@ -55,7 +103,9 @@ def stats_to_samples(
     """Flatten per-stage statistics into metric gauges.
 
     Per channel: ``<stage>.<channel>.{throughput,iops,wait_ms,inflight,ops,
-    bytes,wait_p50_ms,wait_p95_ms,wait_p99_ms}``. Per stage (aggregates):
+    bytes,wait_p50_ms,wait_p95_ms,wait_p99_ms}`` plus any filter-plane
+    extras and their derived ratios (:func:`_extras_to_samples`). Per stage
+    (aggregates):
     the same fields under ``<stage>.<field>`` with ``wait_ms`` ops-weighted
     and the wait percentiles taken as the max across channels (a conservative
     tail bound — exact cross-channel percentiles are not mergeable).
@@ -86,6 +136,8 @@ def stats_to_samples(
             out[keys.wait_p50_ms] = snap.wait_p50_ms
             out[keys.wait_p95_ms] = snap.wait_p95_ms
             out[keys.wait_p99_ms] = snap.wait_p99_ms
+            if snap.extras:
+                _extras_to_samples(out, f"{stage}.{name}.", snap.extras)
             tot_ops += snap.ops
             tot_bytes += snap.bytes
             tot_tput += snap.throughput
@@ -151,6 +203,10 @@ class PolicyRuntime:
         self._key_cache: Dict[Tuple[str, Optional[str]], _StatKeys] = {}
         #: (stage, channel) entries whose export descriptors are registered
         self._described_entries: set = set()
+        #: filter-plane extras gauge keys already described (paio_filter_*)
+        self._described_extras: set = set()
+        #: cumulative filter counter keys we own (paio_filter_*_total)
+        self._filter_counter_keys: set = set()
         self._lock = threading.Lock()
 
     # -- lifecycle ---------------------------------------------------------
@@ -328,10 +384,14 @@ class PolicyRuntime:
         trigger states, policy versions) — for planes publishing into the
         shared registry that are being torn down for good."""
         with self._lock:
-            owned = self._stats_keys | self._trigger_keys | self._hist_keys
+            owned = (
+                self._stats_keys | self._trigger_keys | self._hist_keys | self._filter_counter_keys
+            )
             self._trigger_keys = set()
             self._hist_keys = set()
         self._stats_keys = set()
+        self._filter_counter_keys = set()
+        self._described_extras = set()
         for key in owned:
             self.registry.unregister(key)
         with self._lock:
@@ -394,6 +454,7 @@ class PolicyRuntime:
         if stale_keys:
             for stale in stale_keys:
                 self.registry.unregister(stale)
+                self._described_extras.discard(stale)
             # evict key-string cache entries for vanished channels too, or a
             # long-lived plane churning per-tenant channels leaks one
             # _StatKeys per channel name ever seen
@@ -410,8 +471,37 @@ class PolicyRuntime:
             for fld in CHANNEL_FIELDS:
                 self.registry.describe(getattr(sk, fld), *_export_descriptor(entry, fld))
             self._described_entries.add(entry)
+        # extras gauges (filter plane) are not covered by the _StatKeys
+        # descriptor pass: their keys have a dotted suffix
+        # (<stage>.<channel>.cache.hit_rate → >= 3 dots), which no builtin
+        # stage/channel gauge has, so the shape test is exact
+        for key in keys:
+            if key in self._described_extras or key.count(".") < 3:
+                continue
+            stage, ch, suffix = key.split(".", 2)
+            self.registry.describe(
+                key,
+                f"paio_filter_{suffix.replace('.', '_')}",
+                {"stage": stage, "channel": ch},
+            )
+            self._described_extras.add(key)
         self._stats_keys = keys
         self.registry.update_gauges(gauges)
+        # window eviction deltas additionally feed a cumulative counter —
+        # eviction *rate* is a gauge readers can miss between scrapes; the
+        # monotone total is the honest Prometheus form
+        for stage, st in all_stats.items():
+            for ch, snap in st.per_channel.items():
+                ev = snap.extras.get("cache.evictions") if snap.extras else None
+                if not ev:
+                    continue
+                ckey = f"{stage}.{ch}.cache.evictions_total"
+                if ckey not in self._filter_counter_keys:
+                    self.registry.describe(
+                        ckey, "paio_filter_cache_evictions_total", {"stage": stage, "channel": ch}
+                    )
+                    self._filter_counter_keys.add(ckey)
+                self.registry.inc(ckey, ev)
         # cumulative wait histograms: each tick merges the window's bucket
         # deltas in (exact, associative), per channel and per fleet view —
         # the exporter renders them as native _bucket/_sum/_count families
@@ -478,6 +568,11 @@ def missing_install_rules(
                 chan = channels.get(key[1])
                 oid = key[2] or DEFAULT_OBJECT_ID
                 if chan is None or oid not in (chan.get("objects") or {}):
+                    missing = True
+                    break
+            if key[0] == "filter":
+                chan = channels.get(key[1])
+                if chan is None or key[2] not in (chan.get("filters") or {}):
                     missing = True
                     break
         if missing:

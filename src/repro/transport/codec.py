@@ -26,6 +26,7 @@ from typing import Any, Dict, Tuple
 
 from repro.core.rules import DifferentiationRule, EnforcementRule, HousekeepingRule
 from repro.core.stats import StageStats, StatsSnapshot
+from repro.filters.spec import INSTALL_FILTER, FilterSpec
 from repro.telemetry.histogram import NBUCKETS
 
 
@@ -200,6 +201,10 @@ def unpack_value(payload: bytes) -> Any:
 _RULE_HSK = 0x01
 _RULE_DIF = 0x02
 _RULE_ENF = 0x03
+#: install_filter housekeeping rules in canonical FilterSpec form get their
+#: own struct-packed encoding (the spec fields flat, no generic value-codec
+#: dict for the envelope); non-canonical ones fall back to _RULE_HSK
+_RULE_FILTER = 0x04
 
 #: sentinel flag byte for Optional[str] fields
 _OPT_NONE = 0x00
@@ -223,9 +228,41 @@ def _read_opt_str(r: _Reader):
     raise TransportError(f"bad optional-string flag 0x{flag:02x}")
 
 
+def encode_filter_spec(spec: FilterSpec) -> bytes:
+    """Flat struct-packed image of a :class:`FilterSpec` (the payload of a
+    ``_RULE_FILTER`` frame, minus the tag byte)."""
+    buf = bytearray()
+    _write_str(buf, spec.name)
+    buf += _U32.pack(spec.version)
+    _write_str(buf, spec.channel)
+    _write_str(buf, spec.filter_id)
+    _write_value(buf, spec.params or {})
+    return bytes(buf)
+
+
+def decode_filter_spec(payload: bytes) -> FilterSpec:
+    r = _Reader(payload)
+    spec = FilterSpec(
+        name=r.str_(),
+        version=r.u32(),
+        channel=r.str_(),
+        filter_id=r.str_(),
+        params=_read_value(r),
+    )
+    if r.off != len(payload):
+        raise TransportError(f"{len(payload) - r.off} trailing bytes after filter spec")
+    return spec
+
+
 def encode_rule(rule) -> bytes:
     buf = bytearray()
     if isinstance(rule, HousekeepingRule):
+        if rule.op == INSTALL_FILTER:
+            spec = FilterSpec.from_rule(rule)
+            if spec.to_rule() == rule:  # canonical — lossless fast path
+                buf.append(_RULE_FILTER)
+                buf += encode_filter_spec(spec)
+                return bytes(buf)
         buf.append(_RULE_HSK)
         _write_str(buf, rule.op)
         _write_str(buf, rule.channel)
@@ -264,6 +301,8 @@ def decode_rule(payload: bytes):
         )
     if tag == _RULE_ENF:
         return EnforcementRule(channel=r.str_(), object_id=r.str_(), state=_read_value(r))
+    if tag == _RULE_FILTER:
+        return decode_filter_spec(payload[1:]).to_rule()
     raise TransportError(f"unknown rule tag 0x{tag:02x}")
 
 
@@ -312,6 +351,12 @@ def encode_stats(stats: StageStats) -> bytes:
                 buf += _HIST_PAIR.pack(i, c)
         else:
             buf.append(_HIST_ABSENT)
+        # filter-plane extras: sparse (key, f64) run — typically empty
+        extras = s.extras
+        buf += _U32.pack(len(extras))
+        for ekey, eval_ in extras.items():
+            _write_str(buf, ekey)
+            buf += _F64.pack(eval_)
     return bytes(buf)
 
 
@@ -348,6 +393,11 @@ def decode_stats(payload: bytes) -> StageStats:
                     raise TransportError(f"histogram bucket index {idx} out of range")
                 counts[idx] = c
             wait_hist = tuple(counts)
+        nextras = r.u32()
+        extras: Dict[str, float] = {}
+        for _ in range(nextras):
+            ekey = r.str_()
+            extras[ekey] = r.f64()
         per_channel[key] = StatsSnapshot(
             channel=channel,
             ops=ops,
@@ -363,6 +413,7 @@ def decode_stats(payload: bytes) -> StageStats:
             wait_p95_ms=wait_p95_ms,
             wait_p99_ms=wait_p99_ms,
             wait_hist=wait_hist,
+            extras=extras,
         )
     if r.off != len(payload):
         raise TransportError(f"{len(payload) - r.off} trailing bytes after stats")

@@ -127,12 +127,15 @@ def test_verifier_flags_dead_hysteresis():
     assert "never release" in findings[0].message
 
 
-def test_verifier_names_both_defects_over_fixture_dir():
+def test_verifier_names_all_defects_over_fixture_dir():
     findings, files = verify_paths([str(POLICY_FIXTURES)])
-    assert files == 2
+    assert files == 3
     assert sorted(f.rule for f in findings) == [
         "policy-contradiction",
         "policy-dead-hysteresis",
+        "policy-unknown-filter",
+        "policy-unknown-filter",
+        "policy-unknown-filter",
     ]
 
 

@@ -516,6 +516,68 @@ class TestStageConfigJournal:
 
 
 # --------------------------------------------------------------------------- #
+# filter installs survive kill -9 (journal restore before serving)             #
+# --------------------------------------------------------------------------- #
+def _serve_with_journal(name: str, socket_path: str, snapshot_path: str) -> None:
+    stage = Stage(name)
+    StageServer(stage, socket_path, snapshot_path=snapshot_path).start()
+    time.sleep(600)
+
+
+class TestFilterCrashRecovery:
+    def test_kill9_restores_filters_from_journal(self):
+        from repro.filters import FilterSpec
+
+        mp = multiprocessing.get_context("fork")
+        with tempfile.TemporaryDirectory() as d:
+            sock, snap = f"{d}/s.sock", f"{d}/snap.json"
+
+            def spawn():
+                if os.path.exists(sock):
+                    os.unlink(sock)  # stale socket from the killed process
+                child = mp.Process(
+                    target=_serve_with_journal, args=("s", sock, snap), daemon=True
+                )
+                child.start()
+                t0 = time.monotonic()
+                while not os.path.exists(sock):
+                    assert time.monotonic() - t0 < 10.0
+                    time.sleep(0.01)
+                return child
+
+            child = spawn()
+            handle = RemoteStageHandle(sock, timeout=2.0)
+            handle.apply_rules([
+                HousekeepingRule(op="create_channel", channel="cold"),
+                FilterSpec(name="content_cache", channel="cold", filter_id="cc",
+                           params={"capacity": 32}).to_rule(),
+                FilterSpec(name="compression", channel="cold",
+                           params={"level": 4}).to_rule(),
+            ])
+            info = handle.stage_info()
+            assert set(info["channels"]["cold"]["filters"]) == {"cc", "compression"}
+            handle.close()
+
+            child.kill()  # SIGKILL: no atexit, no snapshot flush beyond fsync'd journal
+            child.join(timeout=10.0)
+
+            child2 = spawn()
+            try:
+                handle2 = RemoteStageHandle(sock, timeout=2.0)
+                # the journal restores in the server constructor, before the
+                # socket binds: the very first request already sees the chain
+                info2 = handle2.stage_info()
+                filters = info2["channels"]["cold"]["filters"]
+                assert filters["cc"]["capacity"] == 32
+                assert filters["cc"]["name"] == "content_cache"
+                assert filters["compression"]["level"] == 4
+                handle2.close()
+            finally:
+                child2.kill()
+                child2.join(timeout=10.0)
+
+
+# --------------------------------------------------------------------------- #
 # recovery reconcile against the restored snapshot                             #
 # --------------------------------------------------------------------------- #
 POLICY_TEXT = """

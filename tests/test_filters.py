@@ -1,0 +1,658 @@
+"""repro.filters: registry semantics, channel filter chains, the versioned
+install plane (codec round-trips, journal persistence, policy lowering and
+diffing), engine-side metric derivation, and the mixed-version fleet interop
+matrix (v2 binary filter codec vs the v1 JSON fallback).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import pytest
+
+from repro.core import (
+    EnforcementRule,
+    HousekeepingRule,
+    Stage,
+    StageServer,
+    StatsSnapshot,
+)
+from repro.core.context import build_context, propagate_tenant
+from repro.core.snapshot import StageConfigJournal
+from repro.filters import (
+    FILTER_REGISTRY,
+    Filter,
+    FilterError,
+    FilterRegistry,
+    FilterSpec,
+)
+from repro.filters.builtin import CompressionFilter, ContentCacheFilter, TraceFilter
+from repro.policy import (
+    PolicyError,
+    compile_policy,
+    diff_policies,
+    infos_without_policy,
+    load_policy,
+    stats_to_samples,
+)
+from repro.transport import RemoteStageHandle
+from repro.transport.codec import (
+    decode_filter_spec,
+    decode_rule,
+    decode_stats,
+    encode_filter_spec,
+    encode_rule,
+    encode_stats,
+)
+
+MiB = float(1 << 20)
+
+
+@pytest.fixture
+def stage_dir():
+    with tempfile.TemporaryDirectory() as d:
+        yield d
+
+
+def _stage(name: str = "s") -> Stage:
+    st = Stage(name)
+    st.create_channel("cold")
+    return st
+
+
+def _payloads(n: int = 8, size: int = 4096):
+    # deterministic mixed workload: every other payload repeats
+    base = [bytes([i % 7]) * size for i in range(n)]
+    return [base[i // 2] for i in range(n)]
+
+
+# --------------------------------------------------------------------------- #
+# registry                                                                     #
+# --------------------------------------------------------------------------- #
+class TestFilterRegistry:
+    def test_builtins_are_registered(self):
+        names = FILTER_REGISTRY.names()
+        assert {"compression", "content_cache", "trace"} <= set(names)
+
+    def test_lookup_pins_zero_to_latest(self):
+        cls = FILTER_REGISTRY.lookup("content_cache", 0)
+        assert cls is ContentCacheFilter
+        assert FILTER_REGISTRY.latest("content_cache") == ContentCacheFilter.version
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(FilterError, match="unknown filter"):
+            FILTER_REGISTRY.lookup("dedup")
+
+    def test_unknown_version_raises(self):
+        with pytest.raises(FilterError, match="version"):
+            FILTER_REGISTRY.lookup("compression", 99)
+
+    def test_create_rejects_unknown_params(self):
+        with pytest.raises(FilterError, match="param"):
+            FILTER_REGISTRY.create("content_cache", 0, {"window_log": 27})
+
+    def test_create_applies_params(self):
+        flt = FILTER_REGISTRY.create("content_cache", 0, {"capacity": 4})
+        assert flt.capacity == 4
+
+    def test_versioned_registration_and_advertise(self):
+        reg = FilterRegistry()
+
+        class V1(Filter):
+            name = "shim"
+            version = 1
+
+            def __init__(self, a: int = 0) -> None:
+                self.a = a
+
+        class V2(Filter):
+            name = "shim"
+            version = 2
+
+            def __init__(self, a: int = 0, b: int = 0) -> None:
+                self.a, self.b = a, b
+
+        reg.register(V1)
+        reg.register(V2)
+        assert reg.versions("shim") == (1, 2)
+        assert reg.lookup("shim") is V2  # 0 → latest
+        assert reg.lookup("shim", 1) is V1
+        advert = reg.advertise()["shim"]
+        assert advert["latest"] == 2
+        assert set(advert["params"]) == {"a", "b"}  # latest version's signature
+
+    def test_duplicate_version_rejected(self):
+        reg = FilterRegistry()
+
+        class F(Filter):
+            name = "dup"
+            version = 1
+
+        class G(Filter):
+            name = "dup"
+            version = 1
+
+        reg.register(F)
+        reg.register(F)  # same class again: idempotent, not an error
+        with pytest.raises(FilterError, match="already registered"):
+            reg.register(G)
+
+
+# --------------------------------------------------------------------------- #
+# spec ↔ housekeeping-rule mapping                                             #
+# --------------------------------------------------------------------------- #
+class TestFilterSpec:
+    def test_rule_roundtrip(self):
+        spec = FilterSpec(
+            name="compression", version=2, channel="cold", filter_id="z", params={"level": 7}
+        )
+        rule = spec.to_rule()
+        assert rule.op == "install_filter"
+        assert rule.object_id == "z" and rule.object_kind == "compression"
+        assert FilterSpec.from_rule(rule) == spec
+
+    def test_filter_id_defaults_to_name(self):
+        spec = FilterSpec(name="trace", channel="cold")
+        assert spec.filter_id == "trace"
+        assert spec.removal_rule().op == "remove_filter"
+        assert spec.removal_rule().object_id == "trace"
+
+    def test_from_rule_rejects_wrong_op(self):
+        with pytest.raises(ValueError, match="install_filter"):
+            FilterSpec.from_rule(HousekeepingRule(op="create_channel", channel="c"))
+
+    def test_wire_roundtrip(self):
+        spec = FilterSpec(name="trace", version=1, channel="c", params={"sample_every": 10})
+        assert FilterSpec.from_wire(spec.to_wire()) == spec
+
+
+# --------------------------------------------------------------------------- #
+# channel filter chain                                                         #
+# --------------------------------------------------------------------------- #
+class TestChannelFilterChain:
+    def test_install_order_and_replace_in_place(self):
+        st = _stage()
+        ch = st.channel("cold")
+        ch.install_filter("a", ContentCacheFilter(capacity=2))
+        ch.install_filter("b", TraceFilter())
+        assert ch.filter_ids() == ["a", "b"]
+        # reinstalling "a" keeps its chain slot (no gap, no reorder)
+        ch.install_filter("a", ContentCacheFilter(capacity=9))
+        assert ch.filter_ids() == ["a", "b"]
+        assert ch.get_filter("a").capacity == 9
+        assert ch.remove_filter("a") is True
+        assert ch.remove_filter("a") is False
+        assert ch.filter_ids() == ["b"]
+
+    def test_enforce_runs_chain_and_merges_meta(self):
+        st = _stage()
+        ch = st.channel("cold")
+        ch.install_filter("cache", ContentCacheFilter(capacity=8))
+        ch.install_filter("zip", CompressionFilter(level=1))
+        ctx = build_context(request_type=1, size=4096)
+        payload = b"\x03" * 4096
+        r1 = ch.enforce(ctx, payload)
+        r2 = ch.enforce(ctx, payload)
+        assert r1.meta["cache"] == "miss" and r2.meta["cache"] == "hit"
+        # compression actually transformed the content
+        assert r2.content != payload and len(r2.content) < len(payload)
+        assert r2.meta["raw_bytes"] == 4096
+
+    def test_collect_merges_extras(self):
+        st = _stage()
+        ch = st.channel("cold")
+        ch.install_filter("cache", ContentCacheFilter(capacity=8))
+        ctx = build_context(request_type=1, size=64)
+        for p in _payloads(8, size=64):
+            ch.enforce(ctx, p)
+        snap = ch.collect()
+        assert snap.extras["cache.hits"] + snap.extras["cache.misses"] == 8.0
+        assert snap.extras["cache.hits"] == 4.0
+        # window semantics: counters drained on collect
+        assert ch.collect().extras.get("cache.hits") is None
+
+    def test_batch_matches_sequential(self):
+        payloads = _payloads(16, size=512)
+        ctxs = [build_context(request_type=1, size=512) for _ in payloads]
+
+        def run(batch: bool):
+            st = _stage()
+            ch = st.channel("cold")
+            ch.install_filter("cache", ContentCacheFilter(capacity=4))
+            ch.install_filter("zip", CompressionFilter(level=1))
+            ch.install_filter("trace", TraceFilter())
+            if batch:
+                results = ch.enforce_batch(ctxs, payloads)
+            else:
+                results = [ch.enforce(c, p) for c, p in zip(ctxs, payloads)]
+            return results, ch.collect().extras
+
+        seq_results, seq_extras = run(batch=False)
+        bat_results, bat_extras = run(batch=True)
+        assert [r.content for r in seq_results] == [r.content for r in bat_results]
+        assert [r.meta.get("cache") for r in seq_results] == [
+            r.meta.get("cache") for r in bat_results
+        ]
+        assert seq_extras == bat_extras
+
+    def test_describe_reports_filters_only_when_installed(self):
+        st = _stage()
+        ch = st.channel("cold")
+        assert "filters" not in ch.describe()
+        ch.install_filter("cache", ContentCacheFilter(capacity=4))
+        desc = ch.describe()["filters"]["cache"]
+        assert desc["name"] == "content_cache" and desc["capacity"] == 4
+
+
+# --------------------------------------------------------------------------- #
+# stage install plane (hsk path) + advertisement                               #
+# --------------------------------------------------------------------------- #
+class TestStageInstall:
+    def test_install_and_remove_via_hsk(self):
+        st = _stage()
+        spec = FilterSpec(name="content_cache", channel="cold", params={"capacity": 4})
+        assert st.hsk_rule(spec.to_rule())
+        assert st.channel("cold").filter_ids() == ["content_cache"]
+        assert st.hsk_rule(spec.removal_rule())
+        assert st.channel("cold").filter_ids() == []
+
+    def test_install_fails_closed(self):
+        st = _stage()
+        missing_chan = FilterSpec(name="trace", channel="nope")
+        assert st.hsk_rule(missing_chan.to_rule()) is False
+        unknown = FilterSpec(name="dedup", channel="cold")
+        assert st.hsk_rule(unknown.to_rule()) is False
+        bad_params = FilterSpec(name="trace", channel="cold", params={"bogus": 1})
+        assert st.hsk_rule(bad_params.to_rule()) is False
+
+    def test_stage_info_advertises_registry(self):
+        info = _stage().stage_info()
+        advert = info["filters"]
+        assert advert["compression"]["latest"] >= 1
+        assert "capacity" in advert["content_cache"]["params"]
+
+    def test_filter_state_retune_via_enf_rule(self):
+        # filters share the enf_rule surface? no — configure_filter is the
+        # explicit path; verify it applies obj_config through the channel
+        st = _stage()
+        st.hsk_rule(FilterSpec(name="content_cache", channel="cold").to_rule())
+        ch = st.channel("cold")
+        assert ch.configure_filter("content_cache", {"capacity": 2}) is True
+        assert ch.get_filter("content_cache").capacity == 2
+        assert ch.configure_filter("ghost", {}) is False
+
+
+# --------------------------------------------------------------------------- #
+# codec: v2 struct fast path + fallbacks                                       #
+# --------------------------------------------------------------------------- #
+class TestFilterCodec:
+    def test_spec_roundtrip(self):
+        spec = FilterSpec(
+            name="compression", version=3, channel="cold", filter_id="z",
+            params={"level": 7, "note": "cold-tenant"},
+        )
+        assert decode_filter_spec(encode_filter_spec(spec)) == spec
+
+    def test_canonical_rule_takes_filter_tag(self):
+        rule = FilterSpec(name="trace", channel="cold", params={"sample_every": 4}).to_rule()
+        wire = encode_rule(rule)
+        assert wire[0] == 0x04  # dedicated filter-spec tag
+        assert decode_rule(wire) == rule
+
+    def test_non_canonical_rule_falls_back_losslessly(self):
+        # a hand-built install_filter rule with extra params keys cannot be
+        # expressed by FilterSpec alone — it must ride the generic hsk tag
+        rule = HousekeepingRule(
+            op="install_filter", channel="cold", object_id="z", object_kind="trace",
+            params={"version": 1, "params": {}, "x-extension": True},
+        )
+        wire = encode_rule(rule)
+        assert wire[0] != 0x04
+        assert decode_rule(wire) == rule
+
+    def test_stats_extras_roundtrip(self):
+        snap = StatsSnapshot(
+            channel="cold", ops=4, bytes=16384, window_seconds=0.05,
+            throughput=1.0, iops=2.0,
+            extras={"cache.hits": 3.0, "trace.wait_hist.7": 2.0},
+        )
+        from repro.core.stats import StageStats
+
+        decoded = decode_stats(encode_stats(StageStats(per_channel={"cold": snap})))
+        assert decoded.per_channel["cold"].extras == snap.extras
+
+    def test_stats_empty_extras_roundtrip(self):
+        snap = StatsSnapshot(
+            channel="cold", ops=0, bytes=0, window_seconds=0.05, throughput=0.0, iops=0.0
+        )
+        from repro.core.stats import StageStats
+
+        decoded = decode_stats(encode_stats(StageStats(per_channel={"cold": snap})))
+        assert decoded.per_channel["cold"].extras == {}
+
+
+# --------------------------------------------------------------------------- #
+# journal persistence (crash-safe installs)                                    #
+# --------------------------------------------------------------------------- #
+class TestFilterJournal:
+    def test_install_restores_into_fresh_stage(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        j = StageConfigJournal(path, stage="s")
+        j.record(HousekeepingRule(op="create_channel", channel="cold"))
+        j.record(FilterSpec(name="content_cache", channel="cold",
+                            params={"capacity": 4}).to_rule())
+        fresh = _stage()
+        assert StageConfigJournal(path).restore(fresh) == 2
+        assert fresh.channel("cold").get_filter("content_cache").capacity == 4
+
+    def test_reinstall_collapses_and_remove_drops_entry(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        j = StageConfigJournal(path)
+        j.record(HousekeepingRule(op="create_channel", channel="cold"))
+        for cap in (2, 4, 8):
+            j.record(FilterSpec(name="content_cache", channel="cold",
+                                params={"capacity": cap}).to_rule())
+        assert len(j) == 2  # channel + latest install only
+        j.record(FilterSpec(name="content_cache", channel="cold").removal_rule())
+        assert [r.op for r in j.rules()] == ["create_channel"]
+
+    def test_remove_channel_cascades_filters(self, stage_dir):
+        path = os.path.join(stage_dir, "snap.json")
+        j = StageConfigJournal(path)
+        j.record(HousekeepingRule(op="create_channel", channel="cold"))
+        j.record(FilterSpec(name="trace", channel="cold").to_rule())
+        j.record(HousekeepingRule(op="remove_channel", channel="cold"))
+        assert list(j.rules()) == []
+
+
+# --------------------------------------------------------------------------- #
+# policy lowering: filters stanza → install rules                              #
+# --------------------------------------------------------------------------- #
+def _infos(st: Stage):
+    return {st.name: st.stage_info()}
+
+
+POLICY_DICT = {
+    "policy": "cold_path",
+    "stage": "s",
+    "flows": [
+        {
+            "name": "cold",
+            "match": {"tenant": "cold"},
+            "objects": [{"kind": "drl", "id": "0", "params": {"rate": "50MiB/s"}}],
+            "filters": [
+                {"name": "content_cache", "params": {"capacity": 64}},
+                {"name": "compression", "id": "zip", "params": {"level": 4}},
+            ],
+        }
+    ],
+}
+
+POLICY_TEXT = """
+policy cold_path
+stage s
+for tenant=cold as cold: limit bandwidth 50MiB/s; filter content_cache capacity=64; filter compression id=zip level=4
+"""
+
+
+class TestPolicyFilters:
+    @pytest.mark.parametrize("source", [POLICY_DICT, POLICY_TEXT], ids=["dict", "text"])
+    def test_compile_lowers_installs(self, source):
+        st = _stage()
+        compiled = compile_policy(load_policy(source), _infos(st))
+        installs = [
+            r for rules in compiled.install.values() for r in rules
+            if getattr(r, "op", None) == "install_filter"
+        ]
+        assert {r.object_id for r in installs} == {"content_cache", "zip"}
+        by_id = {r.object_id: FilterSpec.from_rule(r) for r in installs}
+        assert by_id["content_cache"].params == {"capacity": 64}
+        assert by_id["zip"].name == "compression"
+        # the flow binds to the pre-existing "cold" channel, which survives
+        # policy removal — so teardown must uninstall the policy's filters
+        teardown_filters = [
+            r for rules in compiled.teardown.values() for r in rules
+            if getattr(r, "op", None) == "remove_filter"
+        ]
+        assert {r.object_id for r in teardown_filters} == {"content_cache", "zip"}
+
+    def test_text_and_dict_forms_agree(self):
+        a = load_policy(POLICY_DICT)
+        b = load_policy(POLICY_TEXT)
+        assert a.flows[0].filters == b.flows[0].filters
+
+    def test_version_pinned_to_latest_at_compile(self):
+        st = _stage()
+        policy = load_policy(POLICY_DICT)
+        compiled = compile_policy(policy, _infos(st))
+        installs = [
+            r for rules in compiled.install.values() for r in rules
+            if getattr(r, "op", None) == "install_filter"
+        ]
+        for r in installs:
+            spec = FilterSpec.from_rule(r)
+            assert spec.version == FILTER_REGISTRY.latest(spec.name)
+
+    def test_unknown_filter_rejected_against_infos(self):
+        st = _stage()
+        bad = {
+            "policy": "p", "stage": "s",
+            "flows": [{"name": "f", "match": {"tenant": "t"},
+                       "filters": [{"name": "dedup"}]}],
+        }
+        with pytest.raises(PolicyError, match="dedup"):
+            compile_policy(load_policy(bad), _infos(st))
+
+    def test_unknown_param_rejected(self):
+        st = _stage()
+        bad = {
+            "policy": "p", "stage": "s",
+            "flows": [{"name": "f", "match": {"tenant": "t"},
+                       "filters": [{"name": "compression", "params": {"window_log": 3}}]}],
+        }
+        with pytest.raises(PolicyError, match="window_log"):
+            compile_policy(load_policy(bad), _infos(st))
+
+    def test_duplicate_slot_rejected_at_load(self):
+        bad = {
+            "policy": "p", "stage": "s",
+            "flows": [{"name": "f", "match": {"tenant": "t"},
+                       "filters": [{"name": "trace"}, {"name": "trace"}]}],
+        }
+        with pytest.raises(PolicyError, match="duplicate"):
+            load_policy(bad)
+
+    def test_foreign_filter_conflict_refused(self):
+        # the stage already runs a filter in the slot this policy wants, and
+        # no policy owns it → refuse rather than silently replace
+        st = _stage()
+        st.hsk_rule(FilterSpec(name="trace", filter_id="zip", channel="cold").to_rule())
+        policy = load_policy(POLICY_DICT)
+        # bind the flow onto the existing channel name so slots collide
+        infos = _infos(st)
+        infos["s"]["channels"]["cold"] = st.channel("cold").describe()
+        with pytest.raises(PolicyError, match="refusing to replace"):
+            compile_policy(policy, infos)
+
+    def test_diff_replaces_filter_in_place(self):
+        st = _stage()
+        old = compile_policy(load_policy(POLICY_DICT), _infos(st))
+        bumped = {
+            **POLICY_DICT,
+            "flows": [{
+                **POLICY_DICT["flows"][0],
+                "filters": [
+                    {"name": "content_cache", "params": {"capacity": 128}},
+                    {"name": "compression", "id": "zip", "params": {"level": 4}},
+                ],
+            }],
+        }
+        new = compile_policy(load_policy(bumped), _infos(st))
+        delta = diff_policies(old, new)
+        replaces = [
+            (stage, rule, undo) for stage, rule, undo in delta.ops
+            if getattr(rule, "op", None) == "install_filter"
+        ]
+        assert len(replaces) == 1
+        stage, rule, undo = replaces[0]
+        assert FilterSpec.from_rule(rule).params == {"capacity": 128}
+        # undo is the OLD install (in-place swap back), not a remove
+        assert undo.op == "install_filter"
+        assert FilterSpec.from_rule(undo).params == {"capacity": 64}
+
+    def test_diff_synthesizes_removal_when_dropped(self):
+        st = _stage()
+        old = compile_policy(load_policy(POLICY_DICT), _infos(st))
+        dropped = {
+            **POLICY_DICT,
+            "flows": [{
+                **POLICY_DICT["flows"][0],
+                "filters": [{"name": "content_cache", "params": {"capacity": 64}}],
+            }],
+        }
+        new = compile_policy(load_policy(dropped), _infos(st))
+        delta = diff_policies(old, new)
+        removals = [
+            rule for _stage, rule, _undo in delta.ops
+            if getattr(rule, "op", None) == "remove_filter"
+        ]
+        assert [r.object_id for r in removals] == ["zip"]
+
+    def test_infos_without_policy_strips_owned_filters(self):
+        from repro.core import DifferentiationRule
+
+        st = _stage()
+        compiled = compile_policy(load_policy(POLICY_DICT), _infos(st))
+        for rules in compiled.install.values():
+            for r in rules:
+                if isinstance(r, HousekeepingRule):
+                    assert st.hsk_rule(r)
+                elif isinstance(r, DifferentiationRule):
+                    assert st.dif_rule(r)
+                elif isinstance(r, EnforcementRule):
+                    assert st.enf_rule(r)
+        st.hsk_rule(FilterSpec(name="trace", filter_id="foreign", channel="cold").to_rule())
+        stripped = infos_without_policy(_infos(st), compiled)
+        filters = stripped["s"]["channels"]["cold"]["filters"]
+        # the policy's own filters vanish from the view; foreign ones survive
+        assert "content_cache" not in filters and "zip" not in filters
+        assert "foreign" in filters
+
+
+# --------------------------------------------------------------------------- #
+# engine-side derivation of filter metrics                                     #
+# --------------------------------------------------------------------------- #
+class TestFilterMetricDerivation:
+    def _samples(self, extras):
+        snap = StatsSnapshot(
+            channel="cold", ops=1, bytes=1, window_seconds=0.05,
+            throughput=1.0, iops=1.0, extras=extras,
+        )
+        from repro.core.stats import StageStats
+
+        return stats_to_samples({"s": StageStats(per_channel={"cold": snap})})
+
+    def test_hit_rate_and_ratio_derived(self):
+        out = self._samples({
+            "cache.hits": 3.0, "cache.misses": 1.0,
+            "compress.raw_bytes": 1000.0, "compress.out_bytes": 250.0,
+        })
+        assert out["s.cold.cache.hit_rate"] == pytest.approx(0.75)
+        assert out["s.cold.compress.ratio"] == pytest.approx(0.25)
+        # raw counters still published for triggers that want them
+        assert out["s.cold.cache.hits"] == 3.0
+
+    def test_idle_window_omits_hit_rate(self):
+        # zero traffic must NOT publish hit_rate=0 — trigger windows would
+        # read an idle tenant as "0% hit rate" and fire spuriously
+        out = self._samples({"cache.hits": 0.0, "cache.misses": 0.0})
+        assert "s.cold.cache.hit_rate" not in out
+
+    def test_trace_hist_folds_to_percentiles(self):
+        extras = {"trace.sampled": 100.0, "trace.wait_hist.4": 90.0, "trace.wait_hist.20": 10.0}
+        out = self._samples(extras)
+        assert "s.cold.trace.wait_p95_ms" in out
+        assert "s.cold.trace.wait_p50_ms" in out
+        # sparse buckets are folded, never published raw
+        assert not any(".wait_hist." in k for k in out)
+
+
+# --------------------------------------------------------------------------- #
+# mixed-version interop: filter installs across protocol versions              #
+# --------------------------------------------------------------------------- #
+class TestFilterInterop:
+    @pytest.mark.parametrize(
+        "client_protocol,server_max,expect_proto",
+        [
+            ("auto", 2, 2),   # v2 × v2 → binary filter-spec tag on the wire
+            ("auto", 1, 1),   # modern client, old stage → JSON fallback
+            ("json", 2, 1),   # old client, modern stage → JSON served
+        ],
+    )
+    def test_install_matrix_lossless(self, stage_dir, client_protocol, server_max, expect_proto):
+        stage = _stage()
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, max_protocol=server_max).start()
+        try:
+            handle = RemoteStageHandle(path, protocol=client_protocol)
+            try:
+                assert handle.proto == expect_proto
+                spec = FilterSpec(
+                    name="content_cache", version=1, channel="cold",
+                    filter_id="cc", params={"capacity": 32},
+                )
+                assert handle.hsk_rule(spec.to_rule())
+                flt = stage.channel("cold").get_filter("cc")
+                # lossless across either protocol: params and version intact
+                assert flt is not None and flt.capacity == 32
+                info = handle.stage_info()
+                assert "content_cache" in info["filters"]
+                assert info["channels"]["cold"]["filters"]["cc"]["capacity"] == 32
+                assert handle.hsk_rule(spec.removal_rule())
+                assert stage.channel("cold").filter_ids() == []
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+    def test_unknown_filter_fails_loudly_not_silently(self, stage_dir):
+        # a stage that lacks the filter rejects the install with False — the
+        # caller knows, rather than the rule being dropped on the floor
+        stage = _stage()
+        path = os.path.join(stage_dir, "s.sock")
+        server = StageServer(stage, path, max_protocol=1).start()
+        try:
+            handle = RemoteStageHandle(path, protocol="auto")
+            try:
+                bogus = FilterSpec(name="dedup", channel="cold")
+                assert handle.hsk_rule(bogus.to_rule()) is False
+            finally:
+                handle.close()
+        finally:
+            server.stop()
+
+    def test_extras_survive_both_collect_protocols(self, stage_dir):
+        for proto in ("binary", "json"):
+            stage = _stage()
+            stage.hsk_rule(
+                FilterSpec(name="content_cache", channel="cold",
+                           params={"capacity": 8}).to_rule()
+            )
+            ch = stage.channel("cold")
+            with propagate_tenant("cold"):
+                ctx = build_context(request_type=1, size=64)
+            for p in _payloads(8, size=64):
+                ch.enforce(ctx, p)
+            path = os.path.join(stage_dir, f"{proto}.sock")
+            server = StageServer(stage, path).start()
+            try:
+                handle = RemoteStageHandle(path, protocol=proto)
+                try:
+                    stats = handle.collect()
+                    extras = stats.per_channel["cold"].extras
+                    assert extras["cache.hits"] == 4.0
+                    assert extras["cache.misses"] == 4.0
+                finally:
+                    handle.close()
+            finally:
+                server.stop()
